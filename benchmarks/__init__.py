@@ -1,0 +1,14 @@
+"""Benchmark harness — one module per paper table + the roofline reporter.
+
+    table3_cv            Tab. 3  CV accuracy × data heterogeneity (α sweep)
+    table4_nlp           Tab. 4  NLP fine-tuning accuracy
+    table5_participation Tab. 5  participation-ratio sweep (C)
+    table6_rounds        Tab. 6  accuracy at communication-round checkpoints
+    table7_buffer        Tab. 7/8 buffer-length (M) ablation
+    table9_losstype      Tab. 9  KL vs MSE regularizer
+    kernel_bench         kernel HBM-traffic + wall-time microbench
+    roofline             §Roofline term table from dry-run JSON
+
+``python -m benchmarks.run`` executes the fast preset of every table and
+prints ``name,us_per_call,derived`` CSV (plus per-table accuracy CSVs).
+"""

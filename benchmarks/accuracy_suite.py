@@ -1,0 +1,83 @@
+"""Right-sized accuracy suite: fills every paper-table section of
+EXPERIMENTS.md in one pass, prioritizing the α=0.1 (strong non-IID)
+comparisons where the paper's claims live.  Histories are reused so the
+round-trajectory table costs nothing extra."""
+import dataclasses
+import json
+
+import numpy as np
+
+from benchmarks.common import make_algo
+from repro.configs.paper import CIFAR10, SST5, scaled
+from repro.core import algorithms, fl_loop
+
+METHODS = ["fedavg", "fedprox", "moon", "feddistill+", "fedgen",
+           "fedgkd", "fedgkd-vote", "fedgkd+"]
+
+
+def main():
+    out = {}
+    # --- Table 3 core: CIFAR-like, α=0.1, all 8 methods ------------------
+    task = scaled(CIFAR10, 0.05, rounds=8, local_epochs=2)
+    data01 = fl_loop.make_federated_data(task, alpha=0.1, seed=0, n_test=400)
+    rows = []
+    for m in METHODS:
+        h = fl_loop.run_federated(task, make_algo(m, task), data01, seed=0)
+        rows.append({"method": m, "alpha": 0.1, "best": h.best_acc,
+                     "final": h.final_acc, "local": h.local_model_acc,
+                     "history": h.accs()})
+        print(f"t3 a0.1 {m:12s} best={h.best_acc:.4f} final={h.final_acc:.4f} "
+              f"local={h.local_model_acc:.4f}", flush=True)
+    out["table3_alpha01"] = rows
+
+    # --- Table 5: participation C in {0.1, 0.4}, fedavg vs fedgkd ---------
+    rows = []
+    for c in (0.1, 0.4):
+        t5 = dataclasses.replace(task, participation=c)
+        d5 = fl_loop.make_federated_data(t5, alpha=0.5, seed=0, n_test=400)
+        for m in ("fedavg", "fedgkd"):
+            h = fl_loop.run_federated(t5, make_algo(m, t5), d5, seed=0)
+            rows.append({"method": m, "C": c, "best": h.best_acc,
+                         "final": h.final_acc})
+            print(f"t5 C={c} {m:8s} best={h.best_acc:.4f}", flush=True)
+    out["table5"] = rows
+
+    # --- Table 7/8: buffer M in {1,5} ------------------------------------
+    rows = []
+    for m_buf in (1, 5):
+        for m in ("fedgkd", "fedgkd-vote"):
+            h = fl_loop.run_federated(task, make_algo(m, task, buffer_m=m_buf),
+                                      data01, seed=0)
+            rows.append({"method": m, "M": m_buf, "best": h.best_acc,
+                         "final": h.final_acc})
+            print(f"t7 M={m_buf} {m:12s} best={h.best_acc:.4f}", flush=True)
+    out["table7"] = rows
+
+    # --- Table 9: none/mse/kl --------------------------------------------
+    rows = []
+    for lt in ("none", "mse", "kl"):
+        algo = (algorithms.make("fedavg") if lt == "none" else
+                algorithms.make("fedgkd", gamma=task.gamma, buffer_m=1,
+                                loss_type=lt))
+        h = fl_loop.run_federated(task, algo, data01, seed=0)
+        rows.append({"loss": lt, "best": h.best_acc, "final": h.final_acc})
+        print(f"t9 {lt:5s} best={h.best_acc:.4f}", flush=True)
+    out["table9"] = rows
+
+    # --- Table 4: SST5-like, 4 methods ------------------------------------
+    t4 = scaled(SST5, 0.3, rounds=6, local_epochs=2)
+    d4 = fl_loop.make_federated_data(t4, alpha=0.1, seed=0, n_test=300)
+    rows = []
+    for m in ("fedavg", "fedprox", "fedgkd", "fedgkd-vote"):
+        h = fl_loop.run_federated(t4, make_algo(m, t4), d4, seed=0)
+        rows.append({"method": m, "best": h.best_acc, "final": h.final_acc})
+        print(f"t4 {m:12s} best={h.best_acc:.4f}", flush=True)
+    out["table4"] = rows
+
+    with open("results/accuracy_suite.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("WROTE results/accuracy_suite.json")
+
+
+if __name__ == "__main__":
+    main()

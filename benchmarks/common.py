@@ -1,0 +1,78 @@
+"""Shared benchmark harness: run a set of FL algorithms on a task and report
+mean±std over trials (the paper reports 3 trials; presets below default to
+fewer for CPU budget — pass --trials to match)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.paper import PaperTask, scaled
+from repro.core import algorithms, fl_loop
+
+# paper hyper-parameters per method (Section 5.1 "Parameter Setting")
+def make_algo(name: str, task: PaperTask, *, buffer_m: int | None = None,
+              loss_type: str = "kl"):
+    gamma = task.gamma
+    m = buffer_m if buffer_m is not None else task.buffer_m
+    mu_prox = 0.01 if task.name == "cifar10" else 0.001
+    mu_moon = {"cifar10": 5.0, "cifar100": 5.0, "tiny-imagenet": 1.0}.get(
+        task.name, 0.1)
+    table = {
+        "fedavg": lambda: algorithms.make("fedavg"),
+        "fedprox": lambda: algorithms.make("fedprox", mu=mu_prox),
+        "moon": lambda: algorithms.make("moon", mu=mu_moon, tau=0.5),
+        "feddistill+": lambda: algorithms.make("feddistill+", beta=0.1),
+        "fedgen": lambda: algorithms.make("fedgen", alpha=1.0, gen_steps=20),
+        "fedgkd": lambda: algorithms.make("fedgkd", gamma=gamma, buffer_m=m,
+                                          loss_type=loss_type),
+        "fedgkd-vote": lambda: algorithms.make("fedgkd-vote", gamma=gamma,
+                                               buffer_m=m),
+        "fedgkd+": lambda: algorithms.make("fedgkd+", gamma=gamma, buffer_m=m),
+    }
+    return table[name]()
+
+
+def run_methods(task: PaperTask, methods: list[str], alphas: list[float], *,
+                trials: int = 1, n_test: int = 400, scale: float = 0.04,
+                rounds: int | None = None, local_epochs: int | None = None,
+                max_batches: int | None = None, width: int = 16,
+                buffer_m: int | None = None, verbose: bool = False):
+    """Returns rows: dicts with method, alpha, best, final, std, seconds."""
+    t = scaled(task, scale, rounds=rounds, local_epochs=local_epochs)
+    rows = []
+    for alpha in alphas:
+        datas = [fl_loop.make_federated_data(t, alpha=alpha, seed=s,
+                                             n_test=n_test)
+                 for s in range(trials)]
+        for name in methods:
+            best, final, secs = [], [], []
+            for s in range(trials):
+                algo = make_algo(name, t, buffer_m=buffer_m)
+                t0 = time.time()
+                h = fl_loop.run_federated(t, algo, datas[s], seed=s,
+                                          max_batches_per_client=max_batches,
+                                          verbose=verbose)
+                secs.append(time.time() - t0)
+                best.append(h.best_acc)
+                final.append(h.final_acc)
+            rows.append({
+                "task": t.name, "method": name, "alpha": alpha,
+                "best_mean": float(np.mean(best)), "best_std": float(np.std(best)),
+                "final_mean": float(np.mean(final)),
+                "final_std": float(np.std(final)),
+                "seconds": float(np.mean(secs)),
+                "history": h.accs(),
+            })
+            print(f"  {t.name} α={alpha} {name:12s} "
+                  f"best={np.mean(best):.4f}±{np.std(best):.4f} "
+                  f"final={np.mean(final):.4f} ({np.mean(secs):.0f}s)",
+                  flush=True)
+    return rows
+
+
+def csv_rows(rows: list[dict], keys: list[str]) -> str:
+    out = [",".join(keys)]
+    for r in rows:
+        out.append(",".join(str(r.get(k, "")) for k in keys))
+    return "\n".join(out)

@@ -1,0 +1,66 @@
+"""Theorem 3 sanity: FedGKD should drive min_t ‖∇f(w_t)‖ down ~ O(1/T).
+
+We track the GLOBAL objective's gradient norm at the server model after each
+round (computable exactly on the small synthetic task: f = Σ p_k F_k) and
+report the running minimum — the quantity Theorem 3 bounds.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper import CIFAR10, scaled
+from repro.core import algorithms, fl_loop
+from repro.core.distillation import cross_entropy
+from repro.core.modelzoo import make_model
+from repro.optim import global_norm
+
+
+def global_grad_norm(model, params, data) -> float:
+    """‖∇ Σ_k (n_k/n) F_k(w)‖ over all client data."""
+    def f(p):
+        total, n = 0.0, 0
+        for c in data.clients:
+            logits = model.apply(p, jnp.asarray(c.x))
+            total = total + cross_entropy(logits, jnp.asarray(c.y)) * c.n
+            n += c.n
+        return total / n
+    return float(global_norm(jax.grad(f)(params)))
+
+
+def run(rounds: int = 8, scale: float = 0.02, alpha: float = 0.1,
+        seed: int = 0):
+    task = scaled(CIFAR10, scale, rounds=1, local_epochs=2)
+    data = fl_loop.make_federated_data(task, alpha=alpha, seed=seed,
+                                       n_test=200)
+    rows = []
+    for name in ("fedavg", "fedgkd"):
+        algo = (algorithms.make("fedgkd", gamma=0.2, buffer_m=3)
+                if name == "fedgkd" else algorithms.make(name))
+        norms: list[float] = []
+
+        def cb(rnd, server, model):
+            norms.append(global_grad_norm(model, server["global"], data))
+
+        fl_loop.run_federated(task, algo, data, seed=seed, rounds=rounds,
+                              round_callback=cb)
+        run_min = [min(norms[: i + 1]) for i in range(len(norms))]
+        rows.append({"method": name, "grad_norms": norms,
+                     "running_min": run_min})
+        print(f"{name}: grad-norm running min "
+              f"{' -> '.join(f'{x:.3f}' for x in run_min)}", flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    args = ap.parse_args()
+    run(rounds=args.rounds)
+
+
+if __name__ == "__main__":
+    main()

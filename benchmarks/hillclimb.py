@@ -1,0 +1,112 @@
+"""§Perf hillclimb driver: run the iteration ladder for the three selected
+(arch × shape) pairs and dump roofline terms per variant.
+
+Pairs (selection rationale in EXPERIMENTS.md §Perf):
+  A mixtral-8x7b   × train_4k    worst useful-flops ratio (0.04)
+  B deepseek-v3-671b × train_4k  worst memory term + paper-representative
+  C llava-next-34b × prefill_32k most collective-bound
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair A --out results/perf_A.jsonl
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+
+def variants_for(pair: str):
+    from repro.configs import get_config
+    if pair == "A":
+        arch, shape = "mixtral-8x7b", "train_4k"
+        moe = get_config(arch).moe
+        con = moe._replace(dp_axis="data", ep_axis="model")
+        return arch, shape, [
+            ("A0-fedavg-step", dict(kd_mode="none")),
+            ("A1-paper-faithful", dict(kd_mode="teacher")),
+            ("A2-moe-shard-constraints", dict(kd_mode="teacher",
+                                              extra_cfg={"moe": con})),
+            ("A3-+group2048", dict(kd_mode="teacher", extra_cfg={
+                "moe": con._replace(group_size=2048), "moe_group_size": 2048})),
+            ("A4-+cap1.0", dict(kd_mode="teacher", extra_cfg={
+                "moe": con._replace(group_size=2048, capacity_factor=1.0),
+                "moe_group_size": 2048})),
+            ("A5-beyond-cached-topk", dict(kd_mode="cached_topk", extra_cfg={
+                "moe": con._replace(group_size=2048, capacity_factor=1.0),
+                "moe_group_size": 2048})),
+            ("A6-+sp-attn+sp-residual", dict(kd_mode="cached_topk", extra_cfg={
+                "moe": con._replace(group_size=2048, capacity_factor=1.0),
+                "moe_group_size": 2048,
+                "attn_dp_axis": "data", "attn_sp_axis": "model",
+                "residual_dp_axis": "data", "residual_sp_axis": "model"})),
+        ]
+    if pair == "B":
+        arch, shape = "deepseek-v3-671b", "train_4k"
+        moe = get_config(arch).moe
+        con = moe._replace(dp_axis="data", ep_axis="model")
+        return arch, shape, [
+            ("B0-fedavg-step", dict(kd_mode="none")),
+            ("B1-paper-faithful", dict(kd_mode="teacher")),
+            ("B2-moe-shard-constraints", dict(kd_mode="teacher",
+                                              extra_cfg={"moe": con})),
+            ("B3-+group1024", dict(kd_mode="teacher", extra_cfg={
+                "moe": con._replace(group_size=1024), "moe_group_size": 1024})),
+            ("B4-beyond-cached-topk", dict(kd_mode="cached_topk", extra_cfg={
+                "moe": con._replace(group_size=1024), "moe_group_size": 1024})),
+            ("B5-+sp-residual", dict(kd_mode="cached_topk", extra_cfg={
+                "moe": con._replace(group_size=1024), "moe_group_size": 1024,
+                "residual_dp_axis": "data", "residual_sp_axis": "model"})),
+        ]
+    if pair == "C":
+        arch, shape = "llava-next-34b", "prefill_32k"
+        sp = {"attn_dp_axis": "data", "attn_sp_axis": "model"}
+        return arch, shape, [
+            ("C0-baseline-full-logits", dict(kd_mode="none")),
+            ("C1-last-token-logits", dict(kd_mode="none",
+                                          prefill_last_only=True)),
+            ("C2-seq-parallel-attn", dict(kd_mode="none", extra_cfg=dict(sp))),
+            ("C3-sp-attn+last-token", dict(kd_mode="none",
+                                           extra_cfg=dict(sp),
+                                           prefill_last_only=True)),
+            ("C4-+megatron-sp-residual", dict(
+                kd_mode="none", prefill_last_only=True,
+                extra_cfg=dict(sp, residual_dp_axis="data",
+                               residual_sp_axis="model"))),
+        ]
+    raise ValueError(pair)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=("A", "B", "C"))
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--only", default=None, help="run a single variant name")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun_lib
+
+    arch, shape, variants = variants_for(args.pair)
+    rows = []
+    for name, kw in variants:
+        if args.only and name != args.only:
+            continue
+        r = dryrun_lib.run_dryrun(arch, shape, probe=True, **kw)
+        row = r.to_json()
+        row["variant"] = name
+        rows.append(row)
+        rep = r.report or {}
+        print(f"{name:26s} ok={r.ok} compute={rep.get('compute_s', 0):.3f}s "
+              f"memory={rep.get('memory_s', 0):.3f}s "
+              f"collective={rep.get('collective_s', 0):.3f}s "
+              f"dominant={rep.get('dominant', '-')} "
+              f"useful={rep.get('useful_flops_ratio', 0):.3f} "
+              f"err={r.error[:120]}", flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "a") as f:
+            for row in rows:
+                f.write(json.dumps(row) + "\n")
+
+
+if __name__ == "__main__":
+    main()

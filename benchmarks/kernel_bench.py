@@ -1,0 +1,74 @@
+"""Kernel microbench: wall-time of the jnp reference paths (the CPU-hosted
+execution path) + analytic HBM-traffic savings of the Pallas kernels at the
+assigned architectures' real dimensions.
+
+Wall-clock here is CPU (interpret mode is not representative of TPU); the
+derived column is the kernel's HBM byte ratio vs the reference — the
+quantity that governs the TPU memory-roofline term.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.kd_kl import ref as kd_ref
+from repro.models import ssm
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def kd_kl_traffic_ratio(t: int, v: int) -> float:
+    """ref: read lt+ls, write p_t & two log-softmaxes (≥3 extra tensors).
+    kernel: read lt+ls once.  ratio = kernel/ref bytes."""
+    ref_bytes = (2 + 3) * t * v * 4
+    kern_bytes = 2 * t * v * 4
+    return kern_bytes / ref_bytes
+
+
+def run(preset: str = "fast"):
+    rows = []
+    sizes = {"fast": [(256, 32_000)], "medium": [(256, 32_000), (512, 129_280)],
+             "full": [(256, 32_000), (512, 129_280), (1024, 256_206)]}[preset]
+    for t, v in sizes:
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        lt = jax.random.normal(k1, (t, v))
+        ls = jax.random.normal(k2, (t, v))
+        f = jax.jit(lambda a, b: jnp.mean(kd_ref.kd_kl_rowwise(a, b)))
+        us = _time(f, lt, ls)
+        rows.append({"name": f"kd_kl_ref_T{t}_V{v}", "us_per_call": us,
+                     "derived": f"traffic_ratio={kd_kl_traffic_ratio(t, v):.3f}"})
+
+    # SSD chunked scan (the Mamba2 hot path) at mamba2-2.7b head geometry
+    for l in {"fast": [512], "medium": [512, 2048], "full": [512, 2048, 8192]}[preset]:
+        b, h, p, g, n = 1, 8, 64, 1, 128
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        x = jax.random.normal(ks[0], (b, l, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        B = jax.random.normal(ks[3], (b, l, g, n))
+        C = jax.random.normal(ks[4], (b, l, g, n))
+        f = jax.jit(lambda *a: ssm.ssd_chunked(*a, chunk=256)[0])
+        us = _time(f, x, dt, A, B, C)
+        seq_f = jax.jit(lambda *a: ssm.ssd_reference(*a))
+        us_seq = _time(seq_f, x, dt, A, B, C, iters=1)
+        rows.append({"name": f"ssd_chunked_L{l}", "us_per_call": us,
+                     "derived": f"seq_scan_us={us_seq:.0f}"})
+    return rows
+
+
+def main():
+    for r in run("medium"):
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""§Roofline reporter: turn dry-run JSON lines into the per-(arch × shape)
+three-term roofline table (compute / memory / collective seconds, dominant
+term, MODEL_FLOPS ratio).
+
+    PYTHONPATH=src python -m benchmarks.roofline --in results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+COLS = ("arch", "shape", "mesh", "kd", "compute_s", "memory_s",
+        "collective_s", "dominant", "useful", "fit")
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                rows.append(json.loads(line))
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    out = ["| " + " | ".join(COLS) + " |",
+           "|" + "|".join(["---"] * len(COLS)) + "|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r.get('kd_mode','-')} | — | — | — | "
+                       f"{r.get('error','')[:40]} | — | — |")
+            continue
+        rep = r.get("report") or {}
+        mem = r.get("memory", {})
+        # per-device live bytes ≈ args + temps (outputs alias args on donation)
+        live = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                - mem.get("alias_size_in_bytes", 0))
+        fits = "Y" if live < 16 << 30 else f"N({live/2**30:.0f}G)"
+        out.append(
+            "| {arch} | {shape} | {mesh} | {kd} | {c:.4f} | {m:.4f} | "
+            "{x:.4f} | {dom} | {u:.2f} | {fit} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                kd=r.get("kd_mode", "-"), c=rep.get("compute_s", 0),
+                m=rep.get("memory_s", 0), x=rep.get("collective_s", 0),
+                dom=rep.get("dominant", "-"),
+                u=rep.get("useful_flops_ratio", 0), fit=fits))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", required=True)
+    args = ap.parse_args()
+    print(format_table(load(args.inp)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Main benchmark entry: runs the fast preset of every paper-table bench and
+prints ``name,us_per_call,derived`` CSV (deliverable (d)).
+
+    PYTHONPATH=src python -m benchmarks.run [--preset fast|medium|full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="fast",
+                    choices=("fast", "medium", "full"))
+    args = ap.parse_args()
+    preset = args.preset
+
+    from benchmarks import (kernel_bench, table3_cv, table4_nlp,
+                            table5_participation, table6_rounds,
+                            table7_buffer, table9_losstype)
+
+    rows = []
+
+    def bench(name, fn):
+        t0 = time.time()
+        out = fn(preset)
+        us = (time.time() - t0) * 1e6
+        return name, us, out
+
+    print("name,us_per_call,derived")
+    for name, runner, derive in [
+        ("table3_cv", table3_cv.run,
+         lambda rs: "fedgkd_best=" + "/".join(
+             f"{r['best_mean']:.3f}" for r in rs if r["method"] == "fedgkd")),
+        ("table4_nlp", table4_nlp.run,
+         lambda rs: "fedgkd_best=" + "/".join(
+             f"{r['best_mean']:.3f}" for r in rs if r["method"] == "fedgkd")),
+        ("table5_participation", table5_participation.run,
+         lambda rs: "n_rows=%d" % len(rs)),
+        ("table6_rounds", table6_rounds.run,
+         lambda rs: "final_accs=" + "/".join(
+             f"{r['acc']:.3f}" for r in rs if r["round"] == max(
+                 x["round"] for x in rs))),
+        ("table7_buffer", table7_buffer.run,
+         lambda rs: "n_rows=%d" % len(rs)),
+        ("table9_losstype", table9_losstype.run,
+         lambda rs: "best=" + "/".join(
+             f"{r['loss_type']}:{r['best']:.3f}" for r in rs)),
+    ]:
+        name_, us, out = bench(name, runner)
+        print(f"{name_},{us:.0f},{derive(out)}", flush=True)
+
+    for r in kernel_bench.run(preset):
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 4: NLP classification (AG-News / SST-5 stand-ins, α=0.1)."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import csv_rows, run_methods
+from repro.configs.paper import AG_NEWS, SST5
+
+METHODS = ["fedavg", "fedprox", "moon", "feddistill+", "fedgen",
+           "fedgkd", "fedgkd-vote", "fedgkd+"]
+
+
+def run(preset: str = "fast"):
+    cfgs = {
+        "fast": dict(scale=0.05, rounds=2, trials=1, tasks=[SST5],
+                     methods=["fedavg", "fedgkd"]),
+        "medium": dict(scale=0.2, rounds=6, trials=2, tasks=[SST5],
+                       methods=METHODS),
+        "full": dict(scale=0.5, rounds=10, trials=3, tasks=[AG_NEWS, SST5],
+                     methods=METHODS),
+    }[preset]
+    rows = []
+    for task in cfgs["tasks"]:
+        rows += run_methods(task, cfgs["methods"], [0.1],
+                            trials=cfgs["trials"], scale=cfgs["scale"],
+                            rounds=cfgs["rounds"])
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="medium",
+                    choices=("fast", "medium", "full"))
+    args = ap.parse_args()
+    rows = run(args.preset)
+    print(csv_rows(rows, ["task", "method", "alpha", "best_mean", "best_std",
+                          "final_mean", "seconds"]))
+
+
+if __name__ == "__main__":
+    main()

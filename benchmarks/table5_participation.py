@@ -1,0 +1,45 @@
+"""Paper Table 5: participation-ratio sweep (C ∈ {0.1..0.4}, α=0.5)."""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from benchmarks.common import csv_rows, make_algo, run_methods
+from repro.configs.paper import CIFAR10
+
+
+def run(preset: str = "fast"):
+    cfgs = {
+        "fast": dict(scale=0.02, rounds=3, trials=1, cs=[0.1, 0.4],
+                     methods=["fedavg", "fedgkd"]),
+        "medium": dict(scale=0.05, rounds=8, trials=1,
+                       cs=[0.1, 0.2, 0.3, 0.4],
+                       methods=["fedavg", "fedprox", "fedgkd", "fedgkd-vote"]),
+        "full": dict(scale=0.1, rounds=15, trials=3, cs=[0.1, 0.2, 0.3, 0.4],
+                     methods=["fedavg", "fedprox", "moon", "feddistill+",
+                              "fedgen", "fedgkd", "fedgkd-vote", "fedgkd+"]),
+    }[preset]
+    rows = []
+    for c in cfgs["cs"]:
+        task = dataclasses.replace(CIFAR10, participation=c)
+        out = run_methods(task, cfgs["methods"], [0.5], trials=cfgs["trials"],
+                          scale=cfgs["scale"], rounds=cfgs["rounds"],
+                          local_epochs=2)
+        for r in out:
+            r["participation"] = c
+        rows += out
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="medium",
+                    choices=("fast", "medium", "full"))
+    args = ap.parse_args()
+    rows = run(args.preset)
+    print(csv_rows(rows, ["method", "participation", "best_mean", "final_mean",
+                          "seconds"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table 6 / Fig. 4: accuracy trajectory over communication rounds
+(robustness: FedGKD keeps improving where others oscillate)."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import csv_rows, run_methods
+from repro.configs.paper import CIFAR10
+
+
+def run(preset: str = "fast"):
+    cfgs = {
+        "fast": dict(scale=0.02, rounds=4, methods=["fedavg", "fedgkd"]),
+        "medium": dict(scale=0.05, rounds=12,
+                       methods=["fedavg", "fedprox", "fedgkd", "fedgkd-vote"]),
+        "full": dict(scale=0.1, rounds=25,
+                     methods=["fedavg", "fedprox", "moon", "feddistill+",
+                              "fedgen", "fedgkd", "fedgkd-vote", "fedgkd+"]),
+    }[preset]
+    rows = run_methods(CIFAR10, cfgs["methods"], [0.1], trials=1,
+                       scale=cfgs["scale"], rounds=cfgs["rounds"],
+                       local_epochs=2)
+    # checkpoints at 25/50/75/100% of the budget
+    out = []
+    for r in rows:
+        hist = r["history"]
+        n = len(hist)
+        for frac in (0.25, 0.5, 0.75, 1.0):
+            idx = max(0, int(round(frac * n)) - 1)
+            out.append({"method": r["method"], "round": idx + 1,
+                        "acc": hist[idx]})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="medium",
+                    choices=("fast", "medium", "full"))
+    args = ap.parse_args()
+    rows = run(args.preset)
+    print(csv_rows(rows, ["method", "round", "acc"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Tables 7-8: buffer-length ablation (M ∈ {1, 3, 5, 7}) for FedGKD
+and FedGKD-VOTE."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import csv_rows, run_methods
+from repro.configs.paper import CIFAR10
+
+
+def run(preset: str = "fast"):
+    cfgs = {
+        "fast": dict(scale=0.02, rounds=3, ms=[1, 3], methods=["fedgkd"]),
+        "medium": dict(scale=0.05, rounds=10, ms=[1, 3, 5, 7],
+                       methods=["fedgkd", "fedgkd-vote"]),
+        "full": dict(scale=0.1, rounds=20, ms=[1, 3, 5, 7],
+                     methods=["fedgkd", "fedgkd-vote"]),
+    }[preset]
+    rows = []
+    for m in cfgs["ms"]:
+        out = run_methods(CIFAR10, cfgs["methods"], [0.1], trials=1,
+                          scale=cfgs["scale"], rounds=cfgs["rounds"],
+                          local_epochs=2, buffer_m=m)
+        for r in out:
+            r["buffer_m"] = m
+        rows += out
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="medium",
+                    choices=("fast", "medium", "full"))
+    args = ap.parse_args()
+    rows = run(args.preset)
+    print(csv_rows(rows, ["method", "buffer_m", "best_mean", "final_mean"]))
+
+
+if __name__ == "__main__":
+    main()

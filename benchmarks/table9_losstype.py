@@ -1,0 +1,47 @@
+"""Paper Table 9: regularizer ablation — None (FedAvg) vs MSE vs KL, M=1."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import csv_rows, make_algo
+from repro.configs.paper import CIFAR10, scaled
+from repro.core import algorithms, fl_loop
+
+
+def run(preset: str = "fast"):
+    cfgs = {
+        "fast": dict(scale=0.02, rounds=3, epochs=1),
+        "medium": dict(scale=0.05, rounds=10, epochs=2),
+        "full": dict(scale=0.1, rounds=20, epochs=3),
+    }[preset]
+    task = scaled(CIFAR10, cfgs["scale"], rounds=cfgs["rounds"],
+                  local_epochs=cfgs["epochs"])
+    data = fl_loop.make_federated_data(task, alpha=0.1, seed=0, n_test=400)
+    rows = []
+    for loss_type in ("none", "mse", "kl"):
+        if loss_type == "none":
+            algo = algorithms.make("fedavg")
+        else:
+            algo = algorithms.make("fedgkd", gamma=task.gamma, buffer_m=1,
+                                   loss_type=loss_type)
+        h = fl_loop.run_federated(task, algo, data, seed=0)
+        rows.append({"loss_type": loss_type, "best": h.best_acc,
+                     "final": h.final_acc})
+        print(f"  loss={loss_type:5s} best={h.best_acc:.4f} "
+              f"final={h.final_acc:.4f}", flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="medium",
+                    choices=("fast", "medium", "full"))
+    args = ap.parse_args()
+    rows = run(args.preset)
+    print(csv_rows(rows, ["loss_type", "best", "final"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: FedGKD vs FedAvg on non-IID synthetic CIFAR-10 (ResNet-8).
+
+The 60-second tour of the public API: make a task, Dirichlet-partition data
+across 20 clients, run both algorithms, compare accuracy curves.
+
+    PYTHONPATH=src python examples/quickstart.py [--rounds 8] [--alpha 0.1]
+"""
+import argparse
+
+from repro.configs.paper import CIFAR10, scaled
+from repro.core import algorithms, fl_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--alpha", type=float, default=0.1,
+                    help="Dirichlet concentration (smaller = more non-IID)")
+    ap.add_argument("--scale", type=float, default=0.05)
+    args = ap.parse_args()
+
+    # the paper's CIFAR-10 task, scaled for CPU
+    task = scaled(CIFAR10, scale=args.scale, rounds=args.rounds,
+                  local_epochs=2)
+    data = fl_loop.make_federated_data(task, alpha=args.alpha, seed=0,
+                                       n_test=500)
+    print(f"{task.n_clients} clients, {data.total_n} train examples, "
+          f"α={args.alpha}")
+    print("per-client label counts (first 5 clients):")
+    print(data.label_matrix[:5])
+
+    results = {}
+    for name in ("fedavg", "fedgkd"):
+        algo = (algorithms.make("fedgkd", gamma=task.gamma, buffer_m=5)
+                if name == "fedgkd" else algorithms.make("fedavg"))
+        h = fl_loop.run_federated(task, algo, data, seed=0, verbose=True)
+        results[name] = h
+
+    print("\n=== summary ===")
+    for name, h in results.items():
+        print(f"{name:8s} best={h.best_acc:.4f} final={h.final_acc:.4f} "
+              f"local-model acc={h.local_model_acc:.4f}")
+    gain = results["fedgkd"].best_acc - results["fedavg"].best_acc
+    print(f"FedGKD best-accuracy gain over FedAvg: {gain:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

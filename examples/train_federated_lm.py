@@ -1,0 +1,57 @@
+"""End-to-end driver (deliverable (b)): federated training of a ~100M-param
+causal LM with FedGKD for a few hundred local steps.
+
+Builds a 12-layer/d=640 GQA transformer (≈100M params with its 32k vocab),
+splits a synthetic token stream across 4 non-IID clients (distinct Markov
+sources), and runs FedGKD rounds; each round is 4 clients × E local steps.
+
+    PYTHONPATH=src python examples/train_federated_lm.py            # full
+    PYTHONPATH=src python examples/train_federated_lm.py --tiny     # smoke
+"""
+import argparse
+
+from repro.launch import train as fl_train
+from repro.models.config import ModelConfig
+
+
+def lm_100m() -> ModelConfig:
+    return ModelConfig(
+        name="fedlm-100m", family="dense", n_layers=12, d_model=640,
+        n_heads=10, n_kv_heads=5, d_ff=2560, vocab_size=32_000, head_dim=64,
+        norm="rms", act="swiglu", tie_embeddings=True,
+        param_dtype="float32", activation_dtype="float32")
+
+
+def lm_tiny() -> ModelConfig:
+    return lm_100m().replace(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                             d_ff=512, vocab_size=1_000)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--steps-per-round", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--clients", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = lm_tiny() if args.tiny else lm_100m()
+    n_params = cfg.param_count()
+    total_steps = args.rounds * args.clients * args.steps_per_round
+    print(f"model: {cfg.name} ~{n_params/1e6:.0f}M params; "
+          f"{args.rounds} rounds × {args.clients} clients × "
+          f"{args.steps_per_round} steps = {total_steps} local steps")
+
+    out = fl_train.run_serial(
+        cfg, rounds=args.rounds, n_clients=args.clients,
+        batches_per_round=args.steps_per_round, batch=args.batch,
+        seq=args.seq, algo="fedgkd", gamma=0.2, buffer_m=3,
+        lr=0.02 if args.tiny else 0.01)
+    print("perplexity trajectory:",
+          [f"{h['ppl']:.1f}" for h in out["history"]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Checkpointing: pytrees <-> .npz (+ msgpack metadata sidecar).
+
+Layout: ``<dir>/round_000123.npz`` with flattened '/'-joined key paths, and
+``<dir>/round_000123.meta`` (msgpack: round, metrics, config name).  Restart
+resumes from the latest round file; this is what the FL server uses to
+persist its global-model buffer.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_key_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_pytree(path: str, tree: Any, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    # npz can't round-trip ml_dtypes (bf16 etc.): store the raw bits and a
+    # dtype map so load can reinterpret them
+    dtypes = {k: str(v.dtype) for k, v in flat.items()}
+    for k, v in flat.items():
+        if v.dtype.kind == "V" or str(v.dtype) == "bfloat16":
+            flat[k] = v.view(np.uint16) if v.dtype.itemsize == 2 else v
+    flat["__dtypes__"] = np.frombuffer(msgpack.packb(dtypes), np.uint8)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    if meta is not None:
+        with open(re.sub(r"\.npz$", "", path) + ".meta", "wb") as f:
+            f.write(msgpack.packb(meta))
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load into the structure of ``like`` (dtypes/shapes must match)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    with np.load(path) as data:
+        dtypes = {}
+        if "__dtypes__" in data:
+            dtypes = msgpack.unpackb(data["__dtypes__"].tobytes())
+        flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for kpath, leaf in flat_like:
+            key = "/".join(_key_str(p) for p in kpath)
+            arr = data[key]
+            saved_dt = dtypes.get(key, str(arr.dtype))
+            if saved_dt == "bfloat16" and arr.dtype == np.uint16:
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+def load_meta(path: str) -> dict:
+    with open(re.sub(r"\.npz$", "", path) + ".meta", "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
+def save_round(ckpt_dir: str, rnd: int, tree: Any, meta: dict | None = None) -> str:
+    path = os.path.join(ckpt_dir, f"round_{rnd:06d}.npz")
+    save_pytree(path, tree, meta={"round": rnd, **(meta or {})})
+    return path
+
+
+def load_latest(ckpt_dir: str, like: Any) -> tuple[Any, int] | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    rounds = sorted(
+        int(m.group(1)) for f in os.listdir(ckpt_dir)
+        if (m := re.match(r"round_(\d+)\.npz$", f)))
+    if not rounds:
+        return None
+    rnd = rounds[-1]
+    tree = load_pytree(os.path.join(ckpt_dir, f"round_{rnd:06d}.npz"), like)
+    return tree, rnd

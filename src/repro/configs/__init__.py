@@ -1,0 +1,16 @@
+"""Architecture configs: the 10 assigned architectures + the paper's own.
+
+``get_config(name)`` returns the full production ModelConfig;
+``get_smoke_config(name)`` the reduced same-family variant used in CPU tests.
+"""
+from repro.configs.base import (  # noqa: F401
+    ALL_ARCHS, SHAPES, InputShape, get_config, get_smoke_config, input_specs,
+    list_archs, register, train_input_specs, decode_input_specs,
+)
+
+# import for registration side effects
+from repro.configs import (  # noqa: F401
+    seamless_m4t_large_v2, minitron_4b, granite_34b, mixtral_8x7b,
+    phi4_mini_3_8b, internlm2_20b, mamba2_2_7b, deepseek_v3_671b,
+    zamba2_1_2b, llava_next_34b,
+)

@@ -1,0 +1,25 @@
+"""granite-34b [dense, code] — arXiv:2405.04324 (Granite Code 34B).
+
+88L d_model=6144 48H (MQA: kv=1) d_ff=24576 vocab=49152.
+GPTBigCode-style: LayerNorm + GELU, multi-query attention.  The original
+uses learned absolute positions; we use RoPE (TPU-idiomatic; DESIGN.md).
+"""
+from repro.configs import base
+from repro.models.config import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="granite-34b", family="dense",
+        n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+        d_ff=24576, vocab_size=49152, head_dim=128,
+        norm="ln", act="gelu", qkv_bias=True, tie_embeddings=True,
+        param_dtype="bfloat16", activation_dtype="bfloat16", remat=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return base.reduce_for_smoke(full())
+
+
+base.register("granite-34b", full, smoke)

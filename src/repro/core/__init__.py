@@ -1,0 +1,8 @@
+"""FL algorithms: FedGKD (the paper's contribution) + all compared baselines.
+
+Public surface:
+    from repro.core import algorithms, fl_loop, distillation
+    algo = algorithms.make("fedgkd", gamma=0.2, buffer_m=5)
+    history = fl_loop.run_federated(task, algo, data, ...)
+"""
+from repro.core import distillation, server, client, algorithms, fl_loop, modelzoo  # noqa: F401

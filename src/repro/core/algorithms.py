@@ -1,0 +1,580 @@
+"""All federated algorithms from the paper's evaluation (Tab. 1 / §5.1).
+
+    fedavg        McMahan et al. 2017 — plain weighted averaging
+    fedprox       Li et al. 2018 — + (μ/2)‖w − w_t‖² proximal term
+    moon          Li et al. 2021 — model-contrastive loss (projection head)
+    feddistill+   Seo et al. 2020 (+ param sharing) — per-label global logits
+    fedgen        Zhu et al. 2021 — server-side feature generator
+    fedgkd        THE PAPER — fused historical-global-ensemble teacher, Eq. 4
+    fedgkd-vote   Eq. 5 — M teachers with validation-softmax coefficients
+    fedgkd+       fedgkd on the projection-head model (vs MOON)
+
+Every algorithm implements the same small interface; the FL loop
+(repro.core.fl_loop) is algorithm-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distillation as D
+from repro.core.modelzoo import ModelBundle
+from repro.core.server import ModelBuffer, weighted_average
+from repro.models import layers
+
+
+class Algorithm:
+    """Base: FedAvg behaviour; subclasses override the regularizer hooks."""
+
+    name = "fedavg"
+    needs_projection_head = False
+    comm_multiplier = 1.0     # download cost relative to FedAvg
+
+    def __init__(self, **kw):
+        self.hp = kw
+
+    # -- server ------------------------------------------------------------
+    def init_server(self, global_params: Any, model: ModelBundle,
+                    num_classes: int) -> dict:
+        return {"global": global_params, "round": 0}
+
+    def round_payload(self, server: dict, rng: jax.Array) -> Any:
+        """Broadcast content beyond the global weights (fixed pytree struct)."""
+        return ()
+
+    def server_update(self, server: dict, uploads: list[dict],
+                      weights: list[float], model: ModelBundle,
+                      val_batch=None) -> dict:
+        new_global = weighted_average([u["params"] for u in uploads], weights)
+        server = dict(server)
+        server["global"] = new_global
+        server["round"] += 1
+        return server
+
+    # -- client ------------------------------------------------------------
+    def init_client_state(self, client_id: int, global_params: Any) -> Any:
+        return ()
+
+    def loss_fn(self, model: ModelBundle):
+        """Return loss(params, payload, client_state, x, y) -> (loss, aux)."""
+
+        def loss(params, payload, client_state, x, y):
+            logits = model.apply(params, x)
+            return D.cross_entropy(logits, y), {}
+
+        return loss
+
+    def client_finalize(self, model: ModelBundle, params: Any,
+                        data, payload: Any) -> dict:
+        """Extra uploads beyond the trained weights."""
+        return {}
+
+    def update_client_state(self, client_state: Any, params: Any,
+                            payload: Any = None) -> Any:
+        return client_state
+
+
+# ---------------------------------------------------------------------------
+
+class FedProx(Algorithm):
+    name = "fedprox"
+
+    def __init__(self, mu: float = 0.01, **kw):
+        super().__init__(mu=mu, **kw)
+        self.mu = mu
+
+    def round_payload(self, server, rng):
+        return {"anchor": server["global"]}
+
+    def loss_fn(self, model):
+        mu = self.mu
+
+        def loss(params, payload, client_state, x, y):
+            logits = model.apply(params, x)
+            prox = 0.5 * mu * D.param_sq_dist(params, payload["anchor"])
+            return D.cross_entropy(logits, y) + prox, {}
+
+        return loss
+
+
+# ---------------------------------------------------------------------------
+
+class FedGKD(Algorithm):
+    """The paper's method (Eq. 4): teacher = mean of the last M globals."""
+
+    name = "fedgkd"
+
+    def __init__(self, gamma: float = 0.2, buffer_m: int = 5,
+                 loss_type: str = "kl", temperature: float = 1.0, **kw):
+        super().__init__(gamma=gamma, buffer_m=buffer_m, loss_type=loss_type, **kw)
+        self.gamma, self.buffer_m = gamma, buffer_m
+        self.loss_type, self.temperature = loss_type, temperature
+
+    @property
+    def comm_multiplier(self):
+        return 2.0 if self.buffer_m > 1 else 1.0
+
+    def init_server(self, global_params, model, num_classes):
+        buf = ModelBuffer(self.buffer_m)
+        buf.push(global_params)
+        return {"global": global_params, "round": 0, "buffer": buf}
+
+    def round_payload(self, server, rng):
+        return {"teacher": server["buffer"].fused()}
+
+    def loss_fn(self, model):
+        gamma, ltype, temp = self.gamma, self.loss_type, self.temperature
+
+        def loss(params, payload, client_state, x, y):
+            logits = model.apply(params, x)
+            t_logits = jax.lax.stop_gradient(
+                model.apply(payload["teacher"], x))
+            ce = D.cross_entropy(logits, y)
+            if ltype == "mse":
+                kd = D.kd_loss_mse(t_logits, logits, gamma)
+            else:
+                kd = D.kd_loss_kl(t_logits, logits, gamma, temp)
+            return ce + kd, {"kd": kd}
+
+        return loss
+
+    def server_update(self, server, uploads, weights, model, val_batch=None):
+        server = super().server_update(server, uploads, weights, model, val_batch)
+        server["buffer"].push(server["global"])
+        return server
+
+
+class FedGKDPlus(FedGKD):
+    """FedGKD on the projection-head model (the paper's MOON comparison)."""
+
+    name = "fedgkd+"
+    needs_projection_head = True
+
+
+# ---------------------------------------------------------------------------
+
+class FedGKDVote(FedGKD):
+    """Eq. 5: all M buffered teachers, γ_m from validation-loss softmax.
+
+    Payload stacks the M teachers on a leading axis (fixed pytree structure;
+    early rounds pad with the newest model at γ=0).
+    """
+
+    name = "fedgkd-vote"
+
+    def __init__(self, gamma: float = 0.2, buffer_m: int = 5, lam: float = 0.1,
+                 **kw):
+        super().__init__(gamma=gamma, buffer_m=buffer_m, **kw)
+        self.lam = lam
+
+    @property
+    def comm_multiplier(self):
+        return float(self.buffer_m)
+
+    def init_server(self, global_params, model, num_classes):
+        s = super().init_server(global_params, model, num_classes)
+        s["val_losses"] = [0.0]
+        return s
+
+    def round_payload(self, server, rng):
+        models = server["buffer"].models            # newest first, len m<=M
+        m_avail = len(models)
+        losses = server["val_losses"][:m_avail]
+        gammas = D.vote_coefficients(losses, lam=self.lam)
+        pad = self.buffer_m - m_avail
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(list(xs) + [xs[0]] * pad), *models)
+        gvec = jnp.asarray(gammas + [0.0] * pad, jnp.float32)
+        return {"teachers": stacked, "gammas": gvec}
+
+    def loss_fn(self, model):
+        temp = self.temperature
+
+        def loss(params, payload, client_state, x, y):
+            logits = model.apply(params, x)
+            ce = D.cross_entropy(logits, y)
+
+            def one(teacher):
+                t_logits = model.apply(teacher, x)
+                return jnp.mean(D.kl_divergence(t_logits, logits, temp))
+
+            kls = jax.lax.map(one, payload["teachers"])   # (M,)
+            kd = 0.5 * jnp.sum(payload["gammas"] * kls)   # Σ (γ_m/2)·KL_m
+            return ce + kd, {"kd": kd}
+
+        return loss
+
+    def server_update(self, server, uploads, weights, model, val_batch=None):
+        server = super().server_update(server, uploads, weights, model, val_batch)
+        # validation loss per buffered model (paper: γ set by val performance)
+        if val_batch is not None:
+            vx, vy = val_batch
+            losses = []
+            for p in server["buffer"].models:
+                logits = model.apply(p, vx)
+                losses.append(float(D.cross_entropy(logits, vy)))
+            server["val_losses"] = losses
+        else:
+            server["val_losses"] = [0.0] * len(server["buffer"])
+        return server
+
+
+# ---------------------------------------------------------------------------
+
+class MOON(Algorithm):
+    """Model-contrastive FL: positive = global features, negative = the
+    client's previous local model features (projection head, τ=0.5)."""
+
+    name = "moon"
+    needs_projection_head = True
+
+    def __init__(self, mu: float = 5.0, tau: float = 0.5, **kw):
+        super().__init__(mu=mu, tau=tau, **kw)
+        self.mu, self.tau = mu, tau
+
+    def round_payload(self, server, rng):
+        return {"global": server["global"]}
+
+    def init_client_state(self, client_id, global_params):
+        return {"prev": global_params}
+
+    def loss_fn(self, model):
+        mu, tau = self.mu, self.tau
+
+        def cos(a, b):
+            a = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-9)
+            b = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-9)
+            return jnp.sum(a * b, axis=-1)
+
+        def loss(params, payload, client_state, x, y):
+            logits = model.apply(params, x)
+            z = model.features(params, x)
+            z_g = jax.lax.stop_gradient(model.features(payload["global"], x))
+            z_p = jax.lax.stop_gradient(model.features(client_state["prev"], x))
+            pos = jnp.exp(cos(z, z_g) / tau)
+            neg = jnp.exp(cos(z, z_p) / tau)
+            con = -jnp.mean(jnp.log(pos / (pos + neg) + 1e-12))
+            return D.cross_entropy(logits, y) + mu * con, {"con": con}
+
+        return loss
+
+    def update_client_state(self, client_state, params, payload=None):
+        return {"prev": params}
+
+
+# ---------------------------------------------------------------------------
+
+class FedDistillPlus(Algorithm):
+    """FedDistill (per-label averaged logits shared) + parameter sharing.
+
+    Clients upload their per-class mean logits; the server averages them into
+    a global (C, C) table used as the per-label teacher next round.
+    """
+
+    name = "feddistill+"
+
+    def __init__(self, beta: float = 0.1, temperature: float = 1.0, **kw):
+        super().__init__(beta=beta, **kw)
+        self.beta, self.temperature = beta, temperature
+
+    def init_server(self, global_params, model, num_classes):
+        return {"global": global_params, "round": 0,
+                "label_logits": jnp.zeros((num_classes, num_classes), jnp.float32),
+                "have_logits": jnp.zeros((), jnp.float32)}
+
+    def round_payload(self, server, rng):
+        return {"label_logits": server["label_logits"],
+                "enable": server["have_logits"]}
+
+    def loss_fn(self, model):
+        beta, temp = self.beta, self.temperature
+
+        def loss(params, payload, client_state, x, y):
+            logits = model.apply(params, x)
+            teacher = payload["label_logits"][y]          # (B, C)
+            kd = jnp.mean(D.kl_divergence(teacher, logits, temp))
+            ce = D.cross_entropy(logits, y)
+            return ce + beta * payload["enable"] * kd, {"kd": kd}
+
+        return loss
+
+    def client_finalize(self, model, params, data, payload):
+        logits = model.apply(params, jnp.asarray(data.x))
+        y = jnp.asarray(data.y)
+        c = logits.shape[-1]
+        onehot = jax.nn.one_hot(y, c, dtype=jnp.float32)
+        sums = onehot.T @ logits                          # (C, C)
+        counts = jnp.sum(onehot, axis=0)                  # (C,)
+        return {"logit_sums": sums, "label_counts": counts}
+
+    def server_update(self, server, uploads, weights, model, val_batch=None):
+        server = super().server_update(server, uploads, weights, model, val_batch)
+        sums = sum(u["logit_sums"] for u in uploads)
+        counts = sum(u["label_counts"] for u in uploads)
+        server["label_logits"] = sums / jnp.maximum(counts[:, None], 1.0)
+        server["have_logits"] = jnp.ones((), jnp.float32)
+        return server
+
+
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _GenCfg:
+    noise_dim: int = 32
+    hidden: int = 128
+    steps: int = 50
+    lr: float = 1e-3
+    alpha: float = 1.0       # client regularization coefficient
+
+
+class FedGen(Algorithm):
+    """Data-free KD with a server-trained feature generator (Zhu et al.).
+
+    Server: trains G(z, y) -> penultimate feature so the clients' (uploaded)
+    classifier heads, weighted by their label counts, classify it as y.
+    Client: adds CE of its own head on generated features for labels drawn
+    from the global label distribution.
+    """
+
+    name = "fedgen"
+
+    def __init__(self, alpha: float = 1.0, noise_dim: int = 32,
+                 hidden: int = 128, gen_steps: int = 50, **kw):
+        super().__init__(alpha=alpha, **kw)
+        self.gcfg = _GenCfg(noise_dim=noise_dim, hidden=hidden,
+                            steps=gen_steps, alpha=alpha)
+
+    # generator params / apply -------------------------------------------
+    def _gen_init(self, rng, num_classes, feat_dim):
+        k1, k2 = jax.random.split(rng)
+        h = self.gcfg.hidden
+        return {"fc1": layers.dense_bias_init(k1, self.gcfg.noise_dim + num_classes, h),
+                "fc2": layers.dense_bias_init(k2, h, feat_dim)}
+
+    @staticmethod
+    def _gen_apply(gp, z, y_onehot):
+        h = jax.nn.relu(layers.dense(gp["fc1"],
+                                     jnp.concatenate([z, y_onehot], -1)))
+        return layers.dense(gp["fc2"], h)
+
+    def init_server(self, global_params, model, num_classes):
+        feat = model.features(global_params,
+                              jnp.zeros((1,) + self._probe_shape, jnp.float32)
+                              if hasattr(self, "_probe_shape") else None)
+        raise RuntimeError("init_server requires probe; use init_server_with_probe")
+
+    # the FL loop calls this variant (needs a data probe for feature dim)
+    def init_server_with_probe(self, global_params, model, num_classes, probe_x):
+        feat_dim = model.features(global_params, probe_x[:1]).shape[-1]
+        rng = jax.random.PRNGKey(17)
+        return {"global": global_params, "round": 0,
+                "gen": self._gen_init(rng, num_classes, feat_dim),
+                "num_classes": num_classes,
+                "label_dist": jnp.ones((num_classes,), jnp.float32) / num_classes}
+
+    def round_payload(self, server, rng):
+        return {"gen": server["gen"], "label_dist": server["label_dist"],
+                "rng": rng}
+
+    def loss_fn(self, model):
+        alpha, nd = self.gcfg.alpha, self.gcfg.noise_dim
+
+        def head_apply(params, feats):
+            return layers.dense(params["fc"], feats)
+
+        def loss(params, payload, client_state, x, y):
+            logits = model.apply(params, x)
+            ce = D.cross_entropy(logits, y)
+            b = x.shape[0]
+            c = payload["label_dist"].shape[0]
+            rng = jax.random.fold_in(payload["rng"], jnp.sum(y))
+            k1, k2 = jax.random.split(rng)
+            y_gen = jax.random.categorical(
+                k1, jnp.log(payload["label_dist"] + 1e-9)[None, :].repeat(b, 0))
+            z = jax.random.normal(k2, (b, nd))
+            feats = jax.lax.stop_gradient(
+                self._gen_apply(payload["gen"], z, jax.nn.one_hot(y_gen, c)))
+            gen_logits = head_apply(params, feats)
+            reg = D.cross_entropy(gen_logits, y_gen)
+            return ce + alpha * reg, {"gen_ce": reg}
+
+        return loss
+
+    def client_finalize(self, model, params, data, payload):
+        c = payload["label_dist"].shape[0]
+        counts = jnp.bincount(jnp.asarray(data.y), length=c).astype(jnp.float32)
+        return {"head": params["fc"], "label_counts": counts}
+
+    def server_update(self, server, uploads, weights, model, val_batch=None):
+        server = Algorithm.server_update(self, server, uploads, weights, model)
+        c = server["num_classes"]
+        counts = sum(u["label_counts"] for u in uploads)
+        server["label_dist"] = counts / jnp.maximum(jnp.sum(counts), 1.0)
+        heads = [u["head"] for u in uploads]
+        head_w = jnp.stack([u["label_counts"] for u in uploads])  # (K, C)
+        head_w = head_w / jnp.maximum(jnp.sum(head_w, 0, keepdims=True), 1.0)
+        gen = server["gen"]
+        nd = self.gcfg.noise_dim
+        rng = jax.random.PRNGKey(1000 + server["round"])
+
+        def gen_loss(gp, rng):
+            k1, k2 = jax.random.split(rng)
+            y = jax.random.randint(k1, (64,), 0, c)
+            z = jax.random.normal(k2, (64, nd))
+            feats = self._gen_apply(gp, z, jax.nn.one_hot(y, c))
+            total = 0.0
+            for k, head in enumerate(heads):
+                logits = layers.dense(head, feats)
+                w = head_w[k][y]                        # weight by label counts
+                logp = jax.nn.log_softmax(logits, -1)
+                total = total - jnp.mean(
+                    w * jnp.take_along_axis(logp, y[:, None], -1)[:, 0])
+            return total
+
+        @jax.jit
+        def gen_step(gp, rng):
+            g = jax.grad(gen_loss)(gp, rng)
+            return jax.tree_util.tree_map(
+                lambda p, gr: p - self.gcfg.lr * gr, gp, g)
+
+        for i in range(self.gcfg.steps):
+            gen = gen_step(gen, jax.random.fold_in(rng, i))
+        server["gen"] = gen
+        return server
+
+
+# ---------------------------------------------------------------------------
+
+class SCAFFOLD(Algorithm):
+    """Karimireddy et al. 2019: control variates correct client drift.
+
+    Local gradient is corrected by (c − c_k); after local training the
+    client updates its control variate with option-II:
+        c_k ← c_k − c + (w_t − w_k)/(K_steps·η).
+    Cited by the paper as the local-correction alternative to KD; included
+    as an extra baseline beyond the paper's evaluated set.
+    """
+
+    name = "scaffold"
+
+    def __init__(self, lr: float = 0.05, local_steps_hint: int = 20, **kw):
+        super().__init__(**kw)
+        self.lr = lr
+        self.local_steps_hint = local_steps_hint
+
+    def init_server(self, global_params, model, num_classes):
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, global_params)
+        return {"global": global_params, "round": 0, "c": zeros}
+
+    def round_payload(self, server, rng):
+        return {"c": server["c"], "anchor": server["global"]}
+
+    def init_client_state(self, client_id, global_params):
+        return {"c_k": jax.tree_util.tree_map(jnp.zeros_like, global_params)}
+
+    def loss_fn(self, model):
+        def loss(params, payload, client_state, x, y):
+            logits = model.apply(params, x)
+            ce = D.cross_entropy(logits, y)
+            # linear correction term: <(c − c_k), w> has gradient (c − c_k)
+            corr = sum(
+                jnp.sum((c - ck).astype(jnp.float32) * w.astype(jnp.float32))
+                for c, ck, w in zip(
+                    jax.tree_util.tree_leaves(payload["c"]),
+                    jax.tree_util.tree_leaves(client_state["c_k"]),
+                    jax.tree_util.tree_leaves(params)))
+            return ce + corr, {}
+
+        return loss
+
+    def client_finalize(self, model, params, data, payload):
+        return {"anchor": payload["anchor"], "c": payload["c"]}
+
+    def update_client_state(self, client_state, params, payload=None):
+        return client_state  # updated in server_update via uploads
+
+    def server_update(self, server, uploads, weights, model, val_batch=None):
+        # c_k update (option II) folded here: Δc_k = (w_t − w_k)/(K·η) − c
+        k_eta = self.local_steps_hint * self.lr
+        deltas = []
+        for u in uploads:
+            d = jax.tree_util.tree_map(
+                lambda wt, wk, c: (wt.astype(jnp.float32)
+                                   - wk.astype(jnp.float32)) / k_eta - c,
+                u["anchor"], u["params"], u["c"])
+            deltas.append(d)
+        mean_delta = jax.tree_util.tree_map(
+            lambda *xs: sum(xs) / len(xs), *deltas)
+        frac = len(uploads) / max(1, len(uploads))  # |S|/K ≈ participation
+        server = Algorithm.server_update(self, server, uploads, weights, model)
+        server["c"] = jax.tree_util.tree_map(
+            lambda c, d: c + frac * d, server["c"], mean_delta)
+        return server
+
+
+class FedDyn(Algorithm):
+    """Acar et al. 2020: dynamic regularization — each client keeps a
+    first-order dual state h_k; local objective adds −<h_k, w> +
+    (α/2)‖w − w_t‖²."""
+
+    name = "feddyn"
+
+    def __init__(self, alpha: float = 0.01, **kw):
+        super().__init__(alpha=alpha, **kw)
+        self.alpha = alpha
+
+    def round_payload(self, server, rng):
+        return {"anchor": server["global"]}
+
+    def init_client_state(self, client_id, global_params):
+        return {"h": jax.tree_util.tree_map(jnp.zeros_like, global_params)}
+
+    def loss_fn(self, model):
+        a = self.alpha
+
+        def loss(params, payload, client_state, x, y):
+            logits = model.apply(params, x)
+            ce = D.cross_entropy(logits, y)
+            lin = sum(jnp.sum(h.astype(jnp.float32) * w.astype(jnp.float32))
+                      for h, w in zip(
+                          jax.tree_util.tree_leaves(client_state["h"]),
+                          jax.tree_util.tree_leaves(params)))
+            prox = 0.5 * a * D.param_sq_dist(params, payload["anchor"])
+            return ce - lin + prox, {}
+
+        return loss
+
+    def client_finalize(self, model, params, data, payload):
+        return {"anchor": payload["anchor"]}
+
+    def update_client_state(self, client_state, params, payload=None):
+        # dual update: h_k <- h_k - alpha*(w_k - w_t)
+        a = self.alpha
+        return {"h": jax.tree_util.tree_map(
+            lambda h, wk, wt: h - a * (wk.astype(h.dtype) - wt.astype(h.dtype)),
+            client_state["h"], params, payload["anchor"])}
+
+
+_REGISTRY = {
+    "fedavg": Algorithm,
+    "fedprox": FedProx,
+    "fedgkd": FedGKD,
+    "fedgkd+": FedGKDPlus,
+    "fedgkd-vote": FedGKDVote,
+    "moon": MOON,
+    "feddistill+": FedDistillPlus,
+    "fedgen": FedGen,
+    "scaffold": SCAFFOLD,
+    "feddyn": FedDyn,
+}
+
+
+def make(name: str, **kw) -> Algorithm:
+    return _REGISTRY[name](**kw)
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,56 @@
+"""Client side: the local update loop (Alg. 1, CLIENTUPDATE).
+
+Each sampled client runs E epochs of minibatch SGD on
+    F_k(w) + <algorithm-specific regularizer>(w; payload, client_state)
+The step is jitted ONCE per (algorithm, model) and reused across clients and
+rounds — payloads are pytrees with a fixed structure.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import ClientData, batch_iterator
+from repro.optim import Optimizer, apply_updates
+
+
+class LocalResult(NamedTuple):
+    params: Any
+    n_examples: int
+    mean_loss: float
+    extras: dict
+
+
+def make_step(loss_fn: Callable, opt: Optimizer) -> Callable:
+    """loss_fn(params, payload, client_state, x, y) -> (loss, aux_dict)."""
+
+    @jax.jit
+    def step(params, opt_state, payload, client_state, x, y, lr):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, payload, client_state, x, y)
+        updates, opt_state = opt.update(grads, opt_state, params, lr)
+        return apply_updates(params, updates), opt_state, loss, aux
+
+    return step
+
+
+def local_update(step: Callable, opt: Optimizer, params: Any, payload: Any,
+                 client_state: Any, data: ClientData, *, lr: float,
+                 batch_size: int, epochs: int, rng: np.random.Generator,
+                 max_batches: int | None = None) -> tuple[Any, float]:
+    """Run the local epochs; returns (new_params, mean loss)."""
+    opt_state = opt.init(params)
+    losses = []
+    n_done = 0
+    for x, y in batch_iterator(rng, data, batch_size, epochs):
+        params, opt_state, loss, _ = step(
+            params, opt_state, payload, client_state,
+            jnp.asarray(x), jnp.asarray(y), lr)
+        losses.append(float(loss))
+        n_done += 1
+        if max_batches is not None and n_done >= max_batches:
+            break
+    return params, float(np.mean(losses)) if losses else 0.0

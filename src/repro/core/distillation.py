@@ -1,0 +1,77 @@
+"""Knowledge-distillation losses and global-model ensembling (paper Eq. 3-5).
+
+The KD regularizer is ``(γ/2)·E_x[ KL( h(w_teacher; x) ‖ h(w; x) ) ]`` —
+teacher distribution first (forward KL), matching Eq. (3).  ``γ_m`` weights
+for FedGKD-VOTE follow the paper's softmax-of-validation-loss rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kl_divergence(teacher_logits: jax.Array, student_logits: jax.Array,
+                  temperature: float = 1.0) -> jax.Array:
+    """Per-example KL(p_T ‖ p_S). Shapes (..., C) -> (...)."""
+    t = temperature
+    p_t = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    logp_t = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    logp_s = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    return jnp.sum(p_t * (logp_t - logp_s), axis=-1) * (t * t)
+
+
+def kd_loss_kl(teacher_logits, student_logits, gamma: float,
+               temperature: float = 1.0) -> jax.Array:
+    """Paper Eq.(3) KD term: (γ/2)·mean KL."""
+    return 0.5 * gamma * jnp.mean(
+        kl_divergence(teacher_logits, student_logits, temperature))
+
+
+def kd_loss_mse(teacher_logits, student_logits, gamma: float) -> jax.Array:
+    """Table 9 ablation: MSE over logits instead of KL."""
+    d = (teacher_logits.astype(jnp.float32)
+         - student_logits.astype(jnp.float32))
+    return 0.5 * gamma * jnp.mean(jnp.sum(jnp.square(d), axis=-1))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_index: int = -1) -> jax.Array:
+    """Mean CE with optional ignore label (used to mask frontend positions)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    valid = labels != ignore_index
+    safe = jnp.where(valid, labels, 0)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * valid) / jnp.maximum(1, jnp.sum(valid))
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# global-model ensembling (server side)
+# ---------------------------------------------------------------------------
+
+def ensemble_average(params_list: list) -> dict:
+    """FedGKD fused teacher: plain weight-space mean of the buffered models
+    (Polyak-style, Eq. w̄_t = (1/M)·Σ w_{t-m+1})."""
+    m = len(params_list)
+    return jax.tree_util.tree_map(
+        lambda *xs: sum(x.astype(jnp.float32) for x in xs) / m, *params_list)
+
+
+def vote_coefficients(val_losses: list[float], lam: float = 0.1,
+                      beta: float | None = None) -> list[float]:
+    """FedGKD-VOTE γ_m/2 = λ · softmax(-L_m/β); β defaults to 1/M (paper)."""
+    m = len(val_losses)
+    beta = beta if beta is not None else 1.0 / m
+    l = jnp.asarray(val_losses, jnp.float32)
+    w = jax.nn.softmax(-l / beta)
+    return [2.0 * lam * float(x) for x in w]  # returns γ_m (the full coefficient)
+
+
+def param_sq_dist(a, b) -> jax.Array:
+    """‖a − b‖² over pytrees (FedProx proximal term)."""
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32)))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))

@@ -1,0 +1,160 @@
+"""Algorithm-agnostic federated training loop (Alg. 1 ServerExecution).
+
+Single-host simulation path used by the paper-reproduction benchmarks; the
+multi-device shard_map path for the big assigned architectures lives in
+repro/launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper import PaperTask
+from repro.core import client as client_lib
+from repro.core.algorithms import Algorithm, FedGen
+from repro.core.distillation import accuracy, cross_entropy
+from repro.core.modelzoo import ModelBundle, make_model
+from repro.data.pipeline import FederatedData
+from repro.optim import adam, sgd
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    test_acc: float
+    test_loss: float
+    mean_local_loss: float
+    seconds: float
+
+
+@dataclasses.dataclass
+class History:
+    algo: str
+    records: list[RoundRecord]
+    final_params: Any
+    local_model_acc: float = 0.0       # last sampled client's local-model acc
+
+    @property
+    def best_acc(self) -> float:
+        return max(r.test_acc for r in self.records)
+
+    @property
+    def final_acc(self) -> float:
+        return self.records[-1].test_acc
+
+    def accs(self) -> list[float]:
+        return [r.test_acc for r in self.records]
+
+
+def evaluate(model: ModelBundle, params: Any, x: np.ndarray, y: np.ndarray,
+             batch: int = 256) -> tuple[float, float]:
+    accs, losses, ns = [], [], []
+    apply = jax.jit(model.apply)
+    for i in range(0, len(y), batch):
+        xb, yb = jnp.asarray(x[i:i + batch]), jnp.asarray(y[i:i + batch])
+        logits = apply(params, xb)
+        accs.append(float(accuracy(logits, yb)) * len(yb))
+        losses.append(float(cross_entropy(logits, yb)) * len(yb))
+        ns.append(len(yb))
+    n = sum(ns)
+    return sum(accs) / n, sum(losses) / n
+
+
+def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
+                  rounds: Optional[int] = None, seed: int = 0,
+                  eval_every: int = 1, max_batches_per_client: int | None = None,
+                  verbose: bool = False, width: int = 16,
+                  round_callback=None, dp=None) -> History:
+    """Run T communication rounds of ``algo`` on the partitioned data."""
+    rounds = rounds if rounds is not None else task.rounds
+    model = make_model(task, projection_head=algo.needs_projection_head,
+                       width=width)
+    rng = np.random.default_rng(seed)
+    jrng = jax.random.PRNGKey(seed)
+
+    global_params = model.init(jax.random.PRNGKey(seed + 1))
+    probe_x = jnp.asarray(data.clients[0].x[:2])
+    if isinstance(algo, FedGen):
+        server = algo.init_server_with_probe(global_params, model,
+                                             task.num_classes, probe_x)
+    else:
+        server = algo.init_server(global_params, model, task.num_classes)
+
+    if task.optimizer == "adam":
+        opt = adam(weight_decay=task.weight_decay)
+    else:
+        opt = sgd(momentum=task.momentum, weight_decay=task.weight_decay)
+    step = client_lib.make_step(algo.loss_fn(model), opt)
+
+    client_states = {k: algo.init_client_state(k, global_params)
+                     for k in range(data.n_clients)}
+    # small server-side validation split for FedGKD-VOTE coefficients
+    n_val = min(256, len(data.test_y) // 4)
+    val_batch = (jnp.asarray(data.test_x[:n_val]), jnp.asarray(data.test_y[:n_val]))
+
+    n_sample = max(1, int(round(task.participation * data.n_clients)))
+    records: list[RoundRecord] = []
+    local_acc = 0.0
+
+    for t in range(rounds):
+        t0 = time.time()
+        jrng, krng = jax.random.split(jrng)
+        sampled = rng.choice(data.n_clients, size=n_sample, replace=False)
+        payload = algo.round_payload(server, krng)
+
+        uploads, weights, local_losses = [], [], []
+        for k in sampled:
+            cdata = data.clients[int(k)]
+            new_params, mloss = client_lib.local_update(
+                step, opt, server["global"], payload, client_states[int(k)],
+                cdata, lr=task.lr, batch_size=task.batch_size,
+                epochs=task.local_epochs, rng=rng,
+                max_batches=max_batches_per_client)
+            extras = algo.client_finalize(model, new_params, cdata, payload)
+            client_states[int(k)] = algo.update_client_state(
+                client_states[int(k)], new_params, payload)
+            uploads.append({"params": new_params, **extras})
+            weights.append(cdata.n)
+            local_losses.append(mloss)
+
+        if dp is not None:
+            from repro.core import privacy
+            uploads = privacy.privatize_uploads(uploads, server["global"],
+                                                dp, t)
+        server = algo.server_update(server, uploads, weights, model, val_batch)
+        if dp is not None:
+            from repro.core import privacy
+            server["global"] = privacy.noise_aggregate(server["global"], dp,
+                                                       len(uploads), t)
+
+        if (t + 1) % eval_every == 0 or t == rounds - 1:
+            acc, loss = evaluate(model, server["global"], data.test_x, data.test_y)
+        else:
+            acc, loss = (records[-1].test_acc, records[-1].test_loss) if records else (0.0, 0.0)
+        records.append(RoundRecord(t + 1, acc, loss,
+                                   float(np.mean(local_losses)), time.time() - t0))
+        if round_callback is not None:
+            round_callback(t + 1, server, model)
+        if verbose:
+            print(f"[{algo.name}] round {t+1:3d}/{rounds} "
+                  f"acc={acc:.4f} loss={loss:.4f} local={np.mean(local_losses):.4f}")
+
+    # paper Fig.2-style: accuracy of the last trained LOCAL model
+    if uploads:
+        local_acc, _ = evaluate(model, uploads[-1]["params"],
+                                data.test_x, data.test_y)
+    return History(algo.name, records, server["global"], local_acc)
+
+
+def make_federated_data(task: PaperTask, alpha: float, seed: int = 0,
+                        n_test: int = 1000) -> FederatedData:
+    from repro.data.synthetic import make_task_data
+    xtr, ytr, xte, yte = make_task_data(task, task.train_size, n_test, seed=seed)
+    return FederatedData.from_arrays(xtr, ytr, xte, yte,
+                                     n_clients=task.n_clients, alpha=alpha,
+                                     seed=seed)

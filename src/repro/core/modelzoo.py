@@ -1,0 +1,80 @@
+"""Uniform classifier bundles for the paper's tasks.
+
+A ``ModelBundle`` exposes init/apply/features so every FL algorithm (some
+need penultimate features: MOON; some only logits) can drive any backbone —
+ResNet-8/50, the DistilBERT-class text encoder, or the toy MLP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import PaperTask, distilbert_class_config
+from repro.models import layers, resnet, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    name: str
+    init: Callable              # (rng) -> params
+    apply: Callable             # (params, x) -> logits (B, C)
+    features: Callable          # (params, x) -> penultimate features (B, F)
+    has_projection_head: bool = False
+
+
+def _text_classifier(task: PaperTask, projection_head: bool) -> ModelBundle:
+    cfg = distilbert_class_config(task)
+
+    def init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        p = {"backbone": transformer.init(k1, cfg),
+             "fc": layers.dense_bias_init(k2, cfg.d_model, task.num_classes)}
+        if projection_head:
+            p["proj_head"] = {
+                "fc1": layers.dense_bias_init(k3, cfg.d_model, cfg.d_model),
+                "fc2": layers.dense_bias_init(
+                    jax.random.fold_in(k3, 1), cfg.d_model, 256)}
+            p["fc"] = layers.dense_bias_init(k2, 256, task.num_classes)
+        return p
+
+    def features(params, x):
+        h, _ = transformer.hidden_states(params["backbone"], cfg, x)
+        h = jnp.mean(h, axis=1)                     # mean-pool over tokens
+        if "proj_head" in params:
+            h = jax.nn.relu(layers.dense(params["proj_head"]["fc1"], h))
+            h = layers.dense(params["proj_head"]["fc2"], h)
+        return h
+
+    def apply(params, x):
+        return layers.dense(params["fc"], features(params, x))
+
+    return ModelBundle(f"distilbert-{task.name}", init, apply, features,
+                       projection_head)
+
+
+def make_model(task: PaperTask, projection_head: bool = False,
+               width: int = 16) -> ModelBundle:
+    """Build the paper's backbone for a task (+ optional MOON/FedGKD+ head)."""
+    if task.model == "resnet8":
+        return ModelBundle(
+            "resnet8",
+            lambda rng: resnet.resnet8_init(rng, task.num_classes, width=width,
+                                            projection_head=projection_head),
+            resnet.resnet8_apply, resnet.resnet8_features, projection_head)
+    if task.model == "resnet50":
+        return ModelBundle(
+            "resnet50",
+            lambda rng: resnet.resnet50_init(rng, task.num_classes,
+                                             projection_head=projection_head),
+            resnet.resnet50_apply, resnet.resnet50_features, projection_head)
+    if task.model == "mlp":
+        return ModelBundle(
+            "mlp",
+            lambda rng: resnet.mlp_init(rng, 2, [64, 64], task.num_classes),
+            resnet.mlp_apply, resnet.mlp_features, False)
+    if task.model == "distilbert":
+        return _text_classifier(task, projection_head)
+    raise ValueError(task.model)

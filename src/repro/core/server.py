@@ -1,0 +1,54 @@
+"""Server side: weighted aggregation + the FedGKD global-model buffer.
+
+``ModelBuffer`` is the M-deep FIFO of historical global weights (Alg. 1,
+line 11).  For FedGKD the server ships only the fused mean (communication =
+2× FedAvg, == 1× when M == 1); FedGKD-VOTE ships all M entries.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distillation import ensemble_average
+
+
+def weighted_average(params_list: list[Any], weights: list[float]) -> Any:
+    """FedAvg aggregation  w ← Σ_k (n_k/n)·w_k  (Alg. 1 line 14)."""
+    total = float(sum(weights))
+    norm = [w / total for w in weights]
+
+    def agg(*leaves):
+        acc = norm[0] * leaves[0].astype(jnp.float32)
+        for w, leaf in zip(norm[1:], leaves[1:]):
+            acc = acc + w * leaf.astype(jnp.float32)
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(agg, *params_list)
+
+
+class ModelBuffer:
+    """FIFO of the latest M global models."""
+
+    def __init__(self, size: int):
+        assert size >= 1
+        self.size = size
+        self._buf: collections.deque = collections.deque(maxlen=size)
+
+    def push(self, params: Any) -> None:
+        self._buf.append(params)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    @property
+    def models(self) -> list[Any]:
+        """Newest-first list of buffered global models."""
+        return list(reversed(self._buf))
+
+    def fused(self) -> Any:
+        """FedGKD ensemble teacher  w̄_t = mean of buffer."""
+        assert self._buf, "empty buffer"
+        return ensemble_average(list(self._buf))

@@ -1,0 +1,5 @@
+from repro.data.dirichlet import dirichlet_partition, partition_stats  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticImageTask, SyntheticTextTask, make_task_data, lm_token_batches,
+)
+from repro.data.pipeline import ClientData, FederatedData, batch_iterator  # noqa: F401

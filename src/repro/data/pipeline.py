@@ -1,0 +1,66 @@
+"""Federated data pipeline: per-client shards + epoch batch iterators.
+
+``FederatedData`` owns the full arrays and the Dirichlet partition;
+``batch_iterator`` yields shuffled minibatches per local epoch (numpy on the
+host — the arrays are small; device transfer happens inside the jitted step).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.dirichlet import dirichlet_partition, partition_stats
+
+
+@dataclasses.dataclass
+class ClientData:
+    x: np.ndarray
+    y: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return len(self.y)
+
+
+@dataclasses.dataclass
+class FederatedData:
+    clients: list[ClientData]
+    test_x: np.ndarray
+    test_y: np.ndarray
+    label_matrix: np.ndarray     # (K, C) counts, paper Fig.3
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.clients)
+
+    @property
+    def total_n(self) -> int:
+        return sum(c.n for c in self.clients)
+
+    @classmethod
+    def from_arrays(cls, x: np.ndarray, y: np.ndarray, test_x, test_y,
+                    n_clients: int, alpha: float, seed: int = 0):
+        parts = dirichlet_partition(y, n_clients, alpha, seed=seed)
+        clients = [ClientData(x[idx], y[idx]) for idx in parts]
+        return cls(clients, test_x, test_y, partition_stats(y, parts))
+
+
+def batch_iterator(rng: np.random.Generator, data: ClientData, batch_size: int,
+                   epochs: int = 1, drop_remainder: bool = False):
+    """Yield (x, y) minibatches for ``epochs`` shuffled passes."""
+    n = data.n
+    bs = min(batch_size, n)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        end = n - (n % bs) if drop_remainder else n
+        for i in range(0, end, bs):
+            idx = order[i:i + bs]
+            if len(idx) < bs:  # pad final partial batch by wrapping
+                idx = np.concatenate([idx, order[: bs - len(idx)]])
+            yield data.x[idx], data.y[idx]
+
+
+def num_batches(n: int, batch_size: int, epochs: int) -> int:
+    bs = min(batch_size, n)
+    return epochs * int(np.ceil(n / bs))

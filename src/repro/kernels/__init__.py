@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute paths.
+
+    kd_kl           fused softmax+KL distillation loss (FedGKD's added compute)
+    flash_attention blockwise causal/sliding-window attention
+    ssd_scan        Mamba2 chunked state-space scan
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper, custom_vjp), ref.py (pure-jnp oracle).  Kernels are
+written for TPU (VMEM tiling, MXU-aligned blocks) and validated on CPU with
+interpret=True.
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.flash_attention.ops import flash_attention_gqa  # noqa: F401
+from repro.kernels.flash_attention import ref  # noqa: F401

@@ -1,0 +1,79 @@
+"""Jit'd public wrapper: GQA layout handling + padding + custom VJP.
+
+Forward runs the Pallas kernel; backward recomputes attention with the jnp
+reference under ``jax.vjp`` (flash-bwd kernel is a possible follow-up — the
+fwd kernel is what the prefill roofline needs; noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref
+
+
+def _pad_seq(x, block, axis):
+    pad = (-x.shape[axis]) % block
+    if pad:
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, pad)
+        x = jnp.pad(x, cfg)
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, block_q, block_kv, interpret):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    # layout: fold heads into batch; repeat kv heads per group
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1).reshape(b * hq, skv, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1).reshape(b * hq, skv, d)
+    qf = _pad_seq(qf, block_q, 1)
+    kf = _pad_seq(kf, block_kv, 1)
+    vf = _pad_seq(vf, block_kv, 1)
+    # padded kv positions must never be attended: they sit at k_pos >= skv;
+    # causal masking handles them iff sq <= skv. For the non-causal case we
+    # mask via window=None + explicit slice below only when no padding.
+    out = K.flash_attention_fwd(qf, kf, vf, causal=causal, window=window,
+                                block_q=block_q, block_kv=block_kv,
+                                interpret=interpret)
+    out = out[:, :sq].reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_kv, interpret):
+    return _flash(q, k, v, causal, window, block_q, block_kv, interpret), (q, k, v)
+
+
+def _flash_bwd(causal, window, block_q, block_kv, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: ref.attention_ref(q, k, v, causal=causal, window=window),
+        q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        block_q: int = 128, block_kv: int = 128,
+                        interpret: bool | None = None) -> jax.Array:
+    """Drop-in for attention.jnp_attention with Pallas execution.
+
+    Non-causal calls with sequence padding would attend padded keys, so those
+    fall back to the reference (encoder/cross-attention seqs are short).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    skv = k.shape[1]
+    if not causal and skv % block_kv != 0:
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal, window, block_q, block_kv, interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for flash attention (delegates to the model-stack ref)."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import dot_product_attention, causal_mask
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None) -> jax.Array:
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D); GQA via head grouping."""
+    mask = causal_mask(q.shape[1], k.shape[1], window=window) if causal else None
+    return dot_product_attention(q, k, v, mask)

@@ -1,0 +1,2 @@
+from repro.kernels.kd_kl.ops import kd_kl_loss  # noqa: F401
+from repro.kernels.kd_kl import ref  # noqa: F401

@@ -1,0 +1,176 @@
+"""Fused softmax+KL distillation loss — Pallas TPU kernel.
+
+One pass over the vocab axis computes, per row, the online-rescaled
+accumulators of BOTH softmaxes and the cross term:
+
+    m_t, s_t : running max / rescaled exp-sum of teacher logits
+    m_s, s_s : same for student
+    acc      : Σ exp(lt − m_t)·(lt − ls)   (rescaled as m_t moves)
+
+    KL = acc/s_t − (m_t + log s_t) + (m_s + log s_s)
+
+so neither probability tensor ever hits HBM: traffic is exactly one read of
+each logits tensor (2·T·V·4B) instead of the reference's reads+writes of two
+prob tensors (≥6·T·V·4B), and the row reduction lives in VMEM scratch.
+
+Grid: (row_blocks, vocab_blocks); the vocab axis is the innermost (sequen-
+tially iterated on TPU) so scratch carries across vocab blocks.  Block
+shapes default to (256 rows, 1024 vocab) — 2·1MB fp32 blocks in VMEM, MXU/
+VPU-aligned (multiples of 8×128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kd_kl_fwd_kernel(lt_ref, ls_ref, out_ref,
+                      mt_ref, st_ref, ms_ref, ss_ref, acc_ref,
+                      *, inv_temp: float, n_vblocks: int):
+    """One (row_block, vocab_block) step. Scratch refs carry row stats."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        mt_ref[...] = jnp.full_like(mt_ref, NEG_INF)
+        st_ref[...] = jnp.zeros_like(st_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lt = lt_ref[...].astype(jnp.float32) * inv_temp      # (R, Vb)
+    ls = ls_ref[...].astype(jnp.float32) * inv_temp
+
+    # teacher online softmax + cross accumulator
+    mt_prev, st_prev, acc_prev = mt_ref[...], st_ref[...], acc_ref[...]
+    mt_new = jnp.maximum(mt_prev, jnp.max(lt, axis=-1))
+    scale_t = jnp.exp(mt_prev - mt_new)
+    e_t = jnp.exp(lt - mt_new[:, None])
+    st_ref[...] = st_prev * scale_t + jnp.sum(e_t, axis=-1)
+    acc_ref[...] = acc_prev * scale_t + jnp.sum(e_t * (lt - ls), axis=-1)
+    mt_ref[...] = mt_new
+
+    # student online logsumexp
+    ms_prev, ss_prev = ms_ref[...], ss_ref[...]
+    ms_new = jnp.maximum(ms_prev, jnp.max(ls, axis=-1))
+    ss_ref[...] = ss_prev * jnp.exp(ms_prev - ms_new) + jnp.sum(
+        jnp.exp(ls - ms_new[:, None]), axis=-1)
+    ms_ref[...] = ms_new
+
+    @pl.when(j == n_vblocks - 1)
+    def _finalize():
+        lse_t = mt_ref[...] + jnp.log(st_ref[...])
+        lse_s = ms_ref[...] + jnp.log(ss_ref[...])
+        out_ref[...] = (acc_ref[...] / st_ref[...] - lse_t + lse_s) / (inv_temp * inv_temp)
+
+
+def kd_kl_fwd(teacher_logits: jax.Array, student_logits: jax.Array, *,
+              temperature: float = 1.0, block_rows: int = 256,
+              block_vocab: int = 1024, interpret: bool = False) -> jax.Array:
+    """(T, V) × (T, V) -> (T,) per-row KL(p_T‖p_S)·temp².  T % block_rows ==
+    0 and V % block_vocab == 0 (ops.py pads)."""
+    t, v = teacher_logits.shape
+    assert t % block_rows == 0 and v % block_vocab == 0, (t, v)
+    n_rblocks, n_vblocks = t // block_rows, v // block_vocab
+
+    kernel = functools.partial(_kd_kl_fwd_kernel, inv_temp=1.0 / temperature,
+                               n_vblocks=n_vblocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_rblocks, n_vblocks),
+        in_specs=[
+            pl.BlockSpec((block_rows, block_vocab), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_vocab), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows,), jnp.float32),  # m_t
+            pltpu.VMEM((block_rows,), jnp.float32),  # s_t
+            pltpu.VMEM((block_rows,), jnp.float32),  # m_s
+            pltpu.VMEM((block_rows,), jnp.float32),  # s_s
+            pltpu.VMEM((block_rows,), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(teacher_logits, student_logits)
+
+
+def _kd_kl_bwd_kernel(lt_ref, ls_ref, lse_t_ref, lse_s_ref, g_ref, dls_ref,
+                      *, inv_temp: float):
+    """Block-wise student gradient: g_row · (p_S − p_T) · inv_temp...
+
+    Using saved row logsumexps: p = exp(l·inv_temp − lse)."""
+    lt = lt_ref[...].astype(jnp.float32) * inv_temp
+    ls = ls_ref[...].astype(jnp.float32) * inv_temp
+    p_t = jnp.exp(lt - lse_t_ref[...][:, None])
+    p_s = jnp.exp(ls - lse_s_ref[...][:, None])
+    dls_ref[...] = (g_ref[...][:, None] * (p_s - p_t) * inv_temp).astype(dls_ref.dtype)
+
+
+def kd_kl_bwd(teacher_logits, student_logits, lse_t, lse_s, g, *,
+              temperature: float = 1.0, block_rows: int = 256,
+              block_vocab: int = 1024, interpret: bool = False) -> jax.Array:
+    """Gradient wrt student logits, given saved row logsumexps."""
+    t, v = teacher_logits.shape
+    n_rblocks, n_vblocks = t // block_rows, v // block_vocab
+    kernel = functools.partial(_kd_kl_bwd_kernel, inv_temp=1.0 / temperature)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_rblocks, n_vblocks),
+        in_specs=[
+            pl.BlockSpec((block_rows, block_vocab), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_vocab), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+            pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+            pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_vocab), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, v), student_logits.dtype),
+        interpret=interpret,
+    )(teacher_logits, student_logits, lse_t, lse_s, g)
+
+
+def _row_lse_kernel(l_ref, out_ref, m_ref, s_ref, *, inv_temp, n_vblocks):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = l_ref[...].astype(jnp.float32) * inv_temp
+    m_prev, s_prev = m_ref[...], s_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(x, axis=-1))
+    s_ref[...] = s_prev * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(x - m_new[:, None]), axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_vblocks - 1)
+    def _fin():
+        out_ref[...] = m_ref[...] + jnp.log(s_ref[...])
+
+
+def row_logsumexp(logits: jax.Array, *, temperature: float = 1.0,
+                  block_rows: int = 256, block_vocab: int = 1024,
+                  interpret: bool = False) -> jax.Array:
+    """(T, V) -> (T,) logsumexp(l/temp) — used to rebuild probs in bwd."""
+    t, v = logits.shape
+    n_rblocks, n_vblocks = t // block_rows, v // block_vocab
+    kernel = functools.partial(_row_lse_kernel, inv_temp=1.0 / temperature,
+                               n_vblocks=n_vblocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_rblocks, n_vblocks),
+        in_specs=[pl.BlockSpec((block_rows, block_vocab), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_rows,), jnp.float32),
+                        pltpu.VMEM((block_rows,), jnp.float32)],
+        interpret=interpret,
+    )(logits)

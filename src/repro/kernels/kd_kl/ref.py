@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused KD-KL kernel.
+
+KL(p_T ‖ p_S) per row, with temperature: this is FedGKD's Eq.(3) inner term.
+The naive version materializes BOTH (T, V) probability tensors — exactly the
+HBM traffic the Pallas kernel eliminates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_kl_rowwise(teacher_logits: jax.Array, student_logits: jax.Array,
+                  temperature: float = 1.0) -> jax.Array:
+    """(T, V), (T, V) -> (T,) per-row KL(p_T ‖ p_S)·T²."""
+    t = temperature
+    lt = teacher_logits.astype(jnp.float32) / t
+    ls = student_logits.astype(jnp.float32) / t
+    p_t = jax.nn.softmax(lt, axis=-1)
+    return jnp.sum(p_t * (jax.nn.log_softmax(lt, -1)
+                          - jax.nn.log_softmax(ls, -1)), axis=-1) * (t * t)
+
+
+def kd_kl_grad_student(teacher_logits: jax.Array, student_logits: jax.Array,
+                       temperature: float = 1.0) -> jax.Array:
+    """d KL / d student_logits = (p_S − p_T)·T (per row)."""
+    t = temperature
+    p_t = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    p_s = jax.nn.softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    return (p_s - p_t) * t

@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.ops import ssd_scan  # noqa: F401
+from repro.kernels.ssd_scan import ref  # noqa: F401

@@ -1,0 +1,97 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+State-space duality structure per (batch·head, chunk):
+  intra-chunk   y_diag = (C·Bᵀ ∘ decay-mask) · (dt ∘ x)     — MXU matmuls
+  state carry   S ← S·exp(Σ dA) + Bᵀ·(dt·exp(tail-decay)·x) — (P, N) in VMEM
+  inter-chunk   y_off  = C·Sᵀ ∘ exp(cum-decay)
+
+The chunk axis is the innermost (sequential) grid dimension; the (P, N)
+state lives in VMEM scratch across chunk iterations — the TPU analogue of
+the paper-algorithm's SRAM-resident inter-chunk recurrence on GPU.
+
+Block shapes: chunk Q=128 rows × (P=64, N=128) — all operands ≤ 64 KB fp32;
+matmul dims (Q×N)·(N×Q), (Q×Q)·(Q×P) are 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q,)
+    a = a_ref[0, 0]                          # scalar decay rate (negative)
+    bm = b_ref[0].astype(jnp.float32)       # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)       # (Q, N)
+
+    da = dt * a                              # (Q,) negative increments
+    cums = jnp.cumsum(da)                    # within-chunk cumulative decay
+
+    # ---- intra-chunk (dual attention form)
+    seg = cums[:, None] - cums[None, :]      # (Q, Q): Σ_{j<k<=i} da_k
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    g = (cm @ bm.T) * decay                  # (Q, Q)
+    y = (g * dt[None, :]) @ x                # (Q, P)
+
+    # ---- contribution of the incoming state
+    state = state_ref[...]                   # (P, N)
+    y = y + (cm @ state.T) * jnp.exp(cums)[:, None]
+
+    # ---- state update for the next chunk
+    tail = jnp.exp(cums[-1] - cums)          # (Q,)
+    state_ref[...] = state * jnp.exp(cums[-1]) + \
+        ((dt * tail)[:, None] * x).T @ bm    # (P, N)
+
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, ...] = state_ref[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan_fwd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, *, chunk: int = 128,
+                 interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (BH, L, P); dt: (BH, L); a: (BH, 1); b/c: (BH, L, N).
+    Returns (y (BH, L, P), final_state (BH, P, N)).  L % chunk == 0."""
+    bh, l, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, p, n), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)

@@ -1,0 +1,83 @@
+"""Jit'd wrapper for the SSD scan kernel: (b,l,h,p) layout + custom VJP.
+
+Backward differentiates the chunked jnp oracle (identical math) via
+``jax.vjp`` — the fwd kernel is the prefill/train hot path; a fused bwd
+kernel is a listed follow-up in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as K
+from repro.models.ssm import ssd_chunked
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd(x, dt, a, b, c, chunk, interpret):
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    xf = x.transpose(0, 2, 1, 3).reshape(bsz * h, l, p).astype(jnp.float32)
+    dtf = dt.transpose(0, 2, 1).reshape(bsz * h, l).astype(jnp.float32)
+    af = jnp.tile(a.astype(jnp.float32), bsz).reshape(bsz * h, 1)
+    bf = jnp.repeat(b, rep, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(bsz * h, l, n).astype(jnp.float32)
+    cf = jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(bsz * h, l, n).astype(jnp.float32)
+    pad = (-l) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad)))
+        bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))
+        cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
+    y, state = K.ssd_scan_fwd(xf, dtf, af, bf, cf, chunk=chunk,
+                              interpret=interpret)
+    y = y[:, :l].reshape(bsz, h, l, p).transpose(0, 2, 1, 3)
+    state = state.reshape(bsz, h, p, n)
+    return y.astype(x.dtype), state
+
+
+def _fwd(x, dt, a, b, c, chunk, interpret):
+    out = _ssd(x, dt, a, b, c, chunk, interpret)
+    return out, (x, dt, a, b, c)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, dt, a, b, c = res
+    l = x.shape[1]
+    pad = (-l) % chunk
+    gy, gstate = g
+
+    def f(x, dt, a, b, c):
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, state = ssd_chunked(
+            x.astype(jnp.float32), dt.astype(jnp.float32), a,
+            b.astype(jnp.float32), c.astype(jnp.float32),
+            chunk=min(chunk, x.shape[1]))
+        return y[:, :l], state
+
+    _, vjp = jax.vjp(f, x, dt, a, b, c)
+    return vjp((gy, gstate))
+
+
+_ssd.defvjp(_fwd, _bwd)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 128,
+             interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Pallas SSD scan; same contract as models.ssm.ssd_chunked.
+
+    x: (B, L, H, P); dt: (B, L, H) (softplus'ed); a: (H,) negative;
+    b/c: (B, L, G, N).  Returns (y, final_state (B, H, P, N)).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _ssd(x, dt, a, b, c, chunk, interpret)

@@ -1,0 +1,4 @@
+"""Oracles for the SSD scan kernel: the O(L) sequential recurrence and the
+chunked dual form (both in repro.models.ssm, re-exported here so the kernel
+package is self-contained per the kernels/<name>+ops+ref convention)."""
+from repro.models.ssm import ssd_reference, ssd_chunked  # noqa: F401

@@ -1,0 +1,75 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run CLI (deliverable (e)).
+
+Lowers + compiles train/prefill/serve steps for every assigned
+(architecture × input shape) on the production meshes and records the
+roofline inputs.  Examples:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single \
+        --out results/dryrun_single.json
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-v3-671b \
+        --shape train_4k --kd cached_topk       # beyond-paper variant
+"""
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    from repro.configs import ALL_ARCHS, SHAPES
+    from repro.launch import dryrun_lib
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch × shape)")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--kd", choices=("none", "teacher", "cached_topk"),
+                    default="teacher",
+                    help="train-step KD mode (teacher = paper-faithful)")
+    ap.add_argument("--fsdp", choices=("auto", "on", "off"), default="auto")
+    ap.add_argument("--probe", action="store_true",
+                    help="exact roofline terms via unrolled depth probes")
+    ap.add_argument("--out", default=None, help="append JSON lines here")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+
+    results = []
+    n_fail = 0
+    for multi in meshes:
+        for arch, shape in pairs:
+            r = dryrun_lib.run_dryrun(arch, shape, multi_pod=multi,
+                                      kd_mode=args.kd, fsdp=fsdp,
+                                      probe=args.probe)
+            print(dryrun_lib.result_line(r), flush=True)
+            if r.memory:
+                print(f"    memory_analysis: {r.memory}", flush=True)
+            results.append(r.to_json())
+            if not r.ok and not r.error.startswith("SKIP"):
+                n_fail += 1
+
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "a") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+    print(f"\n{len(results)} runs, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,349 @@
+"""Dry-run machinery: lower + compile every (arch × shape × mesh) and emit
+memory/cost/collective statistics.  Import ONLY after jax device init is
+configured (launch/dryrun.py sets XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs import SHAPES, get_config, input_specs
+from repro.launch import hlo_stats, roofline, steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import sgd
+
+# long_500k applicability (DESIGN.md §Arch-applicability): sub-quadratic
+# backbones only; phi4 runs it via the sliding-window long_variant.
+LONG_CTX_ARCHS = {"mamba2-2.7b", "zamba2-1.2b", "mixtral-8x7b"}
+LONG_CTX_SWA_OVERRIDE = {"phi4-mini-3.8b": 4096}
+
+# FSDP (shard params over "data" too) for archs whose TP-only per-chip
+# weights exceed a v5e budget.
+FSDP_BYTES_THRESHOLD = 2 << 30
+
+
+@dataclasses.dataclass
+class DryRunResult:
+    arch: str
+    shape: str
+    mesh: str
+    kd_mode: str
+    ok: bool
+    seconds: float
+    error: str = ""
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_summary: str = ""
+    memory: dict = dataclasses.field(default_factory=dict)
+    report: Optional[dict] = None
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+def resolve_config(arch: str, shape_name: str) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and arch in LONG_CTX_SWA_OVERRIDE:
+        cfg = cfg.replace(attn_window=LONG_CTX_SWA_OVERRIDE[arch])
+    return cfg
+
+
+def shape_supported(arch: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name != "long_500k":
+        return True, ""
+    if arch in LONG_CTX_ARCHS or arch in LONG_CTX_SWA_OVERRIDE:
+        return True, ""
+    return False, ("full-attention arch: 524k-token KV decode is quadratic-"
+                   "class; skipped per DESIGN.md §Arch-applicability")
+
+
+def needs_fsdp(cfg: ModelConfig, mesh) -> bool:
+    model_par = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    per_chip = cfg.param_count() * 2 / model_par   # bf16
+    return per_chip > FSDP_BYTES_THRESHOLD
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_lowering(arch: str, shape_name: str, mesh, *, kd_mode: str = "teacher",
+                   fsdp: Optional[bool] = None, donate: bool = True,
+                   extra_cfg: Optional[dict] = None,
+                   prefill_last_only: bool = False):
+    """Construct the jitted step for (arch, shape) and lower it on ``mesh``.
+
+    Lowering happens under ``use_mesh`` so that bare-PartitionSpec
+    ``with_sharding_constraint`` calls inside the model (MoE dispatch
+    constraints, §Perf) resolve against the production mesh.
+    """
+    with mesh:
+        return _build_lowering(arch, shape_name, mesh, kd_mode=kd_mode,
+                               fsdp=fsdp, donate=donate, extra_cfg=extra_cfg,
+                               prefill_last_only=prefill_last_only)
+
+
+def _build_lowering(arch: str, shape_name: str, mesh, *, kd_mode: str,
+                    fsdp: Optional[bool], donate: bool,
+                    extra_cfg: Optional[dict], prefill_last_only: bool = False):
+    cfg = resolve_config(arch, shape_name)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    shape = SHAPES[shape_name]
+    fsdp = needs_fsdp(cfg, mesh) if fsdp is None else fsdp
+
+    param_shapes = jax.eval_shape(
+        lambda: transformer.init(jax.random.PRNGKey(0), cfg))
+    pspecs = sh.specs_with_mesh(param_shapes, cfg, mesh, fsdp=fsdp)
+    psharding = _named(mesh, pspecs)
+
+    batch = input_specs(cfg, shape_name)
+
+    if shape.mode == "decode":
+        step = steps.make_serve_step(cfg)
+        cache_shapes = batch["cache"]
+        cspecs = sh.fit_specs(sh.cache_specs(cache_shapes, mesh),
+                              cache_shapes, mesh)
+        csharding = _named(mesh, cspecs)
+        dp = sh.data_axes(mesh)
+        dp = dp[0] if len(dp) == 1 else dp
+        tok_spec = sh.fit_specs(P(dp, None), batch["tokens"], mesh)
+        tok_sharding = NamedSharding(mesh, tok_spec)
+        args = (param_shapes, cache_shapes, batch["tokens"])
+        in_sh = (psharding, csharding, tok_sharding)
+        if "enc_out" in batch:
+            args += (batch["enc_out"],)
+            enc_spec = sh.fit_specs(P(dp, None, None), batch["enc_out"], mesh)
+            in_sh += (NamedSharding(mesh, enc_spec),)
+        # out_shardings left to XLA: pinning the cache output replicated on
+        # "model" forces a full-cache all-gather each step (measured: 68 GB
+        # for phi4/decode_32k) — the propagated sharding keeps the cache
+        # partitioned exactly as the attention computation consumed it.
+        jitted = jax.jit(step, in_shardings=in_sh,
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(*args)
+        return cfg, lowered, {"mode": "decode", "fsdp": fsdp}
+
+    if shape.mode == "prefill":
+        step = steps.make_prefill_step(cfg, last_only=prefill_last_only)
+        bspecs = sh.fit_specs(sh.batch_specs(batch, mesh), batch, mesh)
+        bsharding = _named(mesh, bspecs)
+        dp = sh.data_axes(mesh)
+        dp = dp[0] if len(dp) == 1 else dp
+        out_shape = jax.eval_shape(step, param_shapes, batch)
+        out_spec = sh.fit_specs(P(dp, None, "model"), out_shape, mesh)
+        jitted = jax.jit(step, in_shardings=(psharding, bsharding),
+                         out_shardings=NamedSharding(mesh, out_spec))
+        lowered = jitted.lower(param_shapes, batch)
+        return cfg, lowered, {"mode": "prefill", "fsdp": fsdp}
+
+    # train
+    opt = sgd(momentum=0.9, weight_decay=1e-5)
+    step = steps.make_train_step(cfg, opt, kd_mode=kd_mode)
+    opt_shapes = jax.eval_shape(opt.init, param_shapes)
+    ospecs = _opt_specs(opt_shapes, pspecs)
+    osharding = _named(mesh, ospecs)
+    if kd_mode == "teacher":
+        teacher_shapes, tsharding = param_shapes, psharding
+    else:
+        teacher_shapes, tsharding = (), ()
+    if kd_mode == "cached_topk":
+        k = 64
+        b, s = batch["labels"].shape
+        batch = dict(batch)
+        batch["teacher_topk_vals"] = jax.ShapeDtypeStruct((b, s, k), jnp.bfloat16)
+        batch["teacher_topk_idx"] = jax.ShapeDtypeStruct((b, s, k), jnp.int32)
+    bspecs = sh.fit_specs(sh.batch_specs(batch, mesh), batch, mesh)
+    bsharding = _named(mesh, bspecs)
+    metric_sh = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        step,
+        in_shardings=(psharding, tsharding, osharding, bsharding),
+        out_shardings=(psharding, osharding,
+                       jax.tree_util.tree_map(lambda _: metric_sh,
+                                              _metric_template(cfg, kd_mode))),
+        donate_argnums=(0, 2) if donate else ())
+    lowered = jitted.lower(param_shapes, teacher_shapes, opt_shapes, batch)
+    return cfg, lowered, {"mode": "train", "fsdp": fsdp}
+
+
+def _metric_template(cfg, kd_mode):
+    m = {"ce": 0.0, "aux": 0.0, "loss": 0.0}
+    if cfg.mtp_depth:
+        m["mtp_ce"] = 0.0
+    if kd_mode in ("teacher", "cached_topk"):
+        m["kd"] = 0.0
+    return m
+
+
+def _opt_specs(opt_shapes, pspecs):
+    """Optimizer state shards like the params (SGD momentum mirrors the param
+    tree exactly; empty state -> empty specs)."""
+    flat_o = jax.tree_util.tree_leaves(opt_shapes)
+    flat_p = jax.tree_util.tree_leaves(pspecs,
+                                       is_leaf=lambda x: isinstance(x, P))
+    if len(flat_o) == len(flat_p):
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(opt_shapes), flat_p)
+    return jax.tree_util.tree_map(lambda _: P(), opt_shapes)
+
+
+def _probe_depths(cfg: ModelConfig) -> tuple[int, int]:
+    """Two depths for the affine cost extrapolation.  Constraints: both >
+    first_k_dense (so the MoE segment exists) and multiples of the hybrid
+    shared-attn period (so shared-block count scales linearly)."""
+    if cfg.shared_attn_period:
+        p = cfg.shared_attn_period
+        return p, 2 * p
+    if cfg.first_k_dense:
+        return cfg.first_k_dense + 2, cfg.first_k_dense + 4
+    return 2, 4
+
+
+def _probe_overrides(cfg: ModelConfig, n_layers: int) -> dict:
+    ov: dict = {"n_layers": n_layers, "scan_layers": False}
+    if cfg.moe is not None:
+        ov["moe"] = cfg.moe._replace(batched_groups=True)
+    return ov
+
+
+def probe_costs(arch: str, shape_name: str, mesh, *, kd_mode: str = "teacher",
+                fsdp: Optional[bool] = None,
+                extra_cfg: Optional[dict] = None,
+                prefill_last_only: bool = False) -> dict:
+    """Exact roofline inputs via two UNROLLED reduced-depth lowerings.
+
+    XLA's cost_analysis counts a while-loop body once, so the scan-over-
+    layers program under-reports FLOPs/bytes/collectives by ~n_layers ×.
+    Total cost is affine in depth L (fixed first_k_dense / shared period),
+    so two unrolled probes at depths (a, b) give the exact per-layer slope;
+    extrapolating to the full L recovers the true per-device totals.
+    """
+    cfg = resolve_config(arch, shape_name)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    a, b = _probe_depths(cfg)
+
+    def measure(n_layers: int):
+        ov = _probe_overrides(cfg, n_layers)
+        if extra_cfg:
+            ov = {**extra_cfg, **ov}
+            if "moe" in extra_cfg and cfg.moe is not None:
+                ov["moe"] = extra_cfg["moe"]._replace(batched_groups=True)
+        _, lowered, _ = build_lowering(arch, shape_name, mesh,
+                                       kd_mode=kd_mode, fsdp=fsdp,
+                                       extra_cfg=ov,
+                                       prefill_last_only=prefill_last_only)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        cstats = hlo_stats.collective_stats(compiled.as_text())
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)),
+                float(cstats.total_bytes))
+
+    fa = measure(a)
+    fb = measure(b)
+    L = cfg.n_layers
+    out = {}
+    for key, va, vb in zip(("flops", "bytes", "collective_bytes"), fa, fb):
+        slope = (vb - va) / (b - a)
+        base = va - slope * a
+        out[key] = base + slope * L
+    out["probe_depths"] = (a, b)
+    return out
+
+
+def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+               kd_mode: str = "teacher", fsdp: Optional[bool] = None,
+               extra_cfg: Optional[dict] = None, probe: bool = False,
+               prefill_last_only: bool = False,
+               compute_roofline: bool = True) -> DryRunResult:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, why = shape_supported(arch, shape_name)
+    if not ok:
+        return DryRunResult(arch, shape_name, mesh_name, kd_mode, False, 0.0,
+                            error="SKIP: " + why)
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    try:
+        cfg, lowered, info = build_lowering(
+            arch, shape_name, mesh, kd_mode=kd_mode, fsdp=fsdp,
+            extra_cfg=extra_cfg, prefill_last_only=prefill_last_only)
+        compiled = lowered.compile()
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        return DryRunResult(arch, shape_name, mesh_name, kd_mode, False,
+                            time.time() - t0,
+                            error=f"{type(e).__name__}: {e}"[:2000])
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    cstats = hlo_stats.collective_stats(hlo)
+    coll_bytes = float(cstats.total_bytes)
+    if probe:
+        try:
+            pc = probe_costs(arch, shape_name, mesh, kd_mode=kd_mode,
+                             fsdp=fsdp, extra_cfg=extra_cfg,
+                             prefill_last_only=prefill_last_only)
+            flops, bytes_acc = pc["flops"], pc["bytes"]
+            coll_bytes = pc["collective_bytes"]
+        except Exception as e:  # noqa: BLE001 — keep the uncorrected numbers
+            print(f"    probe failed ({type(e).__name__}: {e}); "
+                  "using scan-body costs", flush=True)
+    mem = compiled.memory_analysis()
+    memd = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            memd[k] = int(v)
+
+    shape = SHAPES[shape_name]
+    if shape.mode == "train":
+        n_tokens = shape.global_batch * shape.seq_len
+        mf = roofline.model_flops(cfg, n_tokens, "train",
+                                  with_teacher=(kd_mode == "teacher"),
+                                  mtp=bool(cfg.mtp_depth))
+    elif shape.mode == "prefill":
+        mf = roofline.model_flops(cfg, shape.global_batch * shape.seq_len,
+                                  "prefill")
+    else:
+        mf = roofline.model_flops(cfg, shape.global_batch * 1, "decode")
+
+    rep = roofline.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=bytes_acc,
+        collective_bytes=coll_bytes, model_flops=mf)
+
+    return DryRunResult(
+        arch, shape_name, mesh_name, kd_mode, True, time.time() - t0,
+        flops=flops, bytes_accessed=bytes_acc,
+        collective_bytes=coll_bytes,
+        collective_summary=cstats.summary(), memory=memd,
+        report=rep.row() if compute_roofline else None)
+
+
+def result_line(r: DryRunResult) -> str:
+    if not r.ok:
+        return f"[{r.mesh}] {r.arch} × {r.shape} ({r.kd_mode}): {r.error}"
+    rep = r.report or {}
+    return (f"[{r.mesh}] {r.arch} × {r.shape} ({r.kd_mode}): OK {r.seconds:.1f}s "
+            f"flops/dev={r.flops:.3e} bytes/dev={r.bytes_accessed:.3e} "
+            f"coll/dev={r.collective_bytes:.3e} dominant={rep.get('dominant','-')} "
+            f"[{r.collective_summary}]")

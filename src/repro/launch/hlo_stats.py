@@ -1,0 +1,109 @@
+"""Parse compiled (post-SPMD) HLO text for roofline inputs.
+
+``collective_bytes`` sums the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction in
+the per-device program (SPMD HLO is already per-device, so the collective
+term is bytes / link_bw without a further chip division).
+
+The HLO text grammar we rely on:  ``%name = <shape> opcode(%op1, %op2, ...)``
+with shapes like ``bf16[2,4096,512]{2,1,0}`` or tuples
+``(f32[8,128], f32[8,128])``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[a-z0-9\[\],{}\s/_#*]+\)?)\s+"
+    r"([\w\-]+)(?:\.\d+)?\(", re.ASCII)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}: n={self.count_by_kind[k]} bytes={v:,}"
+                 for k, v in sorted(self.bytes_by_kind.items())]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes per collective kind over the module text."""
+    # first pass: map instruction name -> result shape
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2).strip()
+
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_shape, opcode = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode.startswith(c + "-start") or \
+                    opcode.startswith(c):
+                kind = c
+                break
+        if kind is None or opcode.endswith("-done"):
+            continue
+        # operand names inside (...) — first level args
+        args = line[line.index("(") + 1:]
+        ops = re.findall(r"%([\w.\-]+)", args)
+        total = 0
+        for op in ops:
+            if op in shapes:
+                total += shape_bytes(shapes[op])
+        if total == 0:
+            # fallback: use the result shape
+            total = shape_bytes(result_shape)
+        bytes_by[kind] += total
+        count_by[kind] += 1
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> list[tuple[str, int]]:
+    """Opcode frequency — handy for spotting remat-duplicated fusions."""
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            counts[m.group(3)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,23 @@
+"""Production meshes (TPU v5e pods).
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever host devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,84 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / peak_FLOPs            [per-device program]
+    memory term     = HLO_bytes / HBM_bw
+    collective term = collective_bytes / link_bw
+
+cost_analysis()/the SPMD HLO are per-device, so no further /chips — the
+formulas in the assignment divide global quantities by chips, which is the
+same number.  MODEL_FLOPS uses 6·N·D (dense) or 6·N_active·D (MoE) with D =
+global tokens per step; its per-device share is MODEL_FLOPS/chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                 # per-device
+    hlo_bytes: float                 # per-device
+    collective_bytes: float          # per-device
+    model_flops: float               # global 6·N·D (or 6·N_active·D)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs · chips) — remat/redundancy indicator."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(cfg, n_tokens: int, mode: str, *, with_teacher: bool = False,
+                mtp: bool = False) -> float:
+    """6·N·D training FLOPs (2·N·D forward-only for prefill/decode).
+
+    N = active params; teacher forward adds +2·N·D when enabled."""
+    n_active = cfg.active_param_count()
+    mult = 6.0 if mode == "train" else 2.0
+    total = mult * n_active * n_tokens
+    if with_teacher:
+        total += 2.0 * n_active * n_tokens
+    if mtp and cfg.mtp_depth:
+        # one extra block + head forward+backward per token (small)
+        total *= 1.05
+    return total

@@ -1,0 +1,201 @@
+"""Train / serve step factories shared by the dry-run and the live drivers.
+
+Federated mapping onto pods (DESIGN.md §4): within a round, a pod runs ONE
+client's local steps — the "data" axis is within-client batch parallelism,
+"model" is tensor parallel.  On the multi-pod mesh the "pod" axis carries
+TWO clients training concurrently; ``make_aggregate_step`` is the server's
+weighted parameter average (one psum over "pod").
+
+``make_train_step`` builds the FedGKD local objective (Eq. 4):
+
+    L = CE(student(x), y) + aux(MoE) [+ λ·CE_MTP] + (γ/2)·KL(teacher ‖ student)
+
+kd_mode:
+    "none"         FedAvg baseline local step (no KD term)
+    "teacher"      paper-faithful: full teacher forward each step
+    "cached_topk"  beyond-paper: per-batch cached top-K teacher logits
+                   (teacher forward amortized out of the step; §Perf)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distillation as D
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer, apply_updates, sgd
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def lm_cross_entropy(logits: jax.Array, labels: jax.Array,
+                     text_offset: int = 0) -> jax.Array:
+    """Next-token CE. logits (B, S_total, V); labels (B, S_text) aligned to
+    the last S_text positions (frontend prefix positions carry no loss)."""
+    if text_offset:
+        logits = logits[:, text_offset:]
+    return D.cross_entropy(logits, labels)
+
+
+def kd_topk_kl(topk_vals: jax.Array, topk_idx: jax.Array,
+               student_logits: jax.Array) -> jax.Array:
+    """Sparse KD: teacher distribution restricted+renormalized to its top-K.
+
+    topk_vals/idx: (..., K) teacher logits and vocab ids;
+    student_logits: (..., V).  Returns per-position KL(p̂_T ‖ p_S)."""
+    p_t = jax.nn.softmax(topk_vals.astype(jnp.float32), axis=-1)
+    logp_t = jax.nn.log_softmax(topk_vals.astype(jnp.float32), axis=-1)
+    lse_s = jax.nn.logsumexp(student_logits.astype(jnp.float32), axis=-1)
+    ls_at = jnp.take_along_axis(student_logits.astype(jnp.float32),
+                                topk_idx, axis=-1)
+    logp_s = ls_at - lse_s[..., None]
+    return jnp.sum(p_t * (logp_t - logp_s), axis=-1)
+
+
+def _forward(params, cfg: ModelConfig, batch: dict):
+    kw = {}
+    if cfg.enc_layers:
+        kw["enc_out"] = transformer.encode(params, cfg, batch["enc_embeddings"])
+    elif cfg.frontend:
+        kw["prefix_embeddings"] = batch["frontend_embeddings"]
+    logits, aux = transformer.forward(params, cfg, batch["tokens"], **kw)
+    return logits, aux
+
+
+def make_loss_fn(cfg: ModelConfig, *, kd_mode: str = "teacher",
+                 gamma: float = 0.2, kd_temperature: float = 1.0,
+                 mtp_weight: float = 0.3, use_pallas_kd: bool = False):
+    """loss(params, teacher_params, batch) -> (loss, metrics)."""
+    text_offset = 0
+    if cfg.frontend and not cfg.enc_layers:
+        from repro.models import frontends
+        text_offset = cfg.frontend_seq or frontends.frontend_seq(cfg.frontend)
+
+    def loss_fn(params, teacher_params, batch):
+        logits, aux = _forward(params, cfg, batch)
+        ce = lm_cross_entropy(logits, batch["labels"], text_offset)
+        loss = ce + aux
+        metrics = {"ce": ce, "aux": aux}
+
+        if cfg.mtp_depth:
+            h, _ = transformer.hidden_states(
+                params, cfg, batch["tokens"],
+                batch.get("frontend_embeddings") if cfg.frontend and not cfg.enc_layers else None,
+            )
+            if text_offset:
+                h = h[:, text_offset:]
+            mtp = transformer.mtp_logits(params, cfg, h, batch["labels"])
+            mtp_targets = jnp.concatenate(
+                [batch["labels"][:, 1:], -jnp.ones_like(batch["labels"][:, :1])], 1)
+            mtp_ce = D.cross_entropy(mtp, mtp_targets)
+            loss = loss + mtp_weight * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+
+        if kd_mode == "teacher":
+            t_logits, _ = _forward(jax.lax.stop_gradient(teacher_params),
+                                   cfg, batch)
+            t_logits = jax.lax.stop_gradient(t_logits)
+            if use_pallas_kd:
+                from repro.kernels.kd_kl import kd_kl_loss
+                kl = kd_kl_loss(t_logits.reshape(-1, t_logits.shape[-1]),
+                                logits.reshape(-1, logits.shape[-1]),
+                                temperature=kd_temperature)
+            else:
+                kl = D.kl_divergence(t_logits, logits, kd_temperature)
+            kd = 0.5 * gamma * jnp.mean(kl)
+            loss = loss + kd
+            metrics["kd"] = kd
+        elif kd_mode == "cached_topk":
+            if text_offset:
+                s_logits = logits[:, text_offset:]
+            else:
+                s_logits = logits
+            kl = kd_topk_kl(batch["teacher_topk_vals"],
+                            batch["teacher_topk_idx"], s_logits)
+            kd = 0.5 * gamma * jnp.mean(kl)
+            loss = loss + kd
+            metrics["kd"] = kd
+        return loss, metrics
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt: Optional[Optimizer] = None, *,
+                    kd_mode: str = "teacher", gamma: float = 0.2,
+                    kd_temperature: float = 1.0, lr: float = 0.05,
+                    mtp_weight: float = 0.3, use_pallas_kd: bool = False):
+    """Returns step(params, teacher_params, opt_state, batch) ->
+    (params, opt_state, metrics).  ``teacher_params=()`` when kd_mode!="teacher"."""
+    opt = opt or sgd(momentum=0.9, weight_decay=1e-5)
+    loss_fn = make_loss_fn(cfg, kd_mode=kd_mode, gamma=gamma,
+                           kd_temperature=kd_temperature,
+                           mtp_weight=mtp_weight, use_pallas_kd=use_pallas_kd)
+
+    def step(params, teacher_params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, teacher_params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, *, sample: bool = False):
+    """serve_step(params, cache, tokens [, enc_out]) -> (logits, cache)."""
+
+    def step(params, cache, tokens, enc_out=None):
+        logits, cache = transformer.decode_step(params, cfg, tokens, cache,
+                                                enc_out=enc_out)
+        return logits, cache
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, *, last_only: bool = False):
+    """prefill(params, batch) -> logits — inference forward, no grads.
+
+    ``last_only`` emits only the final position's logits (what a serving
+    stack actually needs before decode) — avoids writing the full
+    (B, S, V) tensor, a §Perf memory/collective win.
+    """
+
+    def step(params, batch):
+        if last_only:
+            h, _ = transformer.hidden_states(
+                params, cfg, batch["tokens"],
+                batch.get("frontend_embeddings"),
+                transformer.encode(params, cfg, batch["enc_embeddings"])
+                if cfg.enc_layers else None)
+            return transformer.logits_from_hidden(params, cfg, h[:, -1:])
+        logits, _ = _forward(params, cfg, batch)
+        return logits
+
+    return step
+
+
+def make_aggregate_step(axis: str = "pod"):
+    """Server aggregation: weighted mean of client params over ``axis``
+    (Alg. 1 line 14 as one psum).  Run under shard_map with client-sharded
+    param replicas."""
+
+    def aggregate(params, weight):
+        total = jax.lax.psum(weight, axis)
+
+        def avg(p):
+            return jax.lax.psum(p * (weight / total), axis).astype(p.dtype)
+
+        return jax.tree_util.tree_map(avg, params)
+
+    return aggregate

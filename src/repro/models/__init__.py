@@ -1,0 +1,8 @@
+"""Model substrate: layers, attention, MoE, SSM, hybrid, enc-dec, ResNet.
+
+Everything is pure JAX (no flax): a model is a pair of functions
+``init(rng, cfg) -> params`` and ``apply(params, cfg, batch, ...) -> logits``
+over plain-dict pytrees, plus decode-path helpers that carry explicit
+KV/SSM caches.
+"""
+from repro.models import layers, attention, moe, ssm, transformer, resnet, frontends  # noqa: F401

@@ -1,0 +1,329 @@
+"""Attention: GQA/MHA, MLA (DeepSeek), sliding-window, and KV-cache decode.
+
+Two execution paths:
+  * ``dot_product_attention`` — pure-jnp reference used on CPU and as the
+    oracle for the Pallas flash kernel.
+  * the Pallas flash kernel (repro.kernels.flash_attention) — selected with
+    ``cfg.use_pallas`` on TPU targets.
+
+Cache layouts
+  GQA : k/v  (batch, max_len, kv_heads, head_dim); SWA uses a ring buffer of
+        ``window`` slots indexed modulo window.
+  MLA : compressed c_kv (batch, max_len, kv_lora_rank) + rope key
+        (batch, max_len, qk_rope_dim) — the memory-saving layout from
+        DeepSeek-V2/V3 adapted to a jnp cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Params, apply_rope, dense, dense_init
+
+NEG_INF = -2.0 ** 30  # large-negative that is safe in bf16 accumulation
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_len: int, kv_len: int, *, window: int | None = None,
+                q_offset: int | jax.Array = 0) -> jax.Array:
+    """(q_len, kv_len) boolean mask. True = attend.
+
+    ``q_offset`` is the absolute position of query row 0 (for decode /
+    chunked prefill).  ``window`` enables sliding-window attention: query at
+    absolute position p attends to keys in [p-window+1, p].
+    """
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def _constrain(x: jax.Array, spec) -> jax.Array:
+    """Best-effort sharding constraint (no-op outside a mesh context)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def dot_product_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                          mask: jax.Array | None, *, scale: float | None = None,
+                          logits_soft_cap: float | None = None,
+                          shard_spec: tuple | None = None) -> jax.Array:
+    """q: (B, Sq, Hq, D), k/v: (B, Skv, Hkv, D) with Hq % Hkv == 0 (GQA).
+
+    Returns (B, Sq, Hq, D).  mask: broadcastable to (B, Hq, Sq, Skv) or
+    (Sq, Skv).  ``shard_spec=(dp_axis, sp_axis)`` constrains the (B, Hkv, G,
+    Sq, Skv) score tensor to batch×sequence-parallel sharding — prevents the
+    SPMD partitioner from splitting the head_dim CONTRACTION across the
+    model axis (which materializes and all-reduces the full S×S scores; see
+    EXPERIMENTS.md §Perf pair C).
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    # accumulate in f32 on the MXU without materializing f32 copies of the
+    # (possibly huge) KV cache — crucial for the decode-path memory roofline
+    qg = q.reshape(b, sq, hkv, group, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if shard_spec is not None:
+        dp, sp = shard_spec
+        logits = _constrain(logits, (dp, None, None, sp, None))
+    if logits_soft_cap is not None:
+        logits = logits_soft_cap * jnp.tanh(logits / logits_soft_cap)
+    if mask is not None:
+        while mask.ndim < 5:
+            mask = mask[None]
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if shard_spec is not None:
+        probs = _constrain(probs, (shard_spec[0], None, None, shard_spec[1], None))
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_init(key: jax.Array, d_model: int, n_heads: int, n_kv_heads: int,
+             head_dim: int, dtype=jnp.float32, qkv_bias: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    mk = layers.dense_bias_init if qkv_bias else dense_init
+    return {
+        "wq": mk(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": mk(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": mk(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+
+
+def gqa_project_qkv(params: Params, x: jax.Array, n_heads: int, n_kv_heads: int,
+                    head_dim: int, positions: jax.Array,
+                    rope_theta: float = 10000.0, use_rope: bool = True):
+    b, s, _ = x.shape
+    q = dense(params["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = dense(params["wk"], x).reshape(b, s, n_kv_heads, head_dim)
+    v = dense(params["wv"], x).reshape(b, s, n_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def jnp_attention(q, k, v, *, causal: bool = True,
+                  window: int | None = None,
+                  shard_spec: tuple | None = None) -> jax.Array:
+    """Reference attention with structured masking (adapter over
+    dot_product_attention; same signature family as the Pallas kernel)."""
+    mask = causal_mask(q.shape[1], k.shape[1], window=window) if causal else None
+    return dot_product_attention(q, k, v, mask, shard_spec=shard_spec)
+
+
+def gqa_attention(params: Params, x: jax.Array, *, n_heads: int,
+                  n_kv_heads: int, head_dim: int, positions: jax.Array,
+                  window: int | None = None, rope_theta: float = 10000.0,
+                  use_rope: bool = True, attn_impl=None) -> jax.Array:
+    """Full (training / prefill) self-attention.  x: (B, S, D)."""
+    b, s, _ = x.shape
+    q, k, v = gqa_project_qkv(params, x, n_heads, n_kv_heads, head_dim,
+                              positions, rope_theta, use_rope)
+    impl = attn_impl if attn_impl is not None else jnp_attention
+    out = impl(q, k, v, causal=True, window=window)
+    return dense(params["wo"], out.reshape(b, s, n_heads * head_dim))
+
+
+class KVCache(NamedTuple):
+    """Decode-time KV cache.  For SWA this is a ring buffer of ``window``."""
+    k: jax.Array          # (B, max_len, Hkv, D)
+    v: jax.Array          # (B, max_len, Hkv, D)
+    length: jax.Array     # () int32 — tokens written so far (absolute)
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[1]
+
+
+def kv_cache_init(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_len, n_kv_heads, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def kv_cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                    *, ring: bool = False) -> KVCache:
+    """Append S_new tokens (decode S_new==1).  ``ring`` wraps modulo max_len
+    (sliding-window cache)."""
+    s_new = k_new.shape[1]
+    pos = cache.length
+    if ring:
+        idx = (pos + jnp.arange(s_new)) % cache.max_len
+        k = cache.k.at[:, idx].set(k_new.astype(cache.k.dtype))
+        v = cache.v.at[:, idx].set(v_new.astype(cache.v.dtype))
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), pos, axis=1)
+    return KVCache(k, v, pos + s_new)
+
+
+def gqa_decode_step(params: Params, x: jax.Array, cache: KVCache, *,
+                    n_heads: int, n_kv_heads: int, head_dim: int,
+                    window: int | None = None, rope_theta: float = 10000.0,
+                    use_rope: bool = True) -> tuple[jax.Array, KVCache]:
+    """One-token decode.  x: (B, 1, D).  Attends over the cache + new token."""
+    b, s, _ = x.shape
+    positions = cache.length + jnp.arange(s)[None, :]  # (1|B, S) absolute
+    positions = jnp.broadcast_to(positions, (b, s))
+    q, k_new, v_new = gqa_project_qkv(params, x, n_heads, n_kv_heads, head_dim,
+                                      positions, rope_theta, use_rope)
+    cache = kv_cache_update(cache, k_new, v_new, ring=window is not None)
+    # Validity mask over cache slots.
+    slot = jnp.arange(cache.max_len)[None, :]
+    if window is not None:
+        # ring buffer: every written slot is within-window by construction
+        valid = slot < jnp.minimum(cache.length, cache.max_len)
+    else:
+        valid = slot < cache.length
+    mask = valid[:, None, None, None, :]  # (1,1,1,1,max_len) -> (B,H,G,S,K)
+    out = dot_product_attention(q, cache.k, cache.v, mask)
+    y = dense(params["wo"], out.reshape(b, s, n_heads * head_dim))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention, DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+class MLAConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+def mla_init(key: jax.Array, cfg: MLAConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        # query: down-proj -> norm -> up-proj to (nope + rope) dims
+        "wq_a": dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dtype),
+        "q_norm": layers.rmsnorm_init(cfg.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, h * (dn + dr), dtype),
+        # kv: joint down-proj to compressed latent + shared rope key
+        "wkv_a": dense_init(ks[2], cfg.d_model, cfg.kv_lora_rank + dr, dtype),
+        "kv_norm": layers.rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wkv_b": dense_init(ks[3], cfg.kv_lora_rank, h * (dn + dv), dtype),
+        "wo": dense_init(ks[4], h * dv, cfg.d_model, dtype),
+    }
+
+
+def _mla_qkv(params: Params, x: jax.Array, cfg: MLAConfig, positions: jax.Array):
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = dense(params["wq_b"], layers.rmsnorm(params["q_norm"], dense(params["wq_a"], x)))
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions)
+    kv_a = dense(params["wkv_a"], x)                       # (B,S,rank+dr)
+    c_kv, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    c_kv = layers.rmsnorm(params["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[..., None, :], positions)   # single shared rope head
+    return q_nope, q_rope, c_kv, k_rope[..., 0, :]
+
+
+def mla_attention(params: Params, x: jax.Array, cfg: MLAConfig,
+                  positions: jax.Array) -> jax.Array:
+    """Training/prefill MLA; materializes per-head K/V from the latent."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions)
+    kv = dense(params["wkv_b"], c_kv).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    mask = causal_mask(s, s)[None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return dense(params["wo"], out.reshape(b, s, h * dv).astype(x.dtype))
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, max_len, kv_lora_rank)
+    k_rope: jax.Array  # (B, max_len, qk_rope_dim)
+    length: jax.Array
+
+    @property
+    def max_len(self) -> int:
+        return self.c_kv.shape[1]
+
+
+def mla_cache_init(batch: int, max_len: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                    jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+                    jnp.zeros((), jnp.int32))
+
+
+def mla_decode_step(params: Params, x: jax.Array, cache: MLACache,
+                    cfg: MLAConfig) -> tuple[jax.Array, MLACache]:
+    """One-token MLA decode against the *compressed* cache (absorbed form):
+
+    attention logits are computed in the latent space by absorbing wkv_b's
+    K-half into the query — the cache stays (rank + rope) wide, which is the
+    whole point of MLA's memory saving.
+    """
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.broadcast_to(cache.length + jnp.arange(s)[None, :], (b, s))
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, x, cfg, positions)
+    pos = cache.length
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_kv_new.astype(cache.c_kv.dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope_new.astype(cache.k_rope.dtype), pos, axis=1)
+    new_cache = MLACache(c_kv, k_rope, pos + s)
+
+    wkv_b = params["wkv_b"]["w"].reshape(cfg.kv_lora_rank, h, dn + dv)
+    w_k = wkv_b[..., :dn]   # (rank, h, dn)
+    w_v = wkv_b[..., dn:]   # (rank, h, dv)
+    # Absorb: q_latent[b,s,h,rank] = q_nope . w_k
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_k,
+                       preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (jnp.einsum("bshr,bkr->bhsk", q_lat.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,bkd->bhsk", q_rope.astype(k_rope.dtype),
+                           k_rope, preferred_element_type=jnp.float32)) * scale
+    valid = (jnp.arange(new_cache.max_len)[None, :] < new_cache.length)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out_lat = jnp.einsum("bhsk,bkr->bshr", probs.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)
+    out = jnp.einsum("bshr,rhd->bshd", out_lat.astype(w_v.dtype), w_v,
+                     preferred_element_type=jnp.float32)
+    y = dense(params["wo"], out.reshape(b, s, h * dv).astype(x.dtype))
+    return y, new_cache

@@ -1,0 +1,172 @@
+"""ModelConfig — the single architecture description consumed by the stack.
+
+One dataclass covers all six assigned architecture families (dense, MoE,
+SSM, hybrid, enc-dec, VLM/audio-backbone).  ``segments()`` linearizes the
+layer stack into homogeneous runs that ``transformer.py`` scans over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.attention import MLAConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssm import SSMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # attention
+    attn_type: str = "gqa"         # gqa | mla | none
+    attn_window: Optional[int] = None   # sliding-window size (Mixtral / long-ctx)
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    use_rope: bool = True
+
+    # MoE
+    moe: Optional[MoEConfig] = None
+    first_k_dense: int = 0         # leading dense layers before MoE layers
+
+    # MLA
+    mla: Optional[MLAConfig] = None
+
+    # SSM / hybrid
+    ssm: Optional[SSMConfig] = None
+    shared_attn_period: int = 0    # hybrid: shared attn block every N ssm layers
+
+    # encoder-decoder
+    enc_layers: int = 0            # >0 -> enc-dec; encoder is bidirectional
+
+    # modality frontend (stubbed): tokens replaced/prefixed by embeddings
+    frontend: Optional[str] = None  # None | "audio" | "vision"
+    frontend_seq: int = 0           # #frontend embedding positions (per shape)
+
+    # norm / act / embeddings
+    norm: str = "rms"              # rms | ln
+    act: str = "swiglu"            # swiglu | gelu
+    tie_embeddings: bool = True
+    logits_soft_cap: Optional[float] = None
+
+    # MTP (DeepSeek-V3 multi-token prediction) — extra head depth
+    mtp_depth: int = 0
+
+    # activation-sharding constraints (beyond-paper §Perf levers; None = let
+    # the SPMD partitioner decide)
+    attn_dp_axis: Optional[str] = None   # batch axis of attention scores
+    attn_sp_axis: Optional[str] = None   # sequence axis of attention scores
+    residual_dp_axis: Optional[str] = None  # Megatron-SP residual stream:
+    residual_sp_axis: Optional[str] = None  # (B, S, D) -> (dp, sp, None)
+
+    # execution
+    param_dtype: str = "float32"
+    activation_dtype: str = "float32"
+    remat: bool = False
+    scan_layers: bool = True
+    use_pallas: bool = False
+    moe_group_size: int = 4096
+
+    # ----------------------------------------------------------------- utils
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.activation_dtype)
+
+    def segments(self) -> list[tuple[str, int]]:
+        """Homogeneous layer runs, in order. Kinds: dense | moe | mamba."""
+        if self.family in ("ssm",):
+            return [("mamba", self.n_layers)]
+        if self.family == "hybrid":
+            return [("mamba", self.n_layers)]  # shared attn handled separately
+        if self.moe is not None:
+            segs = []
+            if self.first_k_dense:
+                segs.append(("dense", self.first_k_dense))
+            segs.append(("moe", self.n_layers - self.first_k_dense))
+            return segs
+        return [("dense", self.n_layers)]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------ params math
+    def param_count(self) -> int:
+        """Analytic total parameter count (for 6·N·D roofline math)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.head_dim_
+        total = v * d  # embed
+        if not self.tie_embeddings:
+            total += v * d
+
+        def attn_params() -> int:
+            if self.attn_type == "mla":
+                m = self.mla
+                q = d * m.q_lora_rank + m.q_lora_rank * m.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                kv = d * (m.kv_lora_rank + m.qk_rope_dim) + m.kv_lora_rank * m.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                o = m.n_heads * m.v_head_dim * d
+                return q + kv + o
+            return d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+
+        def mlp_params(ff: int) -> int:
+            return 3 * d * ff if self.act == "swiglu" else 2 * d * ff
+
+        def moe_params() -> int:
+            m = self.moe
+            routed = m.n_experts * 3 * d * m.d_ff + d * m.n_experts
+            shared = m.n_shared_experts * 3 * d * (m.shared_d_ff or m.d_ff)
+            return routed + shared
+
+        for kind, count in self.segments():
+            if kind == "dense":
+                ff = self.d_ff
+                total += count * (attn_params() + mlp_params(ff) + 2 * d)
+            elif kind == "moe":
+                total += count * (attn_params() + moe_params() + 2 * d)
+            elif kind == "mamba":
+                s = self.ssm
+                di, g, n = s.d_inner, s.n_groups, s.d_state
+                per = (d * (2 * di + 2 * g * n + s.n_heads)       # in_proj
+                       + s.d_conv * (di + 2 * g * n)              # conv
+                       + di * d + 2 * s.n_heads + di + d)         # out_proj+A/D/norm
+                total += count * per
+        if self.family == "hybrid" and self.shared_attn_period:
+            total += attn_params() + mlp_params(self.d_ff) + 2 * d + 2 * d * d
+        if self.mtp_depth:
+            # proj(2d->d) + one dense block + 3 norms
+            total += self.mtp_depth * (2 * d * d + attn_params()
+                                       + mlp_params(self.d_ff) + 5 * d)
+        if self.enc_layers:
+            # encoder self-attn+mlp and decoder cross-attn
+            total += self.enc_layers * (attn_params() + mlp_params(self.d_ff) + 2 * d)
+            total += self.n_layers * (attn_params() + d)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — MoE counts only top-k experts."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full_moe = m.n_experts * 3 * self.d_model * m.d_ff
+        active_moe = m.top_k * 3 * self.d_model * m.d_ff
+        n_moe_layers = self.n_layers - self.first_k_dense
+        return self.param_count() - n_moe_layers * (full_moe - active_moe)

@@ -1,0 +1,196 @@
+"""Core layers: initializers, norms, embeddings, rotary position embeddings.
+
+All layers are function pairs over plain-dict params.  Matmul weights are
+stored as ``(in, out)`` and applied with ``x @ w`` so that the ``out`` axis is
+the natural tensor-parallel shard axis for column-parallel layers and the
+``in`` axis for row-parallel layers (see repro.sharding).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = dict  # nested dict pytree of jnp arrays
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key: jax.Array, shape: Sequence[int], std: float,
+                 dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal initializer (±2 std)."""
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def lecun_normal(key: jax.Array, shape: Sequence[int], fan_in: int | None = None,
+                 dtype=jnp.float32) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return trunc_normal(key, shape, std=1.0 / math.sqrt(max(1, fan_in)), dtype=dtype)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32,
+               std: float | None = None) -> Params:
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    return {"w": trunc_normal(key, (d_in, d_out), std=std, dtype=dtype)}
+
+
+def dense_bias_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32) -> Params:
+    p = dense_init(key, d_in, d_out, dtype)
+    p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def groupnorm_init(channels: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((channels,), dtype), "bias": jnp.zeros((channels,), dtype)}
+
+
+def groupnorm(params: Params, x: jax.Array, num_groups: int, eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over NHWC inputs (the paper swaps BatchNorm→GroupNorm for FL)."""
+    n, h, w, c = x.shape
+    dtype = x.dtype
+    x = x.astype(jnp.float32).reshape(n, h, w, num_groups, c // num_groups)
+    mean = jnp.mean(x, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(x, axis=(1, 2, 4), keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    x = x.reshape(n, h, w, c)
+    return (x * params["scale"] + params["bias"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embedding_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": trunc_normal(key, (vocab, d), std=1.0, dtype=dtype)}
+
+
+def embed(params: Params, ids: jax.Array, scale: float | None = None) -> jax.Array:
+    y = jnp.take(params["table"], ids, axis=0)
+    if scale is not None:
+        y = y * scale
+    return y
+
+
+def unembed(params: Params, x: jax.Array) -> jax.Array:
+    """Tied output projection: ``x @ table.T`` -> logits."""
+    return x @ params["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Apply RoPE.  x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                 # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key: jax.Array, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(dense(params["gate"], x))
+    return dense(params["down"], g * dense(params["up"], x))
+
+
+def gelu_mlp_init(key: jax.Array, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_bias_init(k1, d_model, d_ff, dtype),
+            "down": dense_bias_init(k2, d_ff, d_model, dtype)}
+
+
+def gelu_mlp(params: Params, x: jax.Array) -> jax.Array:
+    return dense(params["down"], jax.nn.gelu(dense(params["up"], x)))
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def count_params(params: Any) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Any) -> int:
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_cast(params: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+
+@partial(jax.jit, static_argnames=())
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)

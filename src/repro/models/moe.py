@@ -1,0 +1,170 @@
+"""Mixture-of-Experts: top-k router + capacity-bucketed expert dispatch.
+
+TPU-native design (GShard/Switch style, as used by MaxText/flaxformer):
+tokens are dispatched to per-expert capacity buckets with one-hot einsums so
+that the whole layer is dense linear algebra on the MXU — the expert axis
+``E`` is the natural expert-parallel shard axis ("model" mesh axis).
+
+Memory control: the dispatch/combine tensors are (G, E, C) for a token group
+of size ``G``; we scan over groups of ``group_size`` tokens so only one
+group's dispatch tensor is live at a time.
+
+Supports Mixtral-style top-2 (softmax-over-topk gates) and DeepSeek-V3 style
+(1 shared expert + 256 routed top-8, sigmoid scores renormalized over topk).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Params, dense_init
+
+
+class MoEConfig(NamedTuple):
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0      # hidden of the shared expert (0 -> d_ff)
+    capacity_factor: float = 1.25
+    group_size: int = 4096    # tokens per dispatch group (memory knob)
+    router_type: str = "softmax"  # "softmax" (mixtral) | "sigmoid" (deepseek-v3)
+    aux_loss_coef: float = 0.01
+    batched_groups: bool = False  # vmap groups instead of lax.scan (exact
+    #                               HLO cost accounting for the dry-run probe)
+    # optional explicit sharding constraints (beyond-paper §Perf lever):
+    # group axis -> dp_axis ("data"), expert axis -> ep_axis ("model").
+    dp_axis: object = None        # str | tuple | None
+    ep_axis: object = None
+
+
+def moe_init(key: jax.Array, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    std = 1.0 / math.sqrt(d)
+    p: Params = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router kept fp32
+        "gate": layers.trunc_normal(ks[1], (e, d, f), std=std, dtype=dtype),
+        "up": layers.trunc_normal(ks[2], (e, d, f), std=std, dtype=dtype),
+        "down": layers.trunc_normal(ks[3], (e, f, d), std=1.0 / math.sqrt(f), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        sf = (cfg.shared_d_ff or cfg.d_ff) * cfg.n_shared_experts
+        p["shared"] = layers.swiglu_init(ks[4], d, sf, dtype)
+    return p
+
+
+def router_probs(params: Params, x: jax.Array, cfg: MoEConfig):
+    """Return (gates (T,k), expert_idx (T,k), full_probs (T,E)) for flat x (T,D)."""
+    logits = layers.dense(params["router"], x.astype(jnp.float32))  # (T,E)
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        top_vals, top_idx = jax.lax.top_k(scores, cfg.top_k)
+        gates = top_vals / (jnp.sum(top_vals, axis=-1, keepdims=True) + 1e-20)
+        probs = scores / (jnp.sum(scores, axis=-1, keepdims=True) + 1e-20)
+    else:
+        top_vals, top_idx = jax.lax.top_k(logits, cfg.top_k)
+        gates = jax.nn.softmax(top_vals, axis=-1)
+        probs = jax.nn.softmax(logits, axis=-1)
+    return gates, top_idx, probs
+
+
+def _constrain(x: jax.Array, spec) -> jax.Array:
+    """Best-effort sharding constraint (no-op outside a mesh context)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def _dispatch_group(params: Params, xg: jax.Array, cfg: MoEConfig):
+    """One token group. xg: (G, D) -> (out (G, D), aux_loss scalar)."""
+    g, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(math.ceil(g * k / e * cfg.capacity_factor)))
+    gates, top_idx, probs = router_probs(params, xg, cfg)
+
+    # position of each (token, choice) within its expert's capacity bucket
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)          # (G,k,E)
+    flat = onehot.reshape(g * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat               # (G*k,E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(g, k)    # (G,k)
+    keep = pos < cap                                              # capacity drop
+    gates = gates * keep
+
+    # dispatch/combine tensors: (G, E, C)
+    cap_onehot = jax.nn.one_hot(pos, cap, dtype=xg.dtype)         # (G,k,C)
+    disp = jnp.einsum("gke,gkc->gec", onehot.astype(xg.dtype) * keep[..., None],
+                      cap_onehot)
+    comb = jnp.einsum("gke,gkc->gec", (onehot * keep[..., None]).astype(jnp.float32)
+                      * gates[..., None], cap_onehot.astype(jnp.float32))
+
+    xe = jnp.einsum("gec,gd->ecd", disp, xg)                      # (E,C,D)
+    if cfg.ep_axis is not None:
+        disp = _constrain(disp, (None, cfg.ep_axis, None))
+        comb = _constrain(comb, (None, cfg.ep_axis, None))
+        xe = _constrain(xe, (cfg.ep_axis, None, None))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["gate"].astype(xg.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, params["up"].astype(xg.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, params["down"].astype(xg.dtype))  # (E,C,D)
+    if cfg.ep_axis is not None:
+        ye = _constrain(ye, (cfg.ep_axis, None, None))
+    out = jnp.einsum("gec,ecd->gd", comb.astype(xg.dtype), ye)
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    f_e = jnp.mean(jnp.sum(onehot * keep[..., None].astype(jnp.int32), axis=1)
+                   .astype(jnp.float32), axis=0)                  # (E,)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e) / k
+    return out, aux
+
+
+def moe_apply(params: Params, x: jax.Array, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    gsz = min(cfg.group_size, t)
+    n_groups = t // gsz
+    assert n_groups * gsz == t, f"tokens {t} not divisible by group {gsz}"
+
+    if n_groups == 1:
+        out, aux = _dispatch_group(params, xf, cfg)
+    elif cfg.batched_groups:
+        xg = xf.reshape(n_groups, gsz, d)
+        if cfg.dp_axis is not None:
+            xg = _constrain(xg, (cfg.dp_axis, None, None))
+        out, aux = jax.vmap(lambda xgi: _dispatch_group(params, xgi, cfg))(xg)
+        if cfg.dp_axis is not None:
+            out = _constrain(out, (cfg.dp_axis, None, None))
+        out = out.reshape(t, d)
+        aux = jnp.mean(aux)
+    else:
+        xg = xf.reshape(n_groups, gsz, d)
+        if cfg.dp_axis is not None:
+            xg = _constrain(xg, (cfg.dp_axis, None, None))
+
+        def body(_, xgi):
+            return None, _dispatch_group(params, xgi, cfg)
+
+        _, (out, aux) = jax.lax.scan(body, None, xg)
+        out = out.reshape(t, d)
+        aux = jnp.mean(aux)
+
+    if cfg.n_shared_experts:
+        out = out + layers.swiglu(params["shared"], xf)
+    return out.reshape(b, s, d), aux * cfg.aux_loss_coef
+
+
+def moe_active_params(cfg: MoEConfig) -> int:
+    """Per-token active parameter count of the expert block (for MODEL_FLOPS)."""
+    routed = 3 * cfg.d_model * cfg.d_ff * cfg.top_k
+    shared = 3 * cfg.d_model * (cfg.shared_d_ff or cfg.d_ff) * cfg.n_shared_experts
+    router = cfg.d_model * cfg.n_experts
+    return routed + shared + router

@@ -1,0 +1,212 @@
+"""ResNet-8 / ResNet-50 with GroupNorm — the paper's CV backbones.
+
+The paper replaces BatchNorm with GroupNorm (16 channels/group) because BN
+statistics break under non-IID federated training (Hsieh et al., 2020); we
+do the same.  NHWC layout, pure JAX.
+
+``resnet8``  : 3 stages × 1 basic block (16/32/64 ch) — the paper's CIFAR net.
+``resnet50`` : standard bottleneck [3,4,6,3] — the paper's Tiny-ImageNet net.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Params
+
+
+def conv_init(key: jax.Array, kh: int, kw: int, cin: int, cout: int,
+              dtype=jnp.float32) -> Params:
+    fan_in = kh * kw * cin
+    return {"w": layers.trunc_normal(key, (kh, kw, cin, cout),
+                                     std=math.sqrt(2.0 / fan_in), dtype=dtype)}
+
+
+def conv(params: Params, x: jax.Array, stride: int = 1,
+         padding: str = "SAME") -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, params["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn_groups(c: int, channels_per_group: int = 16) -> int:
+    return max(1, c // channels_per_group)
+
+
+def basic_block_init(key: jax.Array, cin: int, cout: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": conv_init(ks[0], 3, 3, cin, cout, dtype),
+        "gn1": layers.groupnorm_init(cout, dtype),
+        "conv2": conv_init(ks[1], 3, 3, cout, cout, dtype),
+        "gn2": layers.groupnorm_init(cout, dtype),
+    }
+    if cin != cout:
+        p["proj"] = conv_init(ks[2], 1, 1, cin, cout, dtype)
+    return p
+
+
+def basic_block(params: Params, x: jax.Array, stride: int) -> jax.Array:
+    g = _gn_groups(params["gn1"]["scale"].shape[0])
+    y = conv(params["conv1"], x, stride)
+    y = jax.nn.relu(layers.groupnorm(params["gn1"], y, g))
+    y = conv(params["conv2"], y, 1)
+    y = layers.groupnorm(params["gn2"], y, g)
+    if "proj" in params:
+        x = conv(params["proj"], x, stride)
+    elif stride != 1:
+        x = x[:, ::stride, ::stride, :]
+    return jax.nn.relu(x + y)
+
+
+def bottleneck_init(key: jax.Array, cin: int, cmid: int, dtype=jnp.float32) -> Params:
+    cout = 4 * cmid
+    ks = jax.random.split(key, 4)
+    p = {
+        "conv1": conv_init(ks[0], 1, 1, cin, cmid, dtype),
+        "gn1": layers.groupnorm_init(cmid, dtype),
+        "conv2": conv_init(ks[1], 3, 3, cmid, cmid, dtype),
+        "gn2": layers.groupnorm_init(cmid, dtype),
+        "conv3": conv_init(ks[2], 1, 1, cmid, cout, dtype),
+        "gn3": layers.groupnorm_init(cout, dtype),
+    }
+    if cin != cout:
+        p["proj"] = conv_init(ks[3], 1, 1, cin, cout, dtype)
+    return p
+
+
+def bottleneck(params: Params, x: jax.Array, stride: int) -> jax.Array:
+    c1 = params["gn1"]["scale"].shape[0]
+    c3 = params["gn3"]["scale"].shape[0]
+    y = jax.nn.relu(layers.groupnorm(params["gn1"], conv(params["conv1"], x, 1),
+                                     _gn_groups(c1)))
+    y = jax.nn.relu(layers.groupnorm(params["gn2"], conv(params["conv2"], y, stride),
+                                     _gn_groups(c1)))
+    y = layers.groupnorm(params["gn3"], conv(params["conv3"], y, 1), _gn_groups(c3))
+    if "proj" in params:
+        x = conv(params["proj"], x, stride)
+    return jax.nn.relu(x + y)
+
+
+# ---------------------------------------------------------------------------
+
+def resnet8_init(key: jax.Array, num_classes: int, width: int = 16,
+                 dtype=jnp.float32, projection_head: bool = False) -> Params:
+    """3 stages × 1 basic block. ~0.08M params at width 16 — the paper's
+    CIFAR model scale.  ``projection_head`` adds the 2-layer MLP used by
+    MOON / FedGKD+ (SimCLR-style, output dim 256)."""
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "stem": conv_init(ks[0], 3, 3, 3, width, dtype),
+        "gn0": layers.groupnorm_init(width, dtype),
+        "block1": basic_block_init(ks[1], width, width, dtype),
+        "block2": basic_block_init(ks[2], width, 2 * width, dtype),
+        "block3": basic_block_init(ks[3], 2 * width, 4 * width, dtype),
+        "fc": layers.dense_bias_init(ks[4], 4 * width, num_classes, dtype),
+    }
+    if projection_head:
+        p["proj_head"] = {
+            "fc1": layers.dense_bias_init(ks[5], 4 * width, 4 * width, dtype),
+            "fc2": layers.dense_bias_init(ks[6], 4 * width, 256, dtype),
+        }
+        p["fc"] = layers.dense_bias_init(ks[4], 256, num_classes, dtype)
+    return p
+
+
+def resnet8_features(params: Params, x: jax.Array) -> jax.Array:
+    """Penultimate features (the paper's t-SNE layer). x: (N, H, W, 3)."""
+    w = params["gn0"]["scale"].shape[0]
+    h = jax.nn.relu(layers.groupnorm(params["gn0"], conv(params["stem"], x, 1),
+                                     _gn_groups(w)))
+    h = basic_block(params["block1"], h, 1)
+    h = basic_block(params["block2"], h, 2)
+    h = basic_block(params["block3"], h, 2)
+    h = jnp.mean(h, axis=(1, 2))
+    if "proj_head" in params:
+        h = jax.nn.relu(layers.dense(params["proj_head"]["fc1"], h))
+        h = layers.dense(params["proj_head"]["fc2"], h)
+    return h
+
+
+def resnet8_apply(params: Params, x: jax.Array) -> jax.Array:
+    return layers.dense(params["fc"], resnet8_features(params, x))
+
+
+# ---------------------------------------------------------------------------
+
+_R50_STAGES: Sequence[tuple[int, int]] = ((64, 3), (128, 4), (256, 6), (512, 3))
+
+
+def resnet50_init(key: jax.Array, num_classes: int, dtype=jnp.float32,
+                  projection_head: bool = False) -> Params:
+    ks = jax.random.split(key, 24)
+    ki = iter(range(24))
+    p: Params = {"stem": conv_init(ks[next(ki)], 7, 7, 3, 64, dtype),
+                 "gn0": layers.groupnorm_init(64, dtype)}
+    cin = 64
+    for si, (cmid, blocks) in enumerate(_R50_STAGES):
+        for bi in range(blocks):
+            p[f"s{si}b{bi}"] = bottleneck_init(ks[next(ki)], cin, cmid, dtype)
+            cin = 4 * cmid
+    feat = cin
+    p["fc"] = layers.dense_bias_init(ks[next(ki)], feat, num_classes, dtype)
+    if projection_head:
+        p["proj_head"] = {
+            "fc1": layers.dense_bias_init(ks[next(ki)], feat, feat, dtype),
+            "fc2": layers.dense_bias_init(ks[next(ki)], feat, 256, dtype),
+        }
+        p["fc"] = layers.dense_bias_init(ks[next(ki)], 256, num_classes, dtype)
+    return p
+
+
+def resnet50_features(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(layers.groupnorm(params["gn0"], conv(params["stem"], x, 2),
+                                     _gn_groups(64)))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, (cmid, blocks) in enumerate(_R50_STAGES):
+        for bi in range(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h = bottleneck(params[f"s{si}b{bi}"], h, stride)
+    h = jnp.mean(h, axis=(1, 2))
+    if "proj_head" in params:
+        h = jax.nn.relu(layers.dense(params["proj_head"]["fc1"], h))
+        h = layers.dense(params["proj_head"]["fc2"], h)
+    return h
+
+
+def resnet50_apply(params: Params, x: jax.Array) -> jax.Array:
+    return layers.dense(params["fc"], resnet50_features(params, x))
+
+
+# small MLP for the paper's toy example (Fig. 5)
+
+def mlp_init(key: jax.Array, d_in: int, widths: Sequence[int], num_classes: int,
+             dtype=jnp.float32) -> Params:
+    dims = [d_in, *widths, num_classes]
+    ks = jax.random.split(key, len(dims) - 1)
+    return {f"fc{i}": layers.dense_bias_init(ks[i], dims[i], dims[i + 1], dtype)
+            for i in range(len(dims) - 1)}
+
+
+def mlp_apply(params: Params, x: jax.Array) -> jax.Array:
+    n = len(params)
+    h = x
+    for i in range(n):
+        h = layers.dense(params[f"fc{i}"], h)
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_features(params: Params, x: jax.Array) -> jax.Array:
+    n = len(params)
+    h = x
+    for i in range(n - 1):
+        h = jax.nn.relu(layers.dense(params[f"fc{i}"], h))
+    return h

@@ -1,0 +1,246 @@
+"""Mamba-2 (SSD — state-space duality) block, pure-JAX reference.
+
+The chunked SSD algorithm (Dao & Gu, 2024) splits the sequence into chunks of
+``chunk`` tokens; within a chunk the recurrence is computed in its dual
+"attention-like" quadratic form (MXU-friendly), and a small per-chunk state
+(H, P, N) is carried between chunks with an associative recurrence.  This is
+exactly the structure the Pallas ``ssd_scan`` kernel tiles for VMEM; this
+module is the jnp oracle and the training/prefill path on CPU.
+
+Decode carries (conv_state, ssm_state) and is O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Params, dense_init
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_state: int = 128          # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256
+    n_groups: int = 1           # B/C groups (ngroups)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_init(key: jax.Array, cfg: SSMConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    g = cfg.n_groups
+    d_in_proj = 2 * di + 2 * g * n + h     # z, x, B, C, dt
+    conv_dim = di + 2 * g * n              # conv over x, B, C
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[2], (h,)) *
+                 (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype),
+        "conv_w": layers.trunc_normal(ks[1], (cfg.d_conv, conv_dim),
+                                      std=1.0 / math.sqrt(cfg.d_conv), dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": layers.rmsnorm_init(di, dtype),
+        "out_proj": dense_init(ks[5], di, cfg.d_model, dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    t = x.shape[-1]
+    x_cum = jnp.cumsum(x, axis=-1)
+    diff = x_cum[..., :, None] - x_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    x:  (b, l, h, p)   inputs per head
+    dt: (b, l, h)      positive step sizes (already softplus'ed + bias)
+    A:  (h,)           negative decay rates
+    B:  (b, l, g, n)   input matrices (g groups broadcast over heads)
+    C:  (b, l, g, n)
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-l) % chunk
+    if pad:  # zero-pad: dt=0 rows are identity steps (no state change)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, final = ssd_chunked(x, dt, A, B, C, chunk, init_state)
+        return y[:, :l], final
+    nc = l // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)  # (b,nc,c,h,n)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                 # (b,nc,c,h) negative
+    dA_cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumsum
+
+    # 1) diagonal (intra-chunk) block: dual attention form
+    L = jnp.exp(_segsum(jnp.swapaxes(dA, 2, 3)))      # (b,nc,h,c,c)
+    # attention-like weights: C_i . B_j * exp(sum_{j<k<=i} dA_k) * dt_j
+    G = jnp.einsum("bzihn,bzjhn->bzhij", Cc, Bc)      # (b,nc,h,c,c)
+    M = G * L                                          # decay applied
+    y_diag = jnp.einsum("bzhij,bzjh,bzjhp->bzihp", M, dtc, xc)
+
+    # 2) per-chunk final states
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,c,h)
+    states = jnp.einsum("bzchn,bzch,bzch,bzchp->bzhpn",
+                        Bc, dtc, decay_to_end, xc)          # (b,nc,h,p,n)
+
+    # 3) inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))              # (b,nc,h)
+    s0 = (jnp.zeros((b, h, p, n), x.dtype) if init_state is None
+          else init_state.astype(x.dtype))
+
+    def step(carry, inp):
+        st, dec = inp           # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry       # emit state *entering* this chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (b,nc,h,p,n)
+
+    # 4) contribution of the incoming state to each position
+    state_decay = jnp.exp(dA_cum)                           # (b,nc,c,h)
+    y_off = jnp.einsum("bzchn,bzhpn,bzch->bzchp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def ssd_reference(x, dt, A, B, C):
+    """O(L) sequential reference (ground truth for tests)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bf = jnp.repeat(B, rep, axis=2)
+    Cf = jnp.repeat(C, rep, axis=2)
+
+    def step(state, inp):
+        xi, dti, Bi, Ci = inp     # (b,h,p),(b,h),(b,h,n),(b,h,n)
+        dA = jnp.exp(dti * A)     # (b,h)
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dti, Bi, xi)
+        y = jnp.einsum("bhn,bhpn->bhp", Ci, state)
+        return state, y
+
+    s0 = jnp.zeros((b, h, p, n), x.dtype)
+    _, ys = jax.lax.scan(step, s0, (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+                                    jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+class SSMCache(NamedTuple):
+    conv_state: jax.Array   # (B, d_conv-1, conv_dim)
+    ssm_state: jax.Array    # (B, H, P, N)
+    length: jax.Array
+
+
+def ssm_cache_init(batch: int, cfg: SSMConfig, dtype=jnp.float32) -> SSMCache:
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return SSMCache(
+        jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        jnp.zeros((), jnp.int32))
+
+
+def _split_in_proj(z_x_b_c_dt: jax.Array, cfg: SSMConfig):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = z_x_b_c_dt[..., :di]
+    xbc = z_x_b_c_dt[..., di:di + di + 2 * g * n]
+    dt = z_x_b_c_dt[..., di + di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B, L, C), w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba2_forward(params: Params, x: jax.Array, cfg: SSMConfig,
+                   init_state: jax.Array | None = None):
+    """x: (B, L, D) -> (y (B,L,D), final ssm state)."""
+    b, l, d = x.shape
+    proj = layers.dense(params["in_proj"], x)
+    z, xbc, dt = _split_in_proj(proj, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype))
+    di, g, n = cfg.d_inner, cfg.n_groups, cfg.d_state
+    xs = xbc[..., :di].reshape(b, l, cfg.n_heads, cfg.head_dim)
+    B = xbc[..., di:di + g * n].reshape(b, l, g, n)
+    C = xbc[..., di + g * n:].reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    y, final = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                           B.astype(jnp.float32), C.astype(jnp.float32),
+                           chunk=min(cfg.chunk, l), init_state=init_state)
+    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return layers.dense(params["out_proj"], y), final
+
+
+def mamba2_decode_step(params: Params, x: jax.Array, cache: SSMCache,
+                       cfg: SSMConfig):
+    """One-token decode. x: (B, 1, D)."""
+    b, s, d = x.shape
+    assert s == 1
+    proj = layers.dense(params["in_proj"], x)[:, 0]          # (B, d_in_proj)
+    z, xbc, dt = _split_in_proj(proj, cfg)
+    # causal conv via rolling state
+    conv_in = jnp.concatenate([cache.conv_state, xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = params["conv_w"].astype(x.dtype)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, w)
+                      + params["conv_b"].astype(x.dtype)[None, :])
+    new_conv_state = conv_in[:, 1:, :]
+
+    di, g, n = cfg.d_inner, cfg.n_groups, cfg.d_state
+    xs = xbc[..., :di].reshape(b, cfg.n_heads, cfg.head_dim).astype(jnp.float32)
+    B = xbc[..., di:di + g * n].reshape(b, g, n).astype(jnp.float32)
+    C = xbc[..., di + g * n:].reshape(b, g, n).astype(jnp.float32)
+    rep = cfg.n_heads // g
+    B = jnp.repeat(B, rep, axis=1)
+    C = jnp.repeat(C, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                             # (B,H)
+    state = cache.ssm_state * dA[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, B, xs)
+    y = jnp.einsum("bhn,bhpn->bhp", C, state)
+    y = y + xs * params["D"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = layers.dense(params["out_proj"], y)[:, None, :]
+    return out, SSMCache(new_conv_state, state, cache.length + 1)

@@ -1,0 +1,546 @@
+"""Unified model stack covering all assigned architecture families.
+
+A model is built from ``ModelConfig.segments()`` — homogeneous runs of
+layers ("dense" attn+MLP, "moe" attn+MoE, "mamba" SSD) whose parameters are
+stacked on a leading layer axis and executed with ``jax.lax.scan`` (compile
+time stays flat in depth; remat is a per-block ``jax.checkpoint``).
+
+Public entry points
+  init(rng, cfg)                          -> params
+  forward(params, cfg, tokens, ...)      -> (logits, aux_loss)
+  encode(params, cfg, enc_embeddings)    -> encoder output (enc-dec only)
+  init_cache(cfg, batch, max_len)        -> decode cache pytree
+  decode_step(params, cfg, tokens, cache [, enc_out]) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import Params
+
+
+# ---------------------------------------------------------------------------
+# norm / mlp dispatch
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ModelConfig, d: int) -> Params:
+    return layers.rmsnorm_init(d, cfg.pdtype) if cfg.norm == "rms" \
+        else layers.layernorm_init(d, cfg.pdtype)
+
+
+def _norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    return layers.rmsnorm(p, x) if cfg.norm == "rms" else layers.layernorm(p, x)
+
+
+def _mlp_init(cfg: ModelConfig, key: jax.Array, d_ff: int) -> Params:
+    if cfg.act == "swiglu":
+        return layers.swiglu_init(key, cfg.d_model, d_ff, cfg.pdtype)
+    return layers.gelu_mlp_init(key, cfg.d_model, d_ff, cfg.pdtype)
+
+
+def _mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    return layers.swiglu(p, x) if cfg.act == "swiglu" else layers.gelu_mlp(p, x)
+
+
+def _attn_impl(cfg: ModelConfig):
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention_gqa
+    if cfg.attn_dp_axis or cfg.attn_sp_axis:
+        spec = (cfg.attn_dp_axis, cfg.attn_sp_axis)
+        return functools.partial(attn_lib.jnp_attention, shard_spec=spec)
+    return attn_lib.jnp_attention
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _attn_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    if cfg.attn_type == "mla":
+        return attn_lib.mla_init(key, cfg.mla, cfg.pdtype)
+    return attn_lib.gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim_, cfg.pdtype, cfg.qkv_bias)
+
+
+def _attn_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+                positions: jax.Array, window: Optional[int]) -> jax.Array:
+    if cfg.attn_type == "mla":
+        return attn_lib.mla_attention(p, x, cfg.mla, positions)
+    return attn_lib.gqa_attention(
+        p, x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim_, positions=positions, window=window,
+        rope_theta=cfg.rope_theta, use_rope=cfg.use_rope,
+        attn_impl=_attn_impl(cfg))
+
+
+def _dense_layer_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": _norm_init(cfg, cfg.d_model), "attn": _attn_init(cfg, k1),
+            "norm2": _norm_init(cfg, cfg.d_model), "mlp": _mlp_init(cfg, k2, cfg.d_ff)}
+
+
+def _dense_layer(cfg: ModelConfig, p: Params, h: jax.Array,
+                 positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h = h + _attn_apply(cfg, p["attn"], _norm(cfg, p["norm1"], h), positions,
+                        cfg.attn_window)
+    h = h + _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], h))
+    return h, jnp.zeros((), jnp.float32)
+
+
+def _moe_layer_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": _norm_init(cfg, cfg.d_model), "attn": _attn_init(cfg, k1),
+            "norm2": _norm_init(cfg, cfg.d_model),
+            "moe": moe_lib.moe_init(k2, cfg.moe, cfg.pdtype)}
+
+
+def _moe_layer(cfg: ModelConfig, p: Params, h: jax.Array,
+               positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h = h + _attn_apply(cfg, p["attn"], _norm(cfg, p["norm1"], h), positions,
+                        cfg.attn_window)
+    mcfg = cfg.moe._replace(group_size=cfg.moe_group_size)
+    out, aux = moe_lib.moe_apply(p["moe"], _norm(cfg, p["norm2"], h), mcfg)
+    return h + out, aux
+
+
+def _mamba_layer_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    return {"norm": _norm_init(cfg, cfg.d_model),
+            "mixer": ssm_lib.mamba2_init(key, cfg.ssm, cfg.pdtype)}
+
+
+def _mamba_layer(cfg: ModelConfig, p: Params, h: jax.Array,
+                 positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    out, _ = ssm_lib.mamba2_forward(p["mixer"], _norm(cfg, p["norm"], h), cfg.ssm)
+    return h + out, jnp.zeros((), jnp.float32)
+
+
+_LAYER_INIT = {"dense": _dense_layer_init, "moe": _moe_layer_init,
+               "mamba": _mamba_layer_init}
+_LAYER_APPLY = {"dense": _dense_layer, "moe": _moe_layer, "mamba": _mamba_layer}
+
+
+# hybrid (Zamba2): shared attention block applied every `shared_attn_period`
+# mamba layers; input is [h ; h0] projected back to d_model (the Zamba trick
+# of re-injecting the embedding stream).
+
+def _shared_block_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"in_proj": layers.dense_init(k1, 2 * cfg.d_model, cfg.d_model, cfg.pdtype),
+            "norm1": _norm_init(cfg, cfg.d_model), "attn": _attn_init(cfg, k2),
+            "norm2": _norm_init(cfg, cfg.d_model), "mlp": _mlp_init(cfg, k3, cfg.d_ff)}
+
+
+def _shared_block(cfg: ModelConfig, p: Params, h: jax.Array, h0: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    x = layers.dense(p["in_proj"], jnp.concatenate([h, h0], axis=-1))
+    x = x + _attn_apply(cfg, p["attn"], _norm(cfg, p["norm1"], x), positions, None)
+    x = x + _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], x))
+    return h + x
+
+
+# ---------------------------------------------------------------------------
+# encoder (enc-dec models) and cross-attention decoder layers
+# ---------------------------------------------------------------------------
+
+def _enc_layer_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    return _dense_layer_init(cfg, key)
+
+
+def _enc_layer(cfg: ModelConfig, p: Params, h: jax.Array,
+               positions: jax.Array) -> jax.Array:
+    # bidirectional self-attention (no mask)
+    b, s, _ = h.shape
+    x = _norm(cfg, p["norm1"], h)
+    q, k, v = attn_lib.gqa_project_qkv(p["attn"], x, cfg.n_heads, cfg.n_kv_heads,
+                                       cfg.head_dim_, positions, cfg.rope_theta,
+                                       cfg.use_rope)
+    out = _attn_impl(cfg)(q, k, v, causal=False)
+    h = h + layers.dense(p["attn"]["wo"], out.reshape(b, s, -1))
+    h = h + _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], h))
+    return h
+
+
+def _xattn_layer_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _dense_layer_init(cfg, k1)
+    p["norm_x"] = _norm_init(cfg, cfg.d_model)
+    p["xattn"] = attn_lib.gqa_init(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim_, cfg.pdtype)
+    del k3
+    return p
+
+
+def _cross_attend(cfg: ModelConfig, p: Params, x: jax.Array,
+                  enc_out: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    se = enc_out.shape[1]
+    hd = cfg.head_dim_
+    q = layers.dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = layers.dense(p["wk"], enc_out).reshape(b, se, cfg.n_kv_heads, hd)
+    v = layers.dense(p["wv"], enc_out).reshape(b, se, cfg.n_kv_heads, hd)
+    out = _attn_impl(cfg)(q, k, v, causal=False)
+    return layers.dense(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+
+
+def _xattn_layer(cfg: ModelConfig, p: Params, h: jax.Array, positions: jax.Array,
+                 enc_out: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h = h + _attn_apply(cfg, p["attn"], _norm(cfg, p["norm1"], h), positions, None)
+    h = h + _cross_attend(cfg, p["xattn"], _norm(cfg, p["norm_x"], h), enc_out)
+    h = h + _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], h))
+    return h, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# stacked init + scan
+# ---------------------------------------------------------------------------
+
+def _stack_init(fn, key: jax.Array, count: int) -> Params:
+    keys = jax.random.split(key, count)
+    return jax.vmap(fn)(keys)
+
+
+def init(rng: jax.Array, cfg: ModelConfig) -> Params:
+    """Initialize all parameters for the configured model."""
+    n_keys = 8 + len(cfg.segments())
+    ks = list(jax.random.split(rng, n_keys))
+    params: Params = {
+        "embed": layers.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.pdtype),
+        "final_norm": _norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.dense_init(ks[1], cfg.d_model, cfg.vocab_size, cfg.pdtype)
+
+    dec_layer_init = _xattn_layer_init if cfg.enc_layers else None
+    for i, (kind, count) in enumerate(cfg.segments()):
+        fn = dec_layer_init if (cfg.enc_layers and kind == "dense") \
+            else _LAYER_INIT[kind]
+        params[f"seg{i}"] = _stack_init(functools.partial(fn, cfg), ks[2 + i], count)
+
+    if cfg.family == "hybrid" and cfg.shared_attn_period:
+        params["shared_block"] = _shared_block_init(cfg, ks[-1])
+    if cfg.enc_layers:
+        params["enc_embed_norm"] = _norm_init(cfg, cfg.d_model)
+        params["enc"] = _stack_init(functools.partial(_enc_layer_init, cfg),
+                                    ks[-2], cfg.enc_layers)
+        params["enc_final_norm"] = _norm_init(cfg, cfg.d_model)
+    if cfg.mtp_depth:
+        k1, k2 = jax.random.split(ks[-3])
+        params["mtp"] = {
+            "proj": layers.dense_init(k1, 2 * cfg.d_model, cfg.d_model, cfg.pdtype),
+            "norm_h": _norm_init(cfg, cfg.d_model),
+            "norm_e": _norm_init(cfg, cfg.d_model),
+            "block": _dense_layer_init(cfg, k2),
+            "final_norm": _norm_init(cfg, cfg.d_model),
+        }
+    return params
+
+
+def _scan_segment(cfg: ModelConfig, kind: str, seg_params: Params, h: jax.Array,
+                  positions: jax.Array, enc_out: Optional[jax.Array] = None,
+                  h0: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """Run a stacked segment with lax.scan; returns (h, summed aux loss)."""
+    if cfg.enc_layers and kind == "dense":
+        base = lambda p, h: _xattn_layer(cfg, p, h, positions, enc_out)
+    else:
+        base = lambda p, h: _LAYER_APPLY[kind](cfg, p, h, positions)
+    if cfg.residual_dp_axis or cfg.residual_sp_axis:
+        spec = (cfg.residual_dp_axis, cfg.residual_sp_axis, None)
+
+        def layer(p, h):
+            h, aux = base(p, attn_lib._constrain(h, spec))
+            return attn_lib._constrain(h, spec), aux
+    else:
+        layer = base
+    if cfg.remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+
+    if not cfg.scan_layers:
+        aux_total = jnp.zeros((), jnp.float32)
+        count = jax.tree_util.tree_leaves(seg_params)[0].shape[0]
+        for i in range(count):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], seg_params)
+            h, aux = layer(p_i, h)
+            aux_total = aux_total + aux
+        return h, aux_total
+
+    def body(h, p):
+        h, aux = layer(p, h)
+        return h, aux
+
+    h, auxs = jax.lax.scan(body, h, seg_params)
+    return h, jnp.sum(auxs)
+
+
+def _hybrid_stack(cfg: ModelConfig, params: Params, h: jax.Array,
+                  positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Zamba2-style: groups of `period` mamba layers + one shared attn block."""
+    seg = params["seg0"]
+    period = cfg.shared_attn_period
+    n = cfg.n_layers
+    groups, rem = divmod(n, period)
+    h0 = h
+    take = lambda tree, a, b: jax.tree_util.tree_map(lambda x: x[a:b], tree)
+
+    if groups:
+        if cfg.scan_layers:
+            grouped = jax.tree_util.tree_map(
+                lambda x: x[: groups * period].reshape(
+                    (groups, period) + x.shape[1:]), seg)
+
+            def outer(h, gp):
+                h, _ = _scan_segment(cfg, "mamba", gp, h, positions)
+                h = _shared_block(cfg, params["shared_block"], h, h0, positions)
+                return h, jnp.zeros((), jnp.float32)
+
+            h, _ = jax.lax.scan(outer, h, grouped)
+        else:
+            for gi in range(groups):
+                gp = take(seg, gi * period, (gi + 1) * period)
+                h, _ = _scan_segment(cfg, "mamba", gp, h, positions)
+                h = _shared_block(cfg, params["shared_block"], h, h0, positions)
+    if rem:
+        h, _ = _scan_segment(cfg, "mamba", take(seg, groups * period, n), h, positions)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def encode(params: Params, cfg: ModelConfig, enc_embeddings: jax.Array) -> jax.Array:
+    """Encoder for enc-dec models. enc_embeddings: (B, S_enc, D) frontend output."""
+    h = _norm(cfg, params["enc_embed_norm"], enc_embeddings.astype(cfg.adtype))
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    layer = lambda p, h: (_enc_layer(cfg, p, h, positions), jnp.zeros((), jnp.float32))
+    if cfg.remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+
+    if cfg.scan_layers:
+        def body(h, p):
+            return layer(p, h)
+
+        h, _ = jax.lax.scan(body, h, params["enc"])
+    else:
+        for i in range(cfg.enc_layers):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], params["enc"])
+            h, _ = layer(p_i, h)
+    return _norm(cfg, params["enc_final_norm"], h)
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  prefix_embeddings: Optional[jax.Array]) -> jax.Array:
+    h = layers.embed(params["embed"], tokens).astype(cfg.adtype)
+    if prefix_embeddings is not None:
+        h = jnp.concatenate([prefix_embeddings.astype(cfg.adtype), h], axis=1)
+    return h
+
+
+def hidden_states(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  prefix_embeddings: Optional[jax.Array] = None,
+                  enc_out: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """Final-norm'ed hidden states (B, S, D) and summed aux loss."""
+    h = _embed_inputs(params, cfg, tokens, prefix_embeddings)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "hybrid" and cfg.shared_attn_period:
+        h, a = _hybrid_stack(cfg, params, h, positions)
+        aux += a
+    else:
+        for i, (kind, _) in enumerate(cfg.segments()):
+            h, a = _scan_segment(cfg, kind, params[f"seg{i}"], h, positions, enc_out)
+            aux += a
+    return _norm(cfg, params["final_norm"], h), aux
+
+
+def logits_from_hidden(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], h)
+    else:
+        logits = layers.dense(params["head"], h)
+    if cfg.logits_soft_cap:
+        logits = cfg.logits_soft_cap * jnp.tanh(logits / cfg.logits_soft_cap)
+    return logits.astype(jnp.float32)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            prefix_embeddings: Optional[jax.Array] = None,
+            enc_out: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """Full forward. Returns (logits (B, S_total, V) fp32, aux_loss)."""
+    h, aux = hidden_states(params, cfg, tokens, prefix_embeddings, enc_out)
+    return logits_from_hidden(params, cfg, h), aux
+
+
+def mtp_logits(params: Params, cfg: ModelConfig, h: jax.Array,
+               next_tokens: jax.Array) -> jax.Array:
+    """DeepSeek-V3 multi-token-prediction head (depth 1): predicts t+2 from
+    the trunk hidden state at t combined with the embedding of token t+1."""
+    p = params["mtp"]
+    emb = layers.embed(params["embed"], next_tokens).astype(h.dtype)
+    x = layers.dense(p["proj"], jnp.concatenate(
+        [_norm(cfg, p["norm_h"], h), _norm(cfg, p["norm_e"], emb)], axis=-1))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x, _ = _dense_layer(cfg, p["block"], x, positions)
+    return logits_from_hidden(params, cfg, _norm(cfg, p["final_norm"], x))
+
+
+# ---------------------------------------------------------------------------
+# decode path (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Any:
+    """Per-segment stacked caches (leading axis = layer)."""
+    caches = {}
+    for i, (kind, count) in enumerate(cfg.segments()):
+        if kind == "mamba":
+            one = ssm_lib.ssm_cache_init(batch, cfg.ssm, dtype)
+        elif cfg.attn_type == "mla":
+            one = attn_lib.mla_cache_init(batch, max_len, cfg.mla, dtype)
+        else:
+            window = cfg.attn_window
+            cache_len = min(max_len, window) if window else max_len
+            one = attn_lib.kv_cache_init(batch, cache_len, cfg.n_kv_heads,
+                                         cfg.head_dim_, dtype)
+        caches[f"seg{i}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), one)
+    if cfg.family == "hybrid" and cfg.shared_attn_period:
+        caches["shared"] = attn_lib.kv_cache_init(
+            batch, max_len, cfg.n_kv_heads, cfg.head_dim_, dtype)
+        caches["shared"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None],
+                                       (cfg.n_layers // cfg.shared_attn_period,)
+                                       + x.shape), caches["shared"])
+    # absolute position counter shared across layers
+    caches["pos"] = jnp.zeros((), jnp.int32)
+    return caches
+
+
+def _layer_decode(cfg: ModelConfig, kind: str, p: Params, h: jax.Array,
+                  cache, pos: jax.Array, enc_out: Optional[jax.Array]):
+    if kind == "mamba":
+        out, new_cache = ssm_lib.mamba2_decode_step(
+            p["mixer"], _norm(cfg, p["norm"], h), cache, cfg.ssm)
+        return h + out, new_cache
+    if cfg.attn_type == "mla":
+        out, new_cache = attn_lib.mla_decode_step(
+            p["attn"], _norm(cfg, p["norm1"], h), cache, cfg.mla)
+    else:
+        out, new_cache = attn_lib.gqa_decode_step(
+            p["attn"], _norm(cfg, p["norm1"], h), cache,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            window=cfg.attn_window, rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
+    h = h + out
+    if cfg.enc_layers:
+        h = h + _cross_attend(cfg, p["xattn"], _norm(cfg, p["norm_x"], h), enc_out)
+    if kind == "moe":
+        mcfg = cfg.moe._replace(group_size=cfg.moe_group_size)
+        out, _ = moe_lib.moe_apply(p["moe"], _norm(cfg, p["norm2"], h), mcfg)
+    else:
+        out = _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], h))
+    return h + out, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array, cache,
+                enc_out: Optional[jax.Array] = None):
+    """One-token decode.  tokens: (B, 1).  Returns (logits (B,1,V), cache)."""
+    h = layers.embed(params["embed"], tokens).astype(cfg.adtype)
+    pos = cache["pos"]
+    new_caches = dict(cache)
+
+    if cfg.family == "hybrid" and cfg.shared_attn_period:
+        h0 = h
+        seg, shared = params["seg0"], cache["seg0"]
+        period = cfg.shared_attn_period
+        groups = cfg.n_layers // period
+        n_shared = groups
+
+        def scan_mamba(h, gp, gc):
+            if cfg.scan_layers:
+                def body(carry, xs):
+                    h, = carry
+                    p, c = xs
+                    h, new_c = _layer_decode(cfg, "mamba", p, h, c, pos, None)
+                    return (h,), new_c
+
+                (h,), new_gc = jax.lax.scan(body, (h,), (gp, gc))
+                return h, new_gc
+            ncs = []
+            count = jax.tree_util.tree_leaves(gp)[0].shape[0]
+            for li in range(count):
+                p_i = jax.tree_util.tree_map(lambda x: x[li], gp)
+                c_i = jax.tree_util.tree_map(lambda x: x[li], gc)
+                h, nc = _layer_decode(cfg, "mamba", p_i, h, c_i, pos, None)
+                ncs.append(nc)
+            return h, jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=0), *ncs)
+
+        # interleave: run in python over groups (params sliced) to keep shared
+        # block applications explicit; mamba groups scan (or unroll for the
+        # cost probe).
+        take = lambda tree, a, b: jax.tree_util.tree_map(lambda x: x[a:b], tree)
+        shared_caches = []
+        for gi in range(groups):
+            gp = take(seg, gi * period, (gi + 1) * period)
+            gc = take(cache["seg0"], gi * period, (gi + 1) * period)
+            h, new_gc = scan_mamba(h, gp, gc)
+            new_caches.setdefault("_seg0_parts", []).append(new_gc)
+            # shared attn block with its own kv cache
+            sc = jax.tree_util.tree_map(lambda x: x[gi], cache["shared"])
+            x = layers.dense(params["shared_block"]["in_proj"],
+                             jnp.concatenate([h, h0], axis=-1))
+            out, new_sc = attn_lib.gqa_decode_step(
+                params["shared_block"]["attn"],
+                _norm(cfg, params["shared_block"]["norm1"], x), sc,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                use_rope=cfg.use_rope)
+            x = x + out
+            x = x + _mlp(cfg, params["shared_block"]["mlp"],
+                         _norm(cfg, params["shared_block"]["norm2"], x))
+            h = h + x
+            shared_caches.append(new_sc)
+        rem = cfg.n_layers - groups * period
+        if rem:
+            gp = take(seg, groups * period, cfg.n_layers)
+            gc = take(cache["seg0"], groups * period, cfg.n_layers)
+            h, new_gc = scan_mamba(h, gp, gc)
+            new_caches["_seg0_parts"].append(new_gc)
+        parts = new_caches.pop("_seg0_parts")
+        new_caches["seg0"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+        new_caches["shared"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *shared_caches)
+    else:
+        for i, (kind, count) in enumerate(cfg.segments()):
+            if cfg.scan_layers:
+                def body(carry, xs):
+                    h, = carry
+                    p, c = xs
+                    h, new_c = _layer_decode(cfg, kind, p, h, c, pos, enc_out)
+                    return (h,), new_c
+
+                (h,), new_c = jax.lax.scan(
+                    body, (h,), (params[f"seg{i}"], cache[f"seg{i}"]))
+            else:
+                ncs = []
+                for li in range(count):
+                    p_i = jax.tree_util.tree_map(lambda x: x[li],
+                                                 params[f"seg{i}"])
+                    c_i = jax.tree_util.tree_map(lambda x: x[li],
+                                                 cache[f"seg{i}"])
+                    h, nc = _layer_decode(cfg, kind, p_i, h, c_i, pos, enc_out)
+                    ncs.append(nc)
+                new_c = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs, axis=0), *ncs)
+            new_caches[f"seg{i}"] = new_c
+
+    new_caches["pos"] = pos + tokens.shape[1]
+    h = _norm(cfg, params["final_norm"], h)
+    return logits_from_hidden(params, cfg, h), new_caches

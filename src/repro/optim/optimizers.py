@@ -1,0 +1,100 @@
+"""Minimal functional optimizers (optax is not available offline).
+
+An ``Optimizer`` is (init, update):
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, lr)
+    params = apply_updates(params, updates)
+Updates are NEGATIVE steps (add them to params).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = object
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (updates, state)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return _tmap(lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+                 params, updates)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return _tmap(lambda g: g * scale, grads)
+
+
+def sgd(momentum: float = 0.0, weight_decay: float = 0.0,
+        nesterov: bool = False, state_dtype=None) -> Optimizer:
+    """SGD with (optional) heavyweight momentum and decoupled weight decay —
+    the paper's CV optimizer (momentum 0.9, wd 1e-5)."""
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return _tmap(lambda p: jnp.zeros_like(
+            p, dtype=state_dtype or p.dtype), params)
+
+    def update(grads, state, params, lr):
+        if weight_decay:
+            grads = _tmap(lambda g, p: g + weight_decay * p.astype(g.dtype),
+                          grads, params)
+        if momentum == 0.0:
+            return _tmap(lambda g: -lr * g, grads), ()
+        new_m = _tmap(lambda m, g: momentum * m.astype(g.dtype) + g, state, grads)
+        if nesterov:
+            step = _tmap(lambda g, m: g + momentum * m, grads, new_m)
+        else:
+            step = new_m
+        new_m = _tmap(lambda m, s: m.astype(s.dtype), new_m, state)
+        return _tmap(lambda s: -lr * s, step), new_m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    count: jax.Array
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    """Adam(W) — the paper's NLP optimizer (lr 1e-5, wd 0)."""
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=state_dtype)
+        return AdamState(_tmap(z, params), _tmap(z, params),
+                         jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        gf = _tmap(lambda g: g.astype(state_dtype), grads)
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g, state.mu, gf)
+        nu = _tmap(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, gf)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        step = _tmap(lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        if weight_decay:
+            step = _tmap(lambda s, p: s + weight_decay * p.astype(s.dtype),
+                         step, params)
+        return _tmap(lambda s: -lr * s, step), AdamState(mu, nu, count)
+
+    return Optimizer(init, update)

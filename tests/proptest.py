@@ -1,0 +1,37 @@
+"""Minimal property-test harness (hypothesis is unavailable offline).
+
+``sweep(n)(fn)`` runs ``fn(rng)`` for n seeded numpy Generators; failures
+report the seed so the case is reproducible.  Generators below mirror the
+hypothesis strategies we'd otherwise use.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+def sweep(n: int = 20, base_seed: int = 0):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            for i in range(n):
+                seed = base_seed + i
+                rng = np.random.default_rng(seed)
+                try:
+                    fn(rng, *a, **kw)
+                except AssertionError as e:
+                    raise AssertionError(f"[proptest seed={seed}] {e}") from e
+        # hide the wrapped signature so pytest doesn't treat `rng` as a fixture
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def rand_shape(rng, ndim_lo=1, ndim_hi=3, dim_lo=1, dim_hi=64):
+    nd = int(rng.integers(ndim_lo, ndim_hi + 1))
+    return tuple(int(rng.integers(dim_lo, dim_hi + 1)) for _ in range(nd))
+
+
+def rand_logits(rng, shape, scale=4.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)

@@ -1,0 +1,151 @@
+"""Unit tests for the FL core: aggregation, buffers, KD losses, algorithms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms, distillation as D
+from repro.core.server import ModelBuffer, weighted_average
+from proptest import sweep
+
+
+# --- server ----------------------------------------------------------------
+
+def test_weighted_average_exact():
+    a = {"w": jnp.ones((3,)), "b": jnp.zeros((2,))}
+    b = {"w": 3 * jnp.ones((3,)), "b": 2 * jnp.ones((2,))}
+    out = weighted_average([a, b], [1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5)
+    np.testing.assert_allclose(np.asarray(out["b"]), 1.5)
+
+
+@sweep(n=10)
+def test_property_average_idempotent(rng):
+    """Averaging K copies of the same params returns those params."""
+    p = {"w": jnp.asarray(rng.standard_normal((4, 5)), jnp.float32)}
+    k = int(rng.integers(1, 6))
+    w = rng.uniform(0.1, 5.0, size=k).tolist()
+    out = weighted_average([p] * k, w)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(p["w"]),
+                               atol=1e-6)
+
+
+def test_model_buffer_fifo_and_fused():
+    buf = ModelBuffer(3)
+    for i in range(5):
+        buf.push({"w": jnp.full((2,), float(i))})
+    assert len(buf) == 3
+    # newest first: 4, 3, 2
+    vals = [float(m["w"][0]) for m in buf.models]
+    assert vals == [4.0, 3.0, 2.0]
+    np.testing.assert_allclose(np.asarray(buf.fused()["w"]), 3.0)
+
+
+# --- distillation losses -----------------------------------------------------
+
+def test_kl_zero_iff_equal():
+    logits = jnp.asarray(np.random.default_rng(0).standard_normal((8, 10)),
+                         jnp.float32)
+    assert float(jnp.max(D.kl_divergence(logits, logits))) < 1e-6
+    other = logits + 1e-1 * jnp.arange(10)[None, :]
+    assert float(jnp.min(D.kl_divergence(logits, other))) > 0
+
+
+def test_kd_loss_scaling():
+    rng = np.random.default_rng(1)
+    t = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    l1 = D.kd_loss_kl(t, s, gamma=0.2)
+    l2 = D.kd_loss_kl(t, s, gamma=0.4)
+    np.testing.assert_allclose(float(l2), 2 * float(l1), rtol=1e-6)
+
+
+def test_vote_coefficients_sum_and_order():
+    gammas = D.vote_coefficients([0.1, 0.5, 2.0], lam=0.1)
+    # Σ γ_m/2 = λ
+    np.testing.assert_allclose(sum(gammas) / 2, 0.1, rtol=1e-5)
+    # lower validation loss ⇒ larger coefficient
+    assert gammas[0] > gammas[1] > gammas[2]
+
+
+def test_cross_entropy_ignore_index():
+    logits = jnp.asarray([[2.0, 0.0], [0.0, 2.0]], jnp.float32)
+    labels = jnp.asarray([0, -1])
+    ce = D.cross_entropy(logits, labels)
+    want = -jax.nn.log_softmax(logits[0])[0]
+    np.testing.assert_allclose(float(ce), float(want), rtol=1e-6)
+
+
+def test_ensemble_average_is_mean():
+    ms = [{"w": jnp.full((2,), float(i))} for i in range(4)]
+    out = D.ensemble_average(ms)
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.5)
+
+
+# --- algorithm registry / semantics ------------------------------------------
+
+def test_registry_complete():
+    names = algorithms.available()
+    for n in ["fedavg", "fedprox", "fedgkd", "fedgkd+", "fedgkd-vote",
+              "moon", "feddistill+", "fedgen"]:
+        assert n in names
+
+
+def test_comm_multipliers_match_paper():
+    """FedGKD: 2× when M>1, 1× when M=1; VOTE: M×; others 1×."""
+    assert algorithms.make("fedgkd", buffer_m=1).comm_multiplier == 1.0
+    assert algorithms.make("fedgkd", buffer_m=5).comm_multiplier == 2.0
+    assert algorithms.make("fedgkd-vote", buffer_m=5).comm_multiplier == 5.0
+    assert algorithms.make("fedavg").comm_multiplier == 1.0
+
+
+def test_fedgkd_loss_reduces_to_fedavg_at_gamma0():
+    from repro.configs.paper import CIFAR10, scaled
+    from repro.core.modelzoo import make_model
+    task = scaled(CIFAR10, 0.001)
+    model = make_model(task)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jnp.ones((4, 32, 32, 3))
+    y = jnp.asarray([0, 1, 2, 3])
+    gkd = algorithms.make("fedgkd", gamma=0.0, buffer_m=1)
+    server = gkd.init_server(params, model, task.num_classes)
+    payload = gkd.round_payload(server, jax.random.PRNGKey(0))
+    l_gkd, _ = gkd.loss_fn(model)(params, payload, (), x, y)
+    avg = algorithms.make("fedavg")
+    l_avg, _ = avg.loss_fn(model)(params, (), (), x, y)
+    np.testing.assert_allclose(float(l_gkd), float(l_avg), rtol=1e-6)
+
+
+def test_fedprox_penalizes_distance():
+    from repro.configs.paper import CIFAR10, scaled
+    from repro.core.modelzoo import make_model
+    task = scaled(CIFAR10, 0.001)
+    model = make_model(task)
+    params = model.init(jax.random.PRNGKey(0))
+    far = jax.tree_util.tree_map(lambda p: p + 1.0, params)
+    x = jnp.ones((2, 32, 32, 3))
+    y = jnp.asarray([0, 1])
+    prox = algorithms.make("fedprox", mu=0.1)
+    payload = {"anchor": params}
+    l_at, _ = prox.loss_fn(model)(params, payload, (), x, y)
+    l_far, _ = prox.loss_fn(model)(far, payload, (), x, y)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    # the proximal term alone contributes mu/2 * n_params at distance 1
+    assert float(l_far) > float(l_at)
+
+
+def test_fedgkd_vote_payload_padding():
+    from repro.configs.paper import CIFAR10, scaled
+    from repro.core.modelzoo import make_model
+    task = scaled(CIFAR10, 0.001)
+    model = make_model(task)
+    params = model.init(jax.random.PRNGKey(0))
+    vote = algorithms.make("fedgkd-vote", buffer_m=4)
+    server = vote.init_server(params, model, task.num_classes)
+    payload = vote.round_payload(server, jax.random.PRNGKey(0))
+    # only 1 model buffered: padded entries carry γ=0
+    g = np.asarray(payload["gammas"])
+    assert g.shape == (4,)
+    assert g[1:].sum() == 0.0 and g[0] > 0
+    lead = jax.tree_util.tree_leaves(payload["teachers"])[0]
+    assert lead.shape[0] == 4

@@ -1,0 +1,92 @@
+"""Per-kernel allclose: flash attention vs jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops, ref
+from proptest import sweep
+
+
+def _run(b, sq, skv, hq, hkv, d, causal=True, window=None, dtype=jnp.float32,
+         bq=32, bkv=32, tol=5e-5):
+    ks = jax.random.split(jax.random.PRNGKey(b * 7 + sq), 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d)).astype(dtype)
+    out = ops.flash_attention_gqa(q, k, v, causal=causal, window=window,
+                                  block_q=bq, block_kv=bkv)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("sq,skv", [(32, 32), (64, 64), (100, 100), (96, 96)])
+def test_causal_shapes(sq, skv):
+    _run(2, sq, skv, 4, 2, 32)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (8, 1), (6, 3)])
+def test_gqa_groups(hq, hkv):
+    _run(1, 64, 64, hq, hkv, 32)
+
+
+@pytest.mark.parametrize("window", [16, 32, 64])
+def test_sliding_window(window):
+    _run(1, 128, 128, 4, 2, 32, window=window)
+
+
+@pytest.mark.parametrize("d", [32, 64, 128])
+def test_head_dims(d):
+    _run(1, 64, 64, 2, 2, d)
+
+
+def test_bf16():
+    _run(1, 64, 64, 4, 2, 64, dtype=jnp.bfloat16, tol=2e-2)
+
+
+def test_noncausal_block_aligned():
+    _run(1, 64, 64, 4, 4, 32, causal=False)
+
+
+def test_gradients_flow():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+
+    def f(q, k, v):
+        return jnp.sum(ops.flash_attention_gqa(q, k, v, block_q=16, block_kv=16))
+
+    gq, gk, gv = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    rq, rk, rv = jax.grad(
+        lambda q, k, v: jnp.sum(ref.attention_ref(q, k, v)),
+        argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(rq), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(rk), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(rv), atol=1e-5)
+
+
+@sweep(n=10)
+def test_property_random_configs(rng):
+    b = int(rng.integers(1, 3))
+    sq = int(rng.integers(1, 5)) * 32
+    hkv = int(rng.choice([1, 2, 4]))
+    hq = hkv * int(rng.choice([1, 2, 4]))
+    d = int(rng.choice([16, 32, 64]))
+    window = int(rng.choice([0, 16, 48])) or None
+    _run(b, sq, sq, hq, hkv, d, window=window)
+
+
+@sweep(n=6)
+def test_property_rows_are_convex_combinations(rng):
+    """Each output row must lie in the convex hull of V rows: here we check
+    max |out| <= max |v| (softmax weights sum to 1)."""
+    sq = int(rng.integers(1, 4)) * 32
+    ks = jax.random.split(jax.random.PRNGKey(int(rng.integers(1 << 30))), 3)
+    q = jax.random.normal(ks[0], (1, sq, 2, 32))
+    k = jax.random.normal(ks[1], (1, sq, 2, 32))
+    v = jax.random.normal(ks[2], (1, sq, 2, 32))
+    out = ops.flash_attention_gqa(q, k, v, block_q=32, block_kv=32)
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-5

@@ -1,0 +1,97 @@
+"""Per-kernel allclose: fused KD-KL loss vs pure-jnp oracle.
+
+Sweeps shapes/dtypes (interpret mode on CPU) and checks the custom VJP.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.kd_kl import ops, ref
+from proptest import sweep
+
+
+def _check(lt, ls, temp=1.0, br=32, bv=128, tol=2e-4):
+    out = ops.kd_kl_loss(lt, ls, temperature=temp, block_rows=br, block_vocab=bv)
+    want = ref.kd_kl_rowwise(lt, ls, temp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("t,v", [(8, 128), (32, 128), (100, 300), (17, 1000),
+                                 (256, 1024), (1, 64)])
+def test_fwd_shapes(t, v):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(t * 1000 + v))
+    _check(jax.random.normal(k1, (t, v)) * 3, jax.random.normal(k2, (t, v)) * 3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    lt = (jax.random.normal(k1, (64, 256)) * 3).astype(dtype)
+    ls = (jax.random.normal(k2, (64, 256)) * 3).astype(dtype)
+    out = ops.kd_kl_loss(lt, ls, block_rows=32, block_vocab=128)
+    want = ref.kd_kl_rowwise(lt, ls)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("temp", [0.5, 1.0, 2.0, 4.0])
+def test_temperature(temp):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    _check(jax.random.normal(k1, (40, 200)) * 3,
+           jax.random.normal(k2, (40, 200)) * 3, temp=temp, tol=5e-4)
+
+
+def test_gradient_matches_reference():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    lt = jax.random.normal(k1, (48, 300)) * 2
+    ls = jax.random.normal(k2, (48, 300)) * 2
+    g = jax.grad(lambda ls: jnp.mean(
+        ops.kd_kl_loss(lt, ls, block_rows=16, block_vocab=128)))(ls)
+    gr = jax.grad(lambda ls: jnp.mean(ref.kd_kl_rowwise(lt, ls)))(ls)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-6)
+
+
+def test_teacher_gets_zero_gradient():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    lt = jax.random.normal(k1, (16, 128))
+    ls = jax.random.normal(k2, (16, 128))
+    g = jax.grad(lambda lt: jnp.mean(
+        ops.kd_kl_loss(lt, ls, block_rows=16, block_vocab=128)))(lt)
+    assert float(jnp.max(jnp.abs(g))) == 0.0
+
+
+def test_leading_dims_preserved():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    lt = jax.random.normal(k1, (2, 3, 5, 64))
+    ls = jax.random.normal(k2, (2, 3, 5, 64))
+    out = ops.kd_kl_loss(lt, ls, block_rows=8, block_vocab=64)
+    assert out.shape == (2, 3, 5)
+
+
+# ---- properties -----------------------------------------------------------
+
+@sweep(n=15)
+def test_property_nonnegative_and_zero_at_equality(rng):
+    t = int(rng.integers(1, 64))
+    v = int(rng.integers(2, 300))
+    lt = jnp.asarray(rng.standard_normal((t, v)) * 5, jnp.float32)
+    out = ops.kd_kl_loss(lt, lt, block_rows=16, block_vocab=64)
+    assert float(jnp.max(jnp.abs(out))) < 1e-4, "KL(p‖p) must be ~0"
+    ls = jnp.asarray(rng.standard_normal((t, v)) * 5, jnp.float32)
+    out = ops.kd_kl_loss(lt, ls, block_rows=16, block_vocab=64)
+    assert float(jnp.min(out)) >= -1e-5, "KL must be non-negative"
+
+
+@sweep(n=10)
+def test_property_shift_invariance(rng):
+    """Adding a constant to all logits of a row changes nothing."""
+    t, v = 8, int(rng.integers(4, 200))
+    lt = jnp.asarray(rng.standard_normal((t, v)), jnp.float32)
+    ls = jnp.asarray(rng.standard_normal((t, v)), jnp.float32)
+    c = float(rng.standard_normal()) * 10
+    a = ops.kd_kl_loss(lt, ls, block_rows=8, block_vocab=64)
+    b = ops.kd_kl_loss(lt + c, ls - c, block_rows=8, block_vocab=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)

@@ -1,0 +1,80 @@
+"""Per-kernel allclose: Pallas SSD scan vs sequential + chunked oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan import ops
+from repro.models.ssm import ssd_chunked, ssd_reference
+from proptest import sweep
+
+
+def _gen(key, b, l, h, p, g, n):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, l, g, n))
+    C = jax.random.normal(ks[4], (b, l, g, n))
+    return x, dt, A, B, C
+
+
+@pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
+    (2, 64, 4, 8, 1, 16, 16),
+    (1, 96, 2, 16, 2, 8, 32),
+    (2, 128, 4, 64, 1, 128, 128),
+    (1, 50, 2, 8, 1, 8, 16),        # pad path
+])
+def test_fwd_vs_sequential(b, l, h, p, g, n, chunk):
+    x, dt, A, B, C = _gen(jax.random.PRNGKey(l), b, l, h, p, g, n)
+    y, st = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    want = ssd_reference(x, dt, A, B, C)
+    tol = 1e-3 if n >= 64 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_final_state_matches_chunked():
+    x, dt, A, B, C = _gen(jax.random.PRNGKey(7), 2, 64, 4, 8, 1, 16)
+    _, st = ops.ssd_scan(x, dt, A, B, C, chunk=16)
+    _, st_ref = ssd_chunked(x, dt, A, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gradients_match_oracle():
+    x, dt, A, B, C = _gen(jax.random.PRNGKey(9), 1, 32, 2, 8, 1, 8)
+    g = jax.grad(lambda x, dt: jnp.sum(
+        ops.ssd_scan(x, dt, A, B, C, chunk=16)[0]), argnums=(0, 1))(x, dt)
+    gr = jax.grad(lambda x, dt: jnp.sum(
+        ssd_chunked(x, dt, A, B, C, chunk=16)[0]), argnums=(0, 1))(x, dt)
+    for a, b_ in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4)
+
+
+@sweep(n=8)
+def test_property_random_configs(rng):
+    b = int(rng.integers(1, 3))
+    l = int(rng.integers(2, 10)) * 8
+    h = int(rng.choice([2, 4]))
+    g = int(rng.choice([1, h]))
+    p = int(rng.choice([8, 16]))
+    n = int(rng.choice([8, 16]))
+    chunk = int(rng.choice([8, 16, 32]))
+    x, dt, A, B, C = _gen(jax.random.PRNGKey(int(rng.integers(1 << 30))),
+                          b, l, h, p, g, n)
+    y, _ = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    want = ssd_reference(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@sweep(n=6)
+def test_property_decay_bounds_state(rng):
+    """With x == 0 the output must be 0 regardless of dt/A/B/C."""
+    b, l, h, p, g, n = 1, 32, 2, 8, 1, 8
+    _, dt, A, B, C = _gen(jax.random.PRNGKey(int(rng.integers(1 << 30))),
+                          b, l, h, p, g, n)
+    y, st = ops.ssd_scan(jnp.zeros((b, l, h, p)), dt, A, B, C, chunk=16)
+    assert float(jnp.max(jnp.abs(y))) == 0.0
+    assert float(jnp.max(jnp.abs(st))) == 0.0

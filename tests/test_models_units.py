@@ -1,0 +1,189 @@
+"""Model-substrate unit + property tests: norms, RoPE, MoE, SSD, attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention, layers, moe as moe_lib, ssm
+from proptest import sweep
+
+
+# --- layers ------------------------------------------------------------------
+
+def test_rmsnorm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 10
+    p = layers.rmsnorm_init(64)
+    y = layers.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+def test_groupnorm_normalizes_groups():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 32)) * 5 + 3
+    p = layers.groupnorm_init(32)
+    y = layers.groupnorm(p, x, num_groups=2)
+    yg = np.asarray(y).reshape(2, 8, 8, 2, 16)
+    np.testing.assert_allclose(yg.mean((1, 2, 4)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(yg.std((1, 2, 4)), 1.0, atol=1e-3)
+
+
+@sweep(n=8)
+def test_rope_preserves_norm_and_relativity(rng):
+    """RoPE is orthogonal (norm-preserving) and relative: q·k depends only
+    on position difference."""
+    d = int(rng.choice([16, 32, 64]))
+    x = jnp.asarray(rng.standard_normal((1, 6, 2, d)), jnp.float32)
+    pos = jnp.arange(6)[None, :]
+    y = layers.apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, d)), jnp.float32)
+    def dot_at(pq, pk):
+        qq = layers.apply_rope(q, jnp.asarray([[pq]]))
+        kk = layers.apply_rope(k, jnp.asarray([[pk]]))
+        return float(jnp.sum(qq * kk))
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(7, 5), rtol=1e-3, atol=1e-4)
+
+
+# --- attention ----------------------------------------------------------------
+
+def test_causal_mask_window():
+    m = attention.causal_mask(4, 4, window=2)
+    want = np.array([[1, 0, 0, 0], [1, 1, 0, 0], [0, 1, 1, 0], [0, 0, 1, 1]],
+                    bool)
+    np.testing.assert_array_equal(np.asarray(m), want)
+
+
+def test_gqa_equals_mha_when_repeated():
+    """GQA with kv heads repeated == MHA with duplicated kv heads."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 8, 4, 16))
+    k = jax.random.normal(ks[1], (1, 8, 2, 16))
+    v = jax.random.normal(ks[2], (1, 8, 2, 16))
+    mask = attention.causal_mask(8, 8)
+    out_gqa = attention.dot_product_attention(q, k, v, mask)
+    k_full = jnp.repeat(k, 2, axis=2)
+    v_full = jnp.repeat(v, 2, axis=2)
+    out_mha = attention.dot_product_attention(q, k_full, v_full, mask)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               atol=1e-5)
+
+
+def test_mla_decode_matches_prefill():
+    cfg = attention.MLAConfig(d_model=64, n_heads=4, q_lora_rank=32,
+                              kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+                              v_head_dim=16)
+    params = attention.mla_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 64))
+    pos = jnp.arange(6)[None, :]
+    full = attention.mla_attention(params, x, cfg, pos)
+    cache = attention.mla_cache_init(1, 8, cfg, jnp.float32)
+    outs = []
+    for i in range(6):
+        y, cache = attention.mla_decode_step(params, x[:, i:i + 1], cache, cfg)
+        outs.append(y[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=1e-3, atol=1e-4)
+
+
+# --- MoE ------------------------------------------------------------------------
+
+def _moe_cfg(**kw):
+    base = dict(d_model=32, d_ff=64, n_experts=4, top_k=2, group_size=64,
+                capacity_factor=2.0)
+    base.update(kw)
+    return moe_lib.MoEConfig(**base)
+
+
+def test_moe_lossless_equals_dense_mixture():
+    """With capacity >= tokens, MoE out == explicit top-k expert mixture."""
+    cfg = _moe_cfg(capacity_factor=4.0)  # cap = 16·2/4·4 = 32 ≥ tokens
+    params = moe_lib.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 32))
+    out, aux = moe_lib.moe_apply(params, x, cfg)
+    xf = x.reshape(16, 32)
+    gates, idx, _ = moe_lib.router_probs(params, xf, cfg)
+    want = np.zeros((16, 32), np.float32)
+    for t in range(16):
+        for j in range(cfg.top_k):
+            e = int(idx[t, j])
+            h = jax.nn.silu(xf[t] @ params["gate"][e]) * (xf[t] @ params["up"][e])
+            want[t] += float(gates[t, j]) * np.asarray(h @ params["down"][e])
+    np.testing.assert_allclose(np.asarray(out[0]), want, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = _moe_cfg(capacity_factor=0.1)  # tiny capacity → heavy dropping
+    params = moe_lib.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32))
+    out, _ = moe_lib.moe_apply(params, x, cfg)
+    # most tokens dropped ⇒ many all-zero routed outputs
+    zero_rows = np.mean(np.all(np.abs(np.asarray(out[0])) < 1e-7, axis=-1))
+    assert zero_rows > 0.3
+
+
+def test_moe_group_scan_equivalence():
+    """Grouped (scanned) dispatch == single-group dispatch when capacity
+    scales with group count."""
+    params = moe_lib.moe_init(jax.random.PRNGKey(0), _moe_cfg())
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
+    big = _moe_cfg(group_size=64, capacity_factor=16.0)
+    small = _moe_cfg(group_size=16, capacity_factor=16.0)
+    o1, _ = moe_lib.moe_apply(params, x, big)
+    o2, _ = moe_lib.moe_apply(params, x, small)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_moe_shared_expert_added():
+    cfg = _moe_cfg(n_shared_experts=1, shared_d_ff=64)
+    params = moe_lib.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+    out, _ = moe_lib.moe_apply(params, x, cfg)
+    from repro.models.layers import swiglu
+    no_shared, _ = moe_lib.moe_apply(params, x, cfg._replace(n_shared_experts=0))
+    shared = swiglu(params["shared"], x.reshape(8, 32)).reshape(1, 8, 32)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(no_shared + shared), atol=1e-5)
+
+
+def test_sigmoid_router_gates_normalized():
+    cfg = _moe_cfg(router_type="sigmoid")
+    params = moe_lib.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+    gates, idx, probs = moe_lib.router_probs(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+
+
+# --- SSM ------------------------------------------------------------------------
+
+def test_ssd_chunk_invariance():
+    """Different chunk sizes must give identical results."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (1, 64, 2, 8))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 64, 2)))
+    A = -jnp.exp(jax.random.normal(ks[2], (2,)))
+    B = jax.random.normal(ks[3], (1, 64, 1, 8))
+    C = jax.random.normal(ks[4], (1, 64, 1, 8))
+    y8, s8 = ssm.ssd_chunked(x, dt, A, B, C, chunk=8)
+    y32, s32 = ssm.ssd_chunked(x, dt, A, B, C, chunk=32)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y32), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s8), np.asarray(s32), atol=1e-4)
+
+
+def test_mamba_block_decode_matches_forward():
+    cfg = ssm.SSMConfig(d_model=32, d_state=8, head_dim=8, expand=2,
+                        d_conv=4, chunk=8)
+    params = ssm.mamba2_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 32))
+    full, _ = ssm.mamba2_forward(params, x, cfg)
+    cache = ssm.ssm_cache_init(1, cfg)
+    outs = []
+    for i in range(12):
+        y, cache = ssm.mamba2_decode_step(params, x[:, i:i + 1], cache, cfg)
+        outs.append(y[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=1e-3, atol=1e-4)

@@ -1,0 +1,86 @@
+"""Optimizers (convergence on quadratics) + checkpoint roundtrips."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_latest, load_pytree, save_pytree, save_round
+from repro.optim import adam, apply_updates, clip_by_global_norm, global_norm, sgd
+from repro.optim.schedules import cosine_decay, warmup_cosine
+
+
+def _minimize(opt, lr, steps=200):
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    target = jnp.asarray([1.0, 1.0])
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(lambda p: jnp.sum((p["x"] - target) ** 2))(params)
+        upd, state = opt.update(g, state, params, lr)
+        return apply_updates(params, upd), state
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return float(jnp.max(jnp.abs(params["x"] - target)))
+
+
+def test_sgd_momentum_converges():
+    assert _minimize(sgd(momentum=0.9), lr=0.05) < 1e-3
+
+
+def test_adam_converges():
+    assert _minimize(adam(), lr=0.1) < 1e-3
+
+
+def test_weight_decay_shrinks():
+    opt = sgd(momentum=0.0, weight_decay=0.1)
+    params = {"x": jnp.asarray([1.0])}
+    state = opt.init(params)
+    zero_g = {"x": jnp.asarray([0.0])}
+    upd, state = opt.update(zero_g, state, params, 0.1)
+    new = apply_updates(params, upd)
+    assert float(new["x"][0]) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_schedules_shapes():
+    s = cosine_decay(1.0, 100)
+    assert float(s(0)) == 1.0
+    assert 0.0 < float(s(100)) <= 0.11
+    w = warmup_cosine(1.0, 10, 100)
+    assert float(w(0)) == 0.0
+    assert float(w(10)) <= 1.0
+    assert float(w(5)) == 0.5
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_pytree(path, tree, meta={"round": 3})
+    loaded = load_pytree(path, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_load_latest_round(tmp_path):
+    tree = {"w": jnp.zeros((2,))}
+    for r in (1, 5, 3):
+        save_round(str(tmp_path), r, {"w": jnp.full((2,), float(r))})
+    loaded, rnd = load_latest(str(tmp_path), tree)
+    assert rnd == 5
+    np.testing.assert_allclose(np.asarray(loaded["w"]), 5.0)
+
+
+def test_load_latest_empty(tmp_path):
+    assert load_latest(str(tmp_path / "nope"), {}) is None

@@ -1,0 +1,101 @@
+"""§Perf optimization levers must be semantics-preserving:
+sharding constraints, batched MoE groups, last-only prefill, cached-top-K KD.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import steps as steps_lib
+from repro.models import moe as moe_lib, transformer
+
+
+def test_moe_constraints_preserve_values():
+    """dp/ep sharding constraints are no-ops numerically (1-device mesh)."""
+    cfg = moe_lib.MoEConfig(d_model=32, d_ff=64, n_experts=4, top_k=2,
+                            group_size=16, capacity_factor=2.0)
+    params = moe_lib.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
+    base, _ = moe_lib.moe_apply(params, x, cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh:
+        con, _ = jax.jit(lambda p, x: moe_lib.moe_apply(
+            p, x, cfg._replace(dp_axis="data", ep_axis="model")))(params, x)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(con),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_batched_groups_match_scan():
+    cfg = moe_lib.MoEConfig(d_model=32, d_ff=64, n_experts=4, top_k=2,
+                            group_size=16, capacity_factor=2.0)
+    params = moe_lib.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
+    a, aux_a = moe_lib.moe_apply(params, x, cfg)
+    b, aux_b = moe_lib.moe_apply(params, x, cfg._replace(batched_groups=True))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(float(aux_a), float(aux_b), rtol=1e-5)
+
+
+def test_prefill_last_only_matches_full():
+    cfg = configs.get_smoke_config("phi4-mini-3.8b")
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                          cfg.vocab_size)}
+    full = steps_lib.make_prefill_step(cfg)(params, batch)
+    last = steps_lib.make_prefill_step(cfg, last_only=True)(params, batch)
+    assert last.shape == (2, 1, cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(last[:, 0]), np.asarray(full[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unrolled_layers_match_scan():
+    """The cost-probe execution mode (scan_layers=False) is numerically
+    identical to the production scan mode."""
+    for arch in ("phi4-mini-3.8b", "mixtral-8x7b", "zamba2-1.2b",
+                 "deepseek-v3-671b"):
+        cfg = configs.get_smoke_config(arch)
+        params = transformer.init(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                                  cfg.vocab_size)
+        a, _ = transformer.forward(params, cfg, toks)
+        b, _ = transformer.forward(params, cfg.replace(scan_layers=False), toks)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4), arch
+
+
+def test_unrolled_decode_matches_scan_decode():
+    cfg = configs.get_smoke_config("mixtral-8x7b")
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    cache_a = transformer.init_cache(cfg, 1, 8, jnp.float32)
+    cache_b = transformer.init_cache(cfg.replace(scan_layers=False), 1, 8,
+                                     jnp.float32)
+    la, _ = transformer.decode_step(params, cfg, tok, cache_a)
+    lb, _ = transformer.decode_step(params, cfg.replace(scan_layers=False),
+                                    tok, cache_b)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cached_topk_step_runs_and_reduces_work():
+    """cached_topk train step: runs, finite, and its loss ~ KD-teacher loss
+    when top-K covers the whole (small) vocab."""
+    cfg = configs.get_smoke_config("phi4-mini-3.8b")
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    teacher = transformer.init(jax.random.PRNGKey(1), cfg)
+    b, s = 2, 8
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(3), (b, s), 0,
+                                     cfg.vocab_size),
+    }
+    t_logits, _ = transformer.forward(teacher, cfg, batch["tokens"])
+    vals, idx = jax.lax.top_k(t_logits, cfg.vocab_size)
+    batch_ck = dict(batch, teacher_topk_vals=vals, teacher_topk_idx=idx)
+
+    loss_t = steps_lib.make_loss_fn(cfg, kd_mode="teacher", gamma=0.2)
+    loss_c = steps_lib.make_loss_fn(cfg, kd_mode="cached_topk", gamma=0.2)
+    lt, mt = loss_t(params, teacher, batch)
+    lc, mc = loss_c(params, (), batch_ck)
+    np.testing.assert_allclose(float(lt), float(lc), rtol=1e-4)
