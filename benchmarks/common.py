@@ -37,7 +37,8 @@ def run_methods(task: PaperTask, methods: list[str], alphas: list[float], *,
                 trials: int = 1, n_test: int = 400, scale: float = 0.04,
                 rounds: int | None = None, local_epochs: int | None = None,
                 max_batches: int | None = None, width: int = 16,
-                buffer_m: int | None = None, verbose: bool = False):
+                buffer_m: int | None = None, verbose: bool = False,
+                executor: str = "auto"):
     """Returns rows: dicts with method, alpha, best, final, std, seconds."""
     t = scaled(task, scale, rounds=rounds, local_epochs=local_epochs)
     rows = []
@@ -52,7 +53,7 @@ def run_methods(task: PaperTask, methods: list[str], alphas: list[float], *,
                 t0 = time.time()
                 h = fl_loop.run_federated(t, algo, datas[s], seed=s,
                                           max_batches_per_client=max_batches,
-                                          verbose=verbose)
+                                          verbose=verbose, executor=executor)
                 secs.append(time.time() - t0)
                 best.append(h.best_acc)
                 final.append(h.final_acc)

@@ -1,0 +1,110 @@
+"""Executor benchmark: sequential vs vmap (vs shard_map) per-round time.
+
+Measures ONLY the client-execution stage (``ClientExecutor.run_round``) so
+the comparison isolates what the tentpole changed: with the sequential
+executor, round time scales linearly with the number of sampled clients;
+with the vmap executor the whole cohort is one jitted XLA call.
+
+    PYTHONPATH=src python benchmarks/executor_bench.py            # fast preset
+    PYTHONPATH=src python benchmarks/executor_bench.py --clients 16 --rounds 5
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.paper import PAPER_TASKS, scaled
+from repro.core import algorithms, executor as executor_lib, fl_loop
+from repro.optim import adam, sgd
+
+
+def bench_executor(name: str, ctx, data, n_sample: int, seed: int,
+                   global_params, payload, states, *, rounds: int) -> dict:
+    exec_ = executor_lib.get_executor(name, ctx.algo, n_sample)
+    rng = np.random.default_rng(seed)
+    sampled = rng.choice(data.n_clients, size=n_sample, replace=False)
+    cdata = [data.clients[int(k)] for k in sampled]
+    cstates = [states[int(k)] for k in sampled]
+
+    # warmup: compile outside the timed region
+    res = exec_.run_round(ctx, global_params, payload, cstates, cdata, rng)
+    jax.block_until_ready(res.uploads[-1]["params"])
+
+    times = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        res = exec_.run_round(ctx, global_params, payload, cstates, cdata, rng)
+        jax.block_until_ready(res.uploads[-1]["params"])
+        times.append(time.perf_counter() - t0)
+    return {"executor": name, "median_s": float(np.median(times)),
+            "min_s": float(np.min(times)), "rounds": rounds}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="toy", choices=sorted(PAPER_TASKS),
+                    help="'toy' (MLP, the fast preset) or a paper task")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="sampled clients per round (>=8 for the criterion)")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="dataset scale (paper tasks need ~0.02)")
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--max-batches", type=int, default=None)
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--algo", default="fedgkd")
+    ap.add_argument("--alpha", type=float, default=10.0,
+                    help="Dirichlet concentration; small alpha => ragged "
+                         "client sizes => more padding waste on the vmap path")
+    ap.add_argument("--with-shard-map", action="store_true")
+    args = ap.parse_args(argv)
+
+    task = scaled(PAPER_TASKS[args.task], scale=args.scale, rounds=1,
+                  local_epochs=args.local_epochs)
+    task = dataclasses.replace(
+        task, n_clients=max(task.n_clients, args.clients),
+        participation=args.clients / max(task.n_clients, args.clients))
+    data = fl_loop.make_federated_data(task, alpha=args.alpha, seed=0,
+                                       n_test=64)
+    algo = algorithms.make(args.algo)
+
+    from repro.core.modelzoo import make_model
+    model = make_model(task, projection_head=algo.needs_projection_head,
+                       width=args.width)
+    global_params = model.init(jax.random.PRNGKey(1))
+    server = algo.init_server(global_params, model, task.num_classes)
+    payload = algo.round_payload(server, jax.random.PRNGKey(2))
+    opt = (adam(weight_decay=task.weight_decay) if task.optimizer == "adam"
+           else sgd(momentum=task.momentum, weight_decay=task.weight_decay))
+    ctx = executor_lib.RoundContext(
+        algo=algo, model=model, opt=opt, lr=task.lr,
+        batch_size=task.batch_size, epochs=task.local_epochs,
+        max_batches=args.max_batches)
+    states = {k: algo.init_client_state(k, global_params)
+              for k in range(data.n_clients)}
+
+    names = ["sequential", "vmap"]
+    if args.with_shard_map:
+        names.append("shard_map")
+    rows = [bench_executor(n, ctx, data, args.clients, 0, global_params,
+                           payload, states, rounds=args.rounds)
+            for n in names]
+
+    print(f"\n{args.algo} on {task.name}, {args.clients} sampled clients, "
+          f"{args.local_epochs} local epochs, width={args.width}")
+    print(f"{'executor':<12} {'median s/round':>15} {'min s/round':>13}")
+    for r in rows:
+        print(f"{r['executor']:<12} {r['median_s']:>15.4f} {r['min_s']:>13.4f}")
+    base = rows[0]["median_s"]
+    for r in rows[1:]:
+        print(f"speedup {r['executor']} vs sequential: "
+              f"{base / r['median_s']:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

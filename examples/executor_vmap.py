@@ -1,0 +1,49 @@
+"""Selecting a ClientExecutor: batched (vmap) vs sequential client rounds.
+
+``run_federated`` takes ``executor=`` — "sequential", "vmap", "shard_map"
+or "auto" (default).  The vmap executor stacks the sampled clients' padded
+batches and trains the whole cohort in ONE jitted XLA call, so per-round
+wall-clock stops scaling linearly with participation while producing the
+same numbers as the sequential reference (same batch draws, masked padding).
+
+    PYTHONPATH=src python examples/executor_vmap.py [--rounds 5]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs.paper import TOY
+from repro.core import algorithms, fl_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--alpha", type=float, default=1.0)
+    args = ap.parse_args()
+
+    data = fl_loop.make_federated_data(TOY, alpha=args.alpha, seed=0,
+                                       n_test=400)
+    print(f"{TOY.n_clients} clients, "
+          f"{int(TOY.participation * TOY.n_clients)} sampled per round")
+
+    results = {}
+    for executor in ("sequential", "vmap"):
+        algo = algorithms.make("fedgkd", gamma=TOY.gamma, buffer_m=3)
+        t0 = time.time()
+        h = fl_loop.run_federated(TOY, algo, data, rounds=args.rounds,
+                                  seed=0, executor=executor)
+        results[executor] = (h, time.time() - t0)
+        print(f"{executor:>10}: final_acc={h.final_acc:.4f} "
+              f"({results[executor][1]:.1f}s total)")
+
+    hs, ts = results["sequential"]
+    hv, tv = results["vmap"]
+    drift = max(abs(a - b) for a, b in zip(hs.accs(), hv.accs()))
+    print(f"\nmax per-round accuracy drift: {drift:.2e} (same numbers)")
+    print(f"wall-clock: sequential {ts:.1f}s vs vmap {tv:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

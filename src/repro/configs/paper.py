@@ -37,6 +37,8 @@ class PaperTask:
     seq_len: int = 64
     vocab_size: int = 2000
     d_model: int = 128
+    # tabular (mlp) tasks
+    feat_dim: int = 16
 
 
 CIFAR10 = PaperTask("cifar10", "image", "resnet8", num_classes=10,
@@ -57,8 +59,14 @@ SST5 = PaperTask("sst5", "text", "distilbert", num_classes=5,
                  train_size=4_272, n_clients=10, rounds=10,
                  local_epochs=3, participation=0.4, optimizer="adam",
                  lr=1e-5, weight_decay=0.0, gamma=0.2, buffer_m=3)
+# not from the paper: a light MLP workload for executor benchmarks/examples
+TOY = PaperTask("toy", "tabular", "mlp", num_classes=10,
+                train_size=2_000, n_clients=16, rounds=20,
+                local_epochs=2, participation=0.5, batch_size=32,
+                lr=0.05, weight_decay=0.0, feat_dim=16)
 
-PAPER_TASKS = {t.name: t for t in (CIFAR10, CIFAR100, TINY_IMAGENET, AG_NEWS, SST5)}
+PAPER_TASKS = {t.name: t for t in (CIFAR10, CIFAR100, TINY_IMAGENET, AG_NEWS,
+                                   SST5, TOY)}
 
 
 def scaled(task: PaperTask, scale: float, rounds: Optional[int] = None,

@@ -1,8 +1,26 @@
 """FL algorithms: FedGKD (the paper's contribution) + all compared baselines.
 
 Public surface:
-    from repro.core import algorithms, fl_loop, distillation
+    from repro.core import algorithms, executor, fl_loop, distillation
+
     algo = algorithms.make("fedgkd", gamma=0.2, buffer_m=5)
-    history = fl_loop.run_federated(task, algo, data, ...)
+    history = fl_loop.run_federated(task, algo, data, executor="vmap")
+
+``run_federated(..., executor=)`` selects the pluggable client-execution
+strategy (repro.core.executor):
+
+    "sequential"  reference semantics — one jitted lax.scan per client
+    "vmap"        the whole sampled cohort trains in ONE jitted XLA call
+                  (stacked/padded batches, masked ragged clients)
+    "shard_map"   experimental: the stacked round routed through a
+                  ("clients",) device mesh
+    "auto"        (default) vmap when both the algorithm and the model
+                  support batched execution, else sequential
+
+Algorithms implement a small pure pytree-in/pytree-out interface —
+``loss_fn`` / ``client_finalize`` / ``update_client_state`` — which every
+executor may trace once and vmap/shard over clients; see
+``algorithms.Algorithm`` for the contract.
 """
-from repro.core import distillation, server, client, algorithms, fl_loop, modelzoo  # noqa: F401
+from repro.core import (algorithms, client, distillation, executor, fl_loop,  # noqa: F401
+                        modelzoo, server)

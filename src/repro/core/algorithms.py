@@ -27,11 +27,20 @@ from repro.models import layers
 
 
 class Algorithm:
-    """Base: FedAvg behaviour; subclasses override the regularizer hooks."""
+    """Base: FedAvg behaviour; subclasses override the regularizer hooks.
+
+    Executor contract (see ``repro.core.executor``): ``loss_fn``,
+    ``client_finalize`` and ``update_client_state`` must be pure
+    pytree-in/pytree-out with no Python-side per-client branching, so a
+    ``ClientExecutor`` may trace them once and vmap/shard them over a
+    stacked client axis.  ``mask`` is a per-example weight vector (padded
+    examples carry weight 0); ``mask=None`` means all-ones.
+    """
 
     name = "fedavg"
     needs_projection_head = False
     comm_multiplier = 1.0     # download cost relative to FedAvg
+    supports_vmap = True      # set False to force sequential execution
 
     def __init__(self, **kw):
         self.hp = kw
@@ -59,17 +68,23 @@ class Algorithm:
         return ()
 
     def loss_fn(self, model: ModelBundle):
-        """Return loss(params, payload, client_state, x, y) -> (loss, aux)."""
+        """Return loss(params, payload, client_state, x, y, mask=None)
+        -> (loss, aux)."""
 
-        def loss(params, payload, client_state, x, y):
+        def loss(params, payload, client_state, x, y, mask=None):
             logits = model.apply(params, x)
-            return D.cross_entropy(logits, y), {}
+            return D.cross_entropy(logits, y, mask=mask), {}
 
         return loss
 
     def client_finalize(self, model: ModelBundle, params: Any,
-                        data, payload: Any) -> dict:
-        """Extra uploads beyond the trained weights."""
+                        x: Any, y: Any, mask: Any, payload: Any) -> dict:
+        """Extra uploads beyond the trained weights.
+
+        ``x``/``y`` are the client's (possibly padded) full arrays and
+        ``mask`` the per-example validity weights — pure jnp only, so the
+        hook can be vmapped over stacked clients.
+        """
         return {}
 
     def update_client_state(self, client_state: Any, params: Any,
@@ -92,10 +107,10 @@ class FedProx(Algorithm):
     def loss_fn(self, model):
         mu = self.mu
 
-        def loss(params, payload, client_state, x, y):
+        def loss(params, payload, client_state, x, y, mask=None):
             logits = model.apply(params, x)
             prox = 0.5 * mu * D.param_sq_dist(params, payload["anchor"])
-            return D.cross_entropy(logits, y) + prox, {}
+            return D.cross_entropy(logits, y, mask=mask) + prox, {}
 
         return loss
 
@@ -128,15 +143,15 @@ class FedGKD(Algorithm):
     def loss_fn(self, model):
         gamma, ltype, temp = self.gamma, self.loss_type, self.temperature
 
-        def loss(params, payload, client_state, x, y):
+        def loss(params, payload, client_state, x, y, mask=None):
             logits = model.apply(params, x)
             t_logits = jax.lax.stop_gradient(
                 model.apply(payload["teacher"], x))
-            ce = D.cross_entropy(logits, y)
+            ce = D.cross_entropy(logits, y, mask=mask)
             if ltype == "mse":
-                kd = D.kd_loss_mse(t_logits, logits, gamma)
+                kd = D.kd_loss_mse(t_logits, logits, gamma, mask=mask)
             else:
-                kd = D.kd_loss_kl(t_logits, logits, gamma, temp)
+                kd = D.kd_loss_kl(t_logits, logits, gamma, temp, mask=mask)
             return ce + kd, {"kd": kd}
 
         return loss
@@ -193,13 +208,14 @@ class FedGKDVote(FedGKD):
     def loss_fn(self, model):
         temp = self.temperature
 
-        def loss(params, payload, client_state, x, y):
+        def loss(params, payload, client_state, x, y, mask=None):
             logits = model.apply(params, x)
-            ce = D.cross_entropy(logits, y)
+            ce = D.cross_entropy(logits, y, mask=mask)
 
             def one(teacher):
                 t_logits = model.apply(teacher, x)
-                return jnp.mean(D.kl_divergence(t_logits, logits, temp))
+                return D.masked_mean(
+                    D.kl_divergence(t_logits, logits, temp), mask)
 
             kls = jax.lax.map(one, payload["teachers"])   # (M,)
             kd = 0.5 * jnp.sum(payload["gammas"] * kls)   # Σ (γ_m/2)·KL_m
@@ -245,19 +261,21 @@ class MOON(Algorithm):
         mu, tau = self.mu, self.tau
 
         def cos(a, b):
-            a = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-9)
-            b = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-9)
+            # eps inside the rsqrt: keeps the gradient finite for an
+            # exactly-zero feature row (a padded example under vmap)
+            a = a * jax.lax.rsqrt(jnp.sum(a * a, -1, keepdims=True) + 1e-12)
+            b = b * jax.lax.rsqrt(jnp.sum(b * b, -1, keepdims=True) + 1e-12)
             return jnp.sum(a * b, axis=-1)
 
-        def loss(params, payload, client_state, x, y):
+        def loss(params, payload, client_state, x, y, mask=None):
             logits = model.apply(params, x)
             z = model.features(params, x)
             z_g = jax.lax.stop_gradient(model.features(payload["global"], x))
             z_p = jax.lax.stop_gradient(model.features(client_state["prev"], x))
             pos = jnp.exp(cos(z, z_g) / tau)
             neg = jnp.exp(cos(z, z_p) / tau)
-            con = -jnp.mean(jnp.log(pos / (pos + neg) + 1e-12))
-            return D.cross_entropy(logits, y) + mu * con, {"con": con}
+            con = -D.masked_mean(jnp.log(pos / (pos + neg) + 1e-12), mask)
+            return D.cross_entropy(logits, y, mask=mask) + mu * con, {"con": con}
 
         return loss
 
@@ -292,20 +310,19 @@ class FedDistillPlus(Algorithm):
     def loss_fn(self, model):
         beta, temp = self.beta, self.temperature
 
-        def loss(params, payload, client_state, x, y):
+        def loss(params, payload, client_state, x, y, mask=None):
             logits = model.apply(params, x)
             teacher = payload["label_logits"][y]          # (B, C)
-            kd = jnp.mean(D.kl_divergence(teacher, logits, temp))
-            ce = D.cross_entropy(logits, y)
+            kd = D.masked_mean(D.kl_divergence(teacher, logits, temp), mask)
+            ce = D.cross_entropy(logits, y, mask=mask)
             return ce + beta * payload["enable"] * kd, {"kd": kd}
 
         return loss
 
-    def client_finalize(self, model, params, data, payload):
-        logits = model.apply(params, jnp.asarray(data.x))
-        y = jnp.asarray(data.y)
+    def client_finalize(self, model, params, x, y, mask, payload):
+        logits = model.apply(params, x)
         c = logits.shape[-1]
-        onehot = jax.nn.one_hot(y, c, dtype=jnp.float32)
+        onehot = jax.nn.one_hot(y, c, dtype=jnp.float32) * mask[:, None]
         sums = onehot.T @ logits                          # (C, C)
         counts = jnp.sum(onehot, axis=0)                  # (C,)
         return {"logit_sums": sums, "label_counts": counts}
@@ -385,12 +402,13 @@ class FedGen(Algorithm):
         def head_apply(params, feats):
             return layers.dense(params["fc"], feats)
 
-        def loss(params, payload, client_state, x, y):
+        def loss(params, payload, client_state, x, y, mask=None):
             logits = model.apply(params, x)
-            ce = D.cross_entropy(logits, y)
+            ce = D.cross_entropy(logits, y, mask=mask)
             b = x.shape[0]
             c = payload["label_dist"].shape[0]
-            rng = jax.random.fold_in(payload["rng"], jnp.sum(y))
+            y_eff = y if mask is None else y * mask.astype(y.dtype)
+            rng = jax.random.fold_in(payload["rng"], jnp.sum(y_eff))
             k1, k2 = jax.random.split(rng)
             y_gen = jax.random.categorical(
                 k1, jnp.log(payload["label_dist"] + 1e-9)[None, :].repeat(b, 0))
@@ -398,14 +416,16 @@ class FedGen(Algorithm):
             feats = jax.lax.stop_gradient(
                 self._gen_apply(payload["gen"], z, jax.nn.one_hot(y_gen, c)))
             gen_logits = head_apply(params, feats)
-            reg = D.cross_entropy(gen_logits, y_gen)
+            reg = D.cross_entropy(gen_logits, y_gen, mask=mask)
             return ce + alpha * reg, {"gen_ce": reg}
 
         return loss
 
-    def client_finalize(self, model, params, data, payload):
+    def client_finalize(self, model, params, x, y, mask, payload):
         c = payload["label_dist"].shape[0]
-        counts = jnp.bincount(jnp.asarray(data.y), length=c).astype(jnp.float32)
+        # one-hot sum instead of bincount so the hook stays vmappable
+        counts = jnp.sum(jax.nn.one_hot(y, c, dtype=jnp.float32)
+                         * mask[:, None], axis=0)
         return {"head": params["fc"], "label_counts": counts}
 
     def server_update(self, server, uploads, weights, model, val_batch=None):
@@ -476,9 +496,9 @@ class SCAFFOLD(Algorithm):
         return {"c_k": jax.tree_util.tree_map(jnp.zeros_like, global_params)}
 
     def loss_fn(self, model):
-        def loss(params, payload, client_state, x, y):
+        def loss(params, payload, client_state, x, y, mask=None):
             logits = model.apply(params, x)
-            ce = D.cross_entropy(logits, y)
+            ce = D.cross_entropy(logits, y, mask=mask)
             # linear correction term: <(c − c_k), w> has gradient (c − c_k)
             corr = sum(
                 jnp.sum((c - ck).astype(jnp.float32) * w.astype(jnp.float32))
@@ -490,21 +510,21 @@ class SCAFFOLD(Algorithm):
 
         return loss
 
-    def client_finalize(self, model, params, data, payload):
-        return {"anchor": payload["anchor"], "c": payload["c"]}
-
     def update_client_state(self, client_state, params, payload=None):
         return client_state  # updated in server_update via uploads
 
     def server_update(self, server, uploads, weights, model, val_batch=None):
-        # c_k update (option II) folded here: Δc_k = (w_t − w_k)/(K·η) − c
+        # c_k update (option II) folded here: Δc_k = (w_t − w_k)/(K·η) − c.
+        # The round's anchor/control variate are still in the server state at
+        # this point (uploading K broadcast copies of them would be waste).
         k_eta = self.local_steps_hint * self.lr
+        anchor, c_global = server["global"], server["c"]
         deltas = []
         for u in uploads:
             d = jax.tree_util.tree_map(
                 lambda wt, wk, c: (wt.astype(jnp.float32)
                                    - wk.astype(jnp.float32)) / k_eta - c,
-                u["anchor"], u["params"], u["c"])
+                anchor, u["params"], c_global)
             deltas.append(d)
         mean_delta = jax.tree_util.tree_map(
             lambda *xs: sum(xs) / len(xs), *deltas)
@@ -535,9 +555,9 @@ class FedDyn(Algorithm):
     def loss_fn(self, model):
         a = self.alpha
 
-        def loss(params, payload, client_state, x, y):
+        def loss(params, payload, client_state, x, y, mask=None):
             logits = model.apply(params, x)
-            ce = D.cross_entropy(logits, y)
+            ce = D.cross_entropy(logits, y, mask=mask)
             lin = sum(jnp.sum(h.astype(jnp.float32) * w.astype(jnp.float32))
                       for h, w in zip(
                           jax.tree_util.tree_leaves(client_state["h"]),
@@ -546,9 +566,6 @@ class FedDyn(Algorithm):
             return ce - lin + prox, {}
 
         return loss
-
-    def client_finalize(self, model, params, data, payload):
-        return {"anchor": payload["anchor"]}
 
     def update_client_state(self, client_state, params, payload=None):
         # dual update: h_k <- h_k - alpha*(w_k - w_t)

@@ -2,55 +2,78 @@
 
 Each sampled client runs E epochs of minibatch SGD on
     F_k(w) + <algorithm-specific regularizer>(w; payload, client_state)
-The step is jitted ONCE per (algorithm, model) and reused across clients and
-rounds — payloads are pytrees with a fixed structure.
+
+The local pass is expressed as a ``lax.scan`` over a stacked batch tensor
+``(S, B, ...)`` with two masks:
+
+    example mask (S, B)   zero-weight for examples padded onto a ragged
+                          batch — they contribute nothing to loss/grads
+    step mask    (S,)     False for steps padded onto a client with fewer
+                          batches than its neighbours — the whole step is
+                          an identity on (params, opt_state)
+
+That makes the SAME function usable three ways by the executors in
+``repro.core.executor``: jitted per client (SequentialExecutor), vmapped
+over a stacked client axis (VmapExecutor), or vmapped inside a shard_map
+shard (ShardMapExecutor).  ``loss_fn`` comes from the algorithm and must be
+pure pytree-in/pytree-out: ``loss(params, payload, client_state, x, y,
+mask=None) -> (scalar, aux_dict)``.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.data.pipeline import ClientData, batch_iterator
 from repro.optim import Optimizer, apply_updates
 
 
-class LocalResult(NamedTuple):
-    params: Any
-    n_examples: int
-    mean_loss: float
-    extras: dict
+def make_step(loss_fn: Callable, opt: Optimizer, jit: bool = True) -> Callable:
+    """One masked SGD step.
 
+    ``loss_fn(params, payload, client_state, x, y, mask) -> (loss, aux)``.
+    Returns ``step(params, opt_state, payload, client_state, x, y, mask, lr)``.
+    """
 
-def make_step(loss_fn: Callable, opt: Optimizer) -> Callable:
-    """loss_fn(params, payload, client_state, x, y) -> (loss, aux_dict)."""
-
-    @jax.jit
-    def step(params, opt_state, payload, client_state, x, y, lr):
+    def step(params, opt_state, payload, client_state, x, y, mask, lr):
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, payload, client_state, x, y)
+            params, payload, client_state, x, y, mask)
         updates, opt_state = opt.update(grads, opt_state, params, lr)
         return apply_updates(params, updates), opt_state, loss, aux
 
-    return step
+    return jax.jit(step) if jit else step
 
 
-def local_update(step: Callable, opt: Optimizer, params: Any, payload: Any,
-                 client_state: Any, data: ClientData, *, lr: float,
-                 batch_size: int, epochs: int, rng: np.random.Generator,
-                 max_batches: int | None = None) -> tuple[Any, float]:
-    """Run the local epochs; returns (new_params, mean loss)."""
-    opt_state = opt.init(params)
-    losses = []
-    n_done = 0
-    for x, y in batch_iterator(rng, data, batch_size, epochs):
-        params, opt_state, loss, _ = step(
-            params, opt_state, payload, client_state,
-            jnp.asarray(x), jnp.asarray(y), lr)
-        losses.append(float(loss))
-        n_done += 1
-        if max_batches is not None and n_done >= max_batches:
-            break
-    return params, float(np.mean(losses)) if losses else 0.0
+def make_local_update(loss_fn: Callable, opt: Optimizer) -> Callable:
+    """Build the scan-based client pass.
+
+    Returns ``local_update(params, payload, client_state, xs, ys, ex_mask,
+    step_mask, lr) -> (new_params, mean_loss)`` where ``xs/ys`` carry a
+    leading step axis ``S`` and every batch has a uniform size ``B``.
+    Masked-out steps leave params and optimizer state untouched (so a
+    padded client is bit-identical to one trained on its real steps only);
+    masked-out examples are zero-weighted inside the loss.
+    """
+    step = make_step(loss_fn, opt, jit=False)
+
+    def local_update(params: Any, payload: Any, client_state: Any,
+                     xs: jax.Array, ys: jax.Array, ex_mask: jax.Array,
+                     step_mask: jax.Array, lr) -> tuple[Any, jax.Array]:
+        opt_state = opt.init(params)
+
+        def body(carry, batch):
+            p, o = carry
+            x, y, m, live = batch
+            p2, o2, loss, _ = step(p, o, payload, client_state, x, y, m, lr)
+            keep = lambda new, old: jnp.where(live, new, old)
+            p = jax.tree_util.tree_map(keep, p2, p)
+            o = jax.tree_util.tree_map(keep, o2, o)
+            return (p, o), jnp.where(live, loss, 0.0)
+
+        (params, _), losses = jax.lax.scan(
+            body, (params, opt_state), (xs, ys, ex_mask, step_mask))
+        denom = jnp.maximum(1.0, jnp.sum(step_mask.astype(jnp.float32)))
+        return params, jnp.sum(losses) / denom
+
+    return local_update

@@ -20,28 +20,42 @@ def kl_divergence(teacher_logits: jax.Array, student_logits: jax.Array,
     return jnp.sum(p_t * (logp_t - logp_s), axis=-1) * (t * t)
 
 
+def masked_mean(values: jax.Array, mask: jax.Array | None) -> jax.Array:
+    """Weighted mean over ``values`` (any shape); ``mask is None`` == plain
+    mean.  Zero-weight entries contribute nothing to value or gradient, so
+    padded examples in a batched (vmap) client step are exact no-ops."""
+    if mask is None:
+        return jnp.mean(values)
+    w = mask.astype(jnp.float32)
+    return jnp.sum(values * w) / jnp.maximum(1.0, jnp.sum(w))
+
+
 def kd_loss_kl(teacher_logits, student_logits, gamma: float,
-               temperature: float = 1.0) -> jax.Array:
+               temperature: float = 1.0, mask=None) -> jax.Array:
     """Paper Eq.(3) KD term: (γ/2)·mean KL."""
-    return 0.5 * gamma * jnp.mean(
-        kl_divergence(teacher_logits, student_logits, temperature))
+    return 0.5 * gamma * masked_mean(
+        kl_divergence(teacher_logits, student_logits, temperature), mask)
 
 
-def kd_loss_mse(teacher_logits, student_logits, gamma: float) -> jax.Array:
+def kd_loss_mse(teacher_logits, student_logits, gamma: float,
+                mask=None) -> jax.Array:
     """Table 9 ablation: MSE over logits instead of KL."""
     d = (teacher_logits.astype(jnp.float32)
          - student_logits.astype(jnp.float32))
-    return 0.5 * gamma * jnp.mean(jnp.sum(jnp.square(d), axis=-1))
+    return 0.5 * gamma * masked_mean(jnp.sum(jnp.square(d), axis=-1), mask)
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array,
-                  ignore_index: int = -1) -> jax.Array:
-    """Mean CE with optional ignore label (used to mask frontend positions)."""
+                  ignore_index: int = -1, mask: jax.Array | None = None) -> jax.Array:
+    """Mean CE with optional ignore label (used to mask frontend positions)
+    and optional per-example weights (executor padding mask)."""
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    valid = labels != ignore_index
-    safe = jnp.where(valid, labels, 0)
+    valid = (labels != ignore_index).astype(jnp.float32)
+    if mask is not None:
+        valid = valid * mask.astype(jnp.float32)
+    safe = jnp.where(labels != ignore_index, labels, 0)
     ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
-    return -jnp.sum(ll * valid) / jnp.maximum(1, jnp.sum(valid))
+    return -jnp.sum(ll * valid) / jnp.maximum(1.0, jnp.sum(valid))
 
 
 def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:

@@ -1,0 +1,385 @@
+"""Pluggable client execution: how one round's sampled clients are trained.
+
+The FL loop (``repro.core.fl_loop``) is algorithm-agnostic; this module makes
+it *execution*-agnostic too.  A ``ClientExecutor`` consumes the round inputs
+(global params, broadcast payload, per-client states and data shards) and
+produces the round outputs (uploads, weights, local losses, new states) —
+how the clients actually run is its business:
+
+    SequentialExecutor   one jitted lax.scan per client, Python loop over
+                         clients — the reference semantics
+    VmapExecutor         pad/stack the sampled clients' batches and vmap the
+                         SAME scan so one jitted XLA call trains every
+                         client in parallel
+    ShardMapExecutor     VmapExecutor whose stacked computation is routed
+                         through a "clients" device mesh with shard_map
+                         (the repro/launch path); falls back to plain vmap
+                         when the device count does not divide the cohort
+
+All three consume identical materialized batches (one shared host-RNG draw,
+same order as the historical per-client iterator), so sequential and vmap
+outputs agree to float-associativity (~1e-6 on the paper's small models).
+
+Masking rules for ragged clients (see ``repro.core.client``):
+  * every batch within a client has a uniform size ``min(B, n_k)``; across
+    clients batches are zero-padded to the cohort max with a per-example
+    mask that zero-weights pads inside the loss — exact, not approximate;
+  * clients with fewer steps than the cohort max get whole padded steps
+    masked out as identities on (params, opt_state).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import client as client_lib
+from repro.core.algorithms import Algorithm
+from repro.core.modelzoo import ModelBundle
+from repro.data.pipeline import ClientData
+from repro.optim import Optimizer
+
+
+# ---------------------------------------------------------------------------
+# round inputs/outputs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RoundContext:
+    """Everything fixed across rounds that an executor needs."""
+    algo: Algorithm
+    model: ModelBundle
+    opt: Optimizer
+    lr: float
+    batch_size: int
+    epochs: int
+    max_batches: Optional[int] = None
+
+    def __post_init__(self):
+        loss_fn = self.algo.loss_fn(self.model)
+        # scan-based whole-client pass (vmap/shard_map paths)
+        self.local_update = client_lib.make_local_update(loss_fn, self.opt)
+        # per-batch step (sequential path: compiles once per batch SHAPE
+        # rather than once per (steps, batch) pair like the scan would)
+        self.step = client_lib.make_step(loss_fn, self.opt, jit=True)
+        # jitted-artifact cache owned by THIS context (executors must not
+        # key a shared cache on id(ctx): the id can be reused after gc and
+        # serve another algorithm's compiled round function)
+        self.jit_cache: dict = {}
+        # hooks left at the Algorithm defaults are no-ops — executors skip
+        # the (host + dispatch) work of calling them entirely
+        cls = type(self.algo)
+        self.has_finalize = cls.client_finalize is not Algorithm.client_finalize
+        self.has_state_update = (
+            cls.update_client_state is not Algorithm.update_client_state)
+
+
+@dataclasses.dataclass
+class RoundResult:
+    """Stacked-back-to-lists round outputs; shapes match the historical
+    sequential loop so server_update / privacy / History are untouched."""
+    uploads: list[dict]
+    weights: list[float]
+    local_losses: list[float]
+    client_states: list[Any]
+
+
+@runtime_checkable
+class ClientExecutor(Protocol):
+    name: str
+
+    def run_round(self, ctx: RoundContext, global_params: Any, payload: Any,
+                  client_states: list[Any], client_data: list[ClientData],
+                  rng: np.random.Generator) -> RoundResult:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# batch materialization (shared by all executors)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MaterializedClient:
+    xs: np.ndarray      # (S_k, bs_k, ...)
+    ys: np.ndarray      # (S_k, bs_k)
+    n: int              # true example count (aggregation weight)
+
+
+def materialize_client(rng: np.random.Generator, data: ClientData,
+                       batch_size: int, epochs: int,
+                       max_batches: Optional[int] = None) -> MaterializedClient:
+    """Draw the client's epoch batches up front.
+
+    Consumes ``rng`` exactly like the historical lazy ``batch_iterator``
+    (one permutation per *started* epoch, partial batches wrap-padded), so
+    a given seed yields the same batch sequence under every executor.
+    """
+    n = data.n
+    bs = min(batch_size, n)
+    picks: list[np.ndarray] = []
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n, bs):
+            idx = order[i:i + bs]
+            if len(idx) < bs:               # wrap the final partial batch
+                idx = np.concatenate([idx, order[: bs - len(idx)]])
+            picks.append(idx)
+            if max_batches is not None and len(picks) >= max_batches:
+                break
+        if max_batches is not None and len(picks) >= max_batches:
+            break
+    sel = np.stack(picks)                   # (S_k, bs_k)
+    return MaterializedClient(data.x[sel], data.y[sel], n)
+
+
+def _pad_and_stack(mats: list[MaterializedClient]):
+    """(K, S, B, ...) arrays + example mask (K, S, B) + step mask (K, S)."""
+    S = max(m.xs.shape[0] for m in mats)
+    B = max(m.xs.shape[1] for m in mats)
+    k = len(mats)
+    feat = mats[0].xs.shape[2:]
+    xs = np.zeros((k, S, B) + feat, mats[0].xs.dtype)
+    ys = np.zeros((k, S, B), mats[0].ys.dtype)
+    ex_mask = np.zeros((k, S, B), np.float32)
+    step_mask = np.zeros((k, S), bool)
+    for i, m in enumerate(mats):
+        s, b = m.xs.shape[:2]
+        xs[i, :s, :b] = m.xs
+        ys[i, :s, :b] = m.ys
+        ex_mask[i, :s, :b] = 1.0
+        step_mask[i, :s] = True
+    return (jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(ex_mask),
+            jnp.asarray(step_mask))
+
+
+def _pad_full_data(client_data: list[ClientData]):
+    """Stack each client's FULL shard to (K, N_max, ...) + mask for the
+    vmapped ``client_finalize`` hook."""
+    n_max = max(d.n for d in client_data)
+    k = len(client_data)
+    feat = client_data[0].x.shape[1:]
+    xs = np.zeros((k, n_max) + feat, client_data[0].x.dtype)
+    ys = np.zeros((k, n_max), client_data[0].y.dtype)
+    mask = np.zeros((k, n_max), np.float32)
+    for i, d in enumerate(client_data):
+        xs[i, :d.n] = d.x
+        ys[i, :d.n] = d.y
+        mask[i, :d.n] = 1.0
+    return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)
+
+
+def tree_stack(trees: list[Any]) -> Any:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(tree: Any, k: int) -> list[Any]:
+    return [jax.tree_util.tree_map(lambda l: l[i], tree) for i in range(k)]
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _tree_unstack_jit(tree: Any, k: int) -> list[Any]:
+    """tree_unstack as ONE dispatch (eager per-leaf slicing costs ~K·L tiny
+    device ops per round, which dominates small-model rounds)."""
+    return tree_unstack(tree, k)
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+class SequentialExecutor:
+    """Reference implementation: clients one at a time, one jitted step per
+    batch (the historical loop — no padding, no masks)."""
+
+    name = "sequential"
+
+    def run_round(self, ctx, global_params, payload, client_states,
+                  client_data, rng) -> RoundResult:
+        uploads, weights, losses, new_states = [], [], [], []
+        for state, cdata in zip(client_states, client_data):
+            mat = materialize_client(rng, cdata, ctx.batch_size, ctx.epochs,
+                                     ctx.max_batches)
+            params, opt_state = global_params, ctx.opt.init(global_params)
+            step_losses = []
+            for s in range(mat.xs.shape[0]):
+                params, opt_state, loss, _ = ctx.step(
+                    params, opt_state, payload, state,
+                    jnp.asarray(mat.xs[s]), jnp.asarray(mat.ys[s]), None,
+                    ctx.lr)
+                step_losses.append(float(loss))
+            extras = {}
+            if ctx.has_finalize:
+                extras = ctx.algo.client_finalize(
+                    ctx.model, params, jnp.asarray(cdata.x),
+                    jnp.asarray(cdata.y), jnp.ones((cdata.n,), jnp.float32),
+                    payload)
+            new_states.append(
+                ctx.algo.update_client_state(state, params, payload)
+                if ctx.has_state_update else state)
+            uploads.append({"params": params, **extras})
+            weights.append(float(mat.n))
+            losses.append(float(np.mean(step_losses)) if step_losses else 0.0)
+        return RoundResult(uploads, weights, losses, new_states)
+
+
+class VmapExecutor:
+    """One jitted call per round: vmap the per-client scan over a stacked
+    client axis.  Wall-clock stops scaling linearly with participation."""
+
+    name = "vmap"
+
+    # -- cached jitted stages (cache lives on ctx, see RoundContext) -----
+    def _round_fn(self, ctx: RoundContext) -> Callable:
+        fn = ctx.jit_cache.get("round")
+        if fn is None:
+            fn = jax.jit(jax.vmap(ctx.local_update,
+                                  in_axes=(None, None, 0, 0, 0, 0, 0, None)))
+            ctx.jit_cache["round"] = fn
+        return fn
+
+    def _finalize_fn(self, ctx: RoundContext) -> Callable:
+        fn = ctx.jit_cache.get("finalize")
+        if fn is None:
+            def one(params, x, y, mask, payload):
+                return ctx.algo.client_finalize(ctx.model, params, x, y,
+                                                mask, payload)
+
+            fn = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0, None)))
+            ctx.jit_cache["finalize"] = fn
+        return fn
+
+    def _state_fn(self, ctx: RoundContext) -> Callable:
+        fn = ctx.jit_cache.get("state")
+        if fn is None:
+            def one(state, params, payload):
+                return ctx.algo.update_client_state(state, params, payload)
+
+            fn = jax.jit(jax.vmap(one, in_axes=(0, 0, None)))
+            ctx.jit_cache["state"] = fn
+        return fn
+
+    # -- the stacked computation (ShardMapExecutor overrides this) -------
+    def _execute(self, ctx, global_params, payload, states_stacked,
+                 xs, ys, ex_mask, step_mask):
+        return self._round_fn(ctx)(global_params, payload, states_stacked,
+                                   xs, ys, ex_mask, step_mask, ctx.lr)
+
+    def run_round(self, ctx, global_params, payload, client_states,
+                  client_data, rng) -> RoundResult:
+        k = len(client_data)
+        mats = [materialize_client(rng, d, ctx.batch_size, ctx.epochs,
+                                   ctx.max_batches) for d in client_data]
+        xs, ys, ex_mask, step_mask = _pad_and_stack(mats)
+        states_stacked = tree_stack(client_states)
+
+        params_stacked, mloss = self._execute(
+            ctx, global_params, payload, states_stacked, xs, ys, ex_mask,
+            step_mask)
+
+        if ctx.has_finalize:
+            fx, fy, fmask = _pad_full_data(client_data)
+            extras_stacked = self._finalize_fn(ctx)(params_stacked, fx, fy,
+                                                    fmask, payload)
+        else:
+            extras_stacked = {}
+        if ctx.has_state_update:
+            new_states_stacked = self._state_fn(ctx)(states_stacked,
+                                                     params_stacked, payload)
+        else:
+            new_states_stacked = None
+
+        per_client = _tree_unstack_jit(
+            (params_stacked, extras_stacked), k)
+        uploads = [{"params": p, **e} for p, e in per_client]
+        new_states = (_tree_unstack_jit(new_states_stacked, k)
+                      if ctx.has_state_update else list(client_states))
+        return RoundResult(uploads, [float(m.n) for m in mats],
+                           np.asarray(mloss).astype(float).tolist(),
+                           new_states)
+
+
+class ShardMapExecutor(VmapExecutor):
+    """Route the stacked round through a ``("clients",)`` device mesh.
+
+    Experimental stub for the multi-device path (repro/launch idiom): each
+    shard vmaps its slice of the cohort with no cross-client collectives;
+    outputs stay client-stacked.  Requires the sampled-cohort size to be a
+    multiple of the device count — otherwise it silently degrades to the
+    single-device vmap computation.
+    """
+
+    name = "shard_map"
+
+    def _execute(self, ctx, global_params, payload, states_stacked,
+                 xs, ys, ex_mask, step_mask):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding import shard_map_compat
+
+        ndev = len(jax.devices())
+        k = xs.shape[0]
+        if ndev == 1 or k % ndev != 0:
+            return super()._execute(ctx, global_params, payload,
+                                    states_stacked, xs, ys, ex_mask,
+                                    step_mask)
+
+        key = ("smap", ndev)
+        jfn = ctx.jit_cache.get(key)
+        if jfn is None:
+            mesh = jax.make_mesh((ndev,), ("clients",))
+            inner = jax.vmap(ctx.local_update,
+                             in_axes=(None, None, 0, 0, 0, 0, 0, None))
+            fn = shard_map_compat(
+                lambda gp, pl, st, a, b, c, d: inner(gp, pl, st, a, b, c, d,
+                                                     ctx.lr),
+                mesh,
+                in_specs=(P(), P(), P("clients"), P("clients"), P("clients"),
+                          P("clients"), P("clients")),
+                out_specs=(P("clients"), P("clients")))
+            jfn = jax.jit(fn)
+            ctx.jit_cache[key] = jfn
+        return jfn(global_params, payload, states_stacked, xs, ys,
+                   ex_mask, step_mask)
+
+
+# ---------------------------------------------------------------------------
+# registry / resolution
+# ---------------------------------------------------------------------------
+
+_EXECUTORS = {
+    "sequential": SequentialExecutor,
+    "vmap": VmapExecutor,
+    "shard_map": ShardMapExecutor,
+}
+
+
+def available() -> list[str]:
+    return sorted(_EXECUTORS) + ["auto"]
+
+
+def get_executor(spec: "str | ClientExecutor", algo: Algorithm,
+                 n_sample: int,
+                 model: Optional[ModelBundle] = None) -> ClientExecutor:
+    """Resolve an executor spec.
+
+    ``"auto"`` picks the batched vmap path when the algorithm declares
+    ``supports_vmap``, more than one client is sampled per round, AND the
+    model's ops lower well under stacked-weight vmap (``vmap_friendly`` —
+    dense models yes, conv backbones on CPU no); otherwise the sequential
+    reference.  Instances pass through unchanged.
+    """
+    if not isinstance(spec, str):
+        return spec
+    if spec == "auto":
+        batched_ok = (getattr(algo, "supports_vmap", False) and n_sample > 1
+                      and (model is None or model.vmap_friendly))
+        spec = "vmap" if batched_ok else "sequential"
+    try:
+        return _EXECUTORS[spec]()
+    except KeyError:
+        raise ValueError(
+            f"unknown executor {spec!r}; available: {available()}") from None

@@ -1,21 +1,25 @@
 """Algorithm-agnostic federated training loop (Alg. 1 ServerExecution).
 
-Single-host simulation path used by the paper-reproduction benchmarks; the
-multi-device shard_map path for the big assigned architectures lives in
-repro/launch/train.py.
+Single-host simulation path used by the paper-reproduction benchmarks.  HOW
+the sampled clients run each round is delegated to a pluggable
+``ClientExecutor`` (repro.core.executor): sequential reference, batched
+vmap (one jitted call trains the whole cohort), or the experimental
+shard_map mesh route.  The multi-device driver for the big assigned
+architectures lives in repro/launch/train.py.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper import PaperTask
-from repro.core import client as client_lib
+from repro.core import executor as executor_lib
 from repro.core.algorithms import Algorithm, FedGen
 from repro.core.distillation import accuracy, cross_entropy
 from repro.core.modelzoo import ModelBundle, make_model
@@ -51,10 +55,32 @@ class History:
         return [r.test_acc for r in self.records]
 
 
+# evaluate() is called every round for every run; re-jitting model.apply
+# each call threw away the compiled executable.  One jitted wrapper per
+# distinct apply fn (bundles built for the same backbone share it; jax
+# retraces per params/input shape underneath as usual).  Bounded FIFO:
+# the distilbert bundle creates a fresh apply closure per make_model, so
+# an unbounded dict would leak compiled executables across sweep runs
+# (and the jitted value strongly references its key, ruling out weakrefs).
+_APPLY_CACHE: "collections.OrderedDict[Callable, Callable]" = \
+    collections.OrderedDict()
+_APPLY_CACHE_MAX = 32
+
+
+def _cached_apply(model: ModelBundle) -> Callable:
+    fn = _APPLY_CACHE.get(model.apply)
+    if fn is None:
+        fn = jax.jit(model.apply)
+        _APPLY_CACHE[model.apply] = fn
+        while len(_APPLY_CACHE) > _APPLY_CACHE_MAX:
+            _APPLY_CACHE.popitem(last=False)
+    return fn
+
+
 def evaluate(model: ModelBundle, params: Any, x: np.ndarray, y: np.ndarray,
              batch: int = 256) -> tuple[float, float]:
     accs, losses, ns = [], [], []
-    apply = jax.jit(model.apply)
+    apply = _cached_apply(model)
     for i in range(0, len(y), batch):
         xb, yb = jnp.asarray(x[i:i + batch]), jnp.asarray(y[i:i + batch])
         logits = apply(params, xb)
@@ -69,8 +95,15 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
                   rounds: Optional[int] = None, seed: int = 0,
                   eval_every: int = 1, max_batches_per_client: int | None = None,
                   verbose: bool = False, width: int = 16,
-                  round_callback=None, dp=None) -> History:
-    """Run T communication rounds of ``algo`` on the partitioned data."""
+                  round_callback=None, dp=None,
+                  executor: "str | executor_lib.ClientExecutor" = "auto"
+                  ) -> History:
+    """Run T communication rounds of ``algo`` on the partitioned data.
+
+    ``executor`` selects the client-execution strategy: ``"sequential"``,
+    ``"vmap"``, ``"shard_map"``, an executor instance, or ``"auto"``
+    (batched vmap whenever the algorithm supports it).
+    """
     rounds = rounds if rounds is not None else task.rounds
     model = make_model(task, projection_head=algo.needs_projection_head,
                        width=width)
@@ -85,11 +118,20 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
     else:
         server = algo.init_server(global_params, model, task.num_classes)
 
+    if rounds == 0:      # empty-history fast path (no uploads, no eval)
+        return History(algo.name, [], server["global"], 0.0)
+
     if task.optimizer == "adam":
         opt = adam(weight_decay=task.weight_decay)
     else:
         opt = sgd(momentum=task.momentum, weight_decay=task.weight_decay)
-    step = client_lib.make_step(algo.loss_fn(model), opt)
+
+    n_sample = max(1, int(round(task.participation * data.n_clients)))
+    exec_ = executor_lib.get_executor(executor, algo, n_sample, model)
+    ctx = executor_lib.RoundContext(
+        algo=algo, model=model, opt=opt, lr=task.lr,
+        batch_size=task.batch_size, epochs=task.local_epochs,
+        max_batches=max_batches_per_client)
 
     client_states = {k: algo.init_client_state(k, global_params)
                      for k in range(data.n_clients)}
@@ -97,9 +139,9 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
     n_val = min(256, len(data.test_y) // 4)
     val_batch = (jnp.asarray(data.test_x[:n_val]), jnp.asarray(data.test_y[:n_val]))
 
-    n_sample = max(1, int(round(task.participation * data.n_clients)))
     records: list[RoundRecord] = []
     local_acc = 0.0
+    uploads: list[dict] = []
 
     for t in range(rounds):
         t0 = time.time()
@@ -107,20 +149,14 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
         sampled = rng.choice(data.n_clients, size=n_sample, replace=False)
         payload = algo.round_payload(server, krng)
 
-        uploads, weights, local_losses = [], [], []
-        for k in sampled:
-            cdata = data.clients[int(k)]
-            new_params, mloss = client_lib.local_update(
-                step, opt, server["global"], payload, client_states[int(k)],
-                cdata, lr=task.lr, batch_size=task.batch_size,
-                epochs=task.local_epochs, rng=rng,
-                max_batches=max_batches_per_client)
-            extras = algo.client_finalize(model, new_params, cdata, payload)
-            client_states[int(k)] = algo.update_client_state(
-                client_states[int(k)], new_params, payload)
-            uploads.append({"params": new_params, **extras})
-            weights.append(cdata.n)
-            local_losses.append(mloss)
+        result = exec_.run_round(
+            ctx, server["global"], payload,
+            [client_states[int(k)] for k in sampled],
+            [data.clients[int(k)] for k in sampled], rng)
+        uploads, weights = result.uploads, result.weights
+        local_losses = result.local_losses
+        for k, new_state in zip(sampled, result.client_states):
+            client_states[int(k)] = new_state
 
         if dp is not None:
             from repro.core import privacy

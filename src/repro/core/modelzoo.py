@@ -23,6 +23,10 @@ class ModelBundle:
     apply: Callable             # (params, x) -> logits (B, C)
     features: Callable          # (params, x) -> penultimate features (B, F)
     has_projection_head: bool = False
+    # whether vmapping the model over stacked per-client WEIGHTS lowers well
+    # (dense stacks become batched GEMMs; batched-weight convs lower poorly
+    # on CPU backends) — consulted by executor="auto"
+    vmap_friendly: bool = True
 
 
 def _text_classifier(task: PaperTask, projection_head: bool) -> ModelBundle:
@@ -52,7 +56,7 @@ def _text_classifier(task: PaperTask, projection_head: bool) -> ModelBundle:
         return layers.dense(params["fc"], features(params, x))
 
     return ModelBundle(f"distilbert-{task.name}", init, apply, features,
-                       projection_head)
+                       projection_head, vmap_friendly=False)
 
 
 def make_model(task: PaperTask, projection_head: bool = False,
@@ -63,17 +67,21 @@ def make_model(task: PaperTask, projection_head: bool = False,
             "resnet8",
             lambda rng: resnet.resnet8_init(rng, task.num_classes, width=width,
                                             projection_head=projection_head),
-            resnet.resnet8_apply, resnet.resnet8_features, projection_head)
+            resnet.resnet8_apply, resnet.resnet8_features, projection_head,
+            vmap_friendly=False)
     if task.model == "resnet50":
         return ModelBundle(
             "resnet50",
             lambda rng: resnet.resnet50_init(rng, task.num_classes,
                                              projection_head=projection_head),
-            resnet.resnet50_apply, resnet.resnet50_features, projection_head)
+            resnet.resnet50_apply, resnet.resnet50_features, projection_head,
+            vmap_friendly=False)
     if task.model == "mlp":
+        h = 4 * width                    # width=16 default -> [64, 64]
         return ModelBundle(
             "mlp",
-            lambda rng: resnet.mlp_init(rng, 2, [64, 64], task.num_classes),
+            lambda rng: resnet.mlp_init(rng, task.feat_dim, [h, h],
+                                        task.num_classes),
             resnet.mlp_apply, resnet.mlp_features, False)
     if task.model == "distilbert":
         return _text_classifier(task, projection_head)

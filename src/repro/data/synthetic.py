@@ -85,12 +85,36 @@ class SyntheticTextTask:
         return toks.astype(np.int32), labels.astype(np.int64)
 
 
+@dataclasses.dataclass(frozen=True)
+class SyntheticTabularTask:
+    """Gaussian class blobs under a shared random rotation — the light
+    MLP workload used by the executor benchmarks and quick examples."""
+    num_classes: int
+    dim: int = 16
+    noise: float = 1.0
+    seed: int = 0
+
+    def generate(self, n: int, seed: int | None = None):
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        # class means fixed by a task-level rng so train/test share them
+        mrng = np.random.default_rng(self.seed + 77)
+        means = mrng.normal(0, 1, size=(self.num_classes, self.dim))
+        means *= 2.0 / (np.linalg.norm(means, axis=1, keepdims=True) + 1e-9)
+        rot, _ = np.linalg.qr(mrng.normal(0, 1, (self.dim, self.dim)))
+        labels = rng.integers(0, self.num_classes, size=n)
+        x = means[labels] + rng.normal(0, self.noise, (n, self.dim))
+        return (x @ rot).astype(np.float32), labels.astype(np.int64)
+
+
 def make_task_data(task, n_train: int, n_test: int, seed: int = 0):
     """Generate (train_x, train_y, test_x, test_y) for a PaperTask-like obj."""
     from repro.configs.paper import PaperTask  # local import, avoids cycle
     assert isinstance(task, PaperTask)
     if task.kind == "image":
         gen = SyntheticImageTask(task.num_classes, hw=task.image_hw, seed=seed)
+    elif task.kind == "tabular":
+        gen = SyntheticTabularTask(task.num_classes, dim=task.feat_dim,
+                                   seed=seed)
     else:
         gen = SyntheticTextTask(task.num_classes, vocab_size=task.vocab_size,
                                 seq_len=task.seq_len, seed=seed)

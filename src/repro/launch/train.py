@@ -24,7 +24,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.distillation import ensemble_average
@@ -33,6 +32,7 @@ from repro.data.synthetic import lm_token_batches
 from repro.launch import steps as steps_lib
 from repro.models import transformer
 from repro.optim import sgd
+from repro.sharding import shard_map_compat
 
 Params = Any
 
@@ -151,8 +151,8 @@ def make_parallel_round(cfg, mesh: Mesh, *, gamma: float = 0.2,
     in_specs = (pspec, pspec if kd_mode == "teacher" else P(),
                 spec_c, spec_c)
     out_specs = (pspec, spec_c)
-    fn = shard_map(round_fn, mesh=mesh, in_specs=in_specs,
-                   out_specs=out_specs, check_vma=False)
+    fn = shard_map_compat(round_fn, mesh, in_specs=in_specs,
+                          out_specs=out_specs)
     return jax.jit(fn)
 
 

@@ -39,6 +39,26 @@ def data_axes(mesh: Mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions.
+
+    jax >= 0.6 exposes ``jax.shard_map`` (replication checking via
+    ``check_vma``); older releases only have
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``.  Every
+    caller in this repo wants checking off (weights enter replicated but are
+    consumed per-shard), so the flag is hard-wired here.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    except TypeError:  # pre-0.6: the kwarg is check_rep
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 # ---------------------------------------------------------------------------
 # parameter specs
 # ---------------------------------------------------------------------------

@@ -1,0 +1,198 @@
+"""ClientExecutor subsystem: sequential/vmap equivalence, padding masks,
+batch materialization, resolution rules and the fl_loop fast paths.
+
+Runs on the TOY mlp task (fast compiles) with hand-built ragged client
+sizes so both mask kinds are exercised deterministically: clients smaller
+than the batch size (example padding) and clients with fewer steps than
+the cohort max (step padding)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper import TOY
+from repro.core import algorithms, executor as ex, fl_loop
+from repro.data.pipeline import ClientData, FederatedData, batch_iterator
+from repro.data.synthetic import SyntheticTabularTask
+
+
+RAGGED_SIZES = (20, 45, 64, 100, 130, 150)   # 20 < batch 64 < 150
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    task = dataclasses.replace(TOY, n_clients=len(RAGGED_SIZES),
+                               participation=1.0, batch_size=64, rounds=2,
+                               local_epochs=2)
+    gen = SyntheticTabularTask(task.num_classes, dim=task.feat_dim, seed=0)
+    clients = [ClientData(*gen.generate(n, seed=100 + i))
+               for i, n in enumerate(RAGGED_SIZES)]
+    test_x, test_y = gen.generate(200, seed=999)
+    data = FederatedData(clients, test_x, test_y,
+                         np.zeros((task.n_clients, task.num_classes)))
+    return task, data
+
+
+def _max_param_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(
+        jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+# --- numerical equivalence (the acceptance criterion) ----------------------
+
+@pytest.mark.parametrize("name", ["fedavg", "fedprox", "fedgkd"])
+def test_vmap_matches_sequential(tiny_setup, name):
+    task, data = tiny_setup
+    sizes = {c.n for c in data.clients}
+    assert min(sizes) < task.batch_size < max(sizes), \
+        "setup must exercise example- AND step-level padding masks"
+    out = {}
+    for spec in ("sequential", "vmap"):
+        h = fl_loop.run_federated(task, algorithms.make(name), data, seed=0,
+                                  executor=spec)
+        out[spec] = h
+    assert _max_param_diff(out["sequential"].final_params,
+                           out["vmap"].final_params) < 1e-5
+    for rs, rv in zip(out["sequential"].records, out["vmap"].records):
+        assert abs(rs.mean_local_loss - rv.mean_local_loss) < 1e-5
+        assert abs(rs.test_acc - rv.test_acc) < 1e-5
+
+
+def test_shard_map_executor_matches_sequential(tiny_setup):
+    """Single device => degrades to the vmap computation; still must agree."""
+    task, data = tiny_setup
+    hs = fl_loop.run_federated(task, algorithms.make("fedgkd"), data, seed=0,
+                               executor="sequential")
+    hm = fl_loop.run_federated(task, algorithms.make("fedgkd"), data, seed=0,
+                               executor="shard_map")
+    assert _max_param_diff(hs.final_params, hm.final_params) < 1e-5
+
+
+@pytest.mark.parametrize("name", ["moon", "scaffold", "feddyn",
+                                  "feddistill+"])
+def test_stateful_algorithms_run_under_vmap(tiny_setup, name):
+    task, data = tiny_setup
+    h = fl_loop.run_federated(task, algorithms.make(name), data, seed=0,
+                              executor="vmap")
+    assert np.isfinite(h.final_acc)
+    assert np.isfinite(h.records[-1].mean_local_loss)
+
+
+# --- masking exactness ------------------------------------------------------
+
+def test_masked_loss_ignores_padded_examples(tiny_setup):
+    task, _ = tiny_setup
+    from repro.core.modelzoo import make_model
+    model = make_model(task)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, task.feat_dim)), jnp.float32)
+    y = jnp.asarray([0, 1, 2, 3])
+    loss = algorithms.make("fedavg").loss_fn(model)
+    l_real, _ = loss(params, (), (), x[:2], y[:2], jnp.ones((2,)))
+    x_pad = jnp.concatenate([x[:2], jnp.zeros_like(x[:2])])
+    l_pad, _ = loss(params, (), (), x_pad, y,
+                    jnp.asarray([1.0, 1.0, 0.0, 0.0]))
+    np.testing.assert_allclose(float(l_real), float(l_pad), atol=1e-7)
+
+
+def test_masked_step_is_identity(tiny_setup):
+    """A fully padded scan step must leave params AND opt state untouched."""
+    task, _ = tiny_setup
+    from repro.core import client as client_lib
+    from repro.core.modelzoo import make_model
+    from repro.optim import sgd
+    model = make_model(task)
+    params = model.init(jax.random.PRNGKey(1))
+    local = client_lib.make_local_update(
+        algorithms.make("fedavg").loss_fn(model), sgd(momentum=0.9))
+    xs = jnp.zeros((2, 3, task.feat_dim))
+    ys = jnp.zeros((2, 3), jnp.int32)
+    ex_mask = jnp.zeros((2, 3), jnp.float32)
+    step_mask = jnp.zeros((2,), bool)
+    new_params, mloss = jax.jit(local)(params, (), (), xs, ys, ex_mask,
+                                       step_mask, 0.1)
+    assert _max_param_diff(params, new_params) == 0.0
+    assert float(mloss) == 0.0
+
+
+# --- batch materialization --------------------------------------------------
+
+def test_materialize_matches_batch_iterator():
+    rng_a = np.random.default_rng(7)
+    rng_b = np.random.default_rng(7)
+    data = ClientData(np.arange(22, dtype=np.float32).reshape(22, 1),
+                      np.arange(22) % 3)
+    mat = ex.materialize_client(rng_a, data, batch_size=8, epochs=2)
+    ref = list(batch_iterator(rng_b, data, 8, 2))
+    assert mat.xs.shape[0] == len(ref)
+    for s, (x, y) in enumerate(ref):
+        np.testing.assert_array_equal(mat.xs[s], x)
+        np.testing.assert_array_equal(mat.ys[s], y)
+
+
+def test_materialize_max_batches_rng_consumption():
+    """Stopping early must not draw later epochs' permutations (so a given
+    seed produces identical batches whether or not max_batches is set)."""
+    rng_a = np.random.default_rng(9)
+    rng_b = np.random.default_rng(9)
+    data = ClientData(np.arange(10, dtype=np.float32).reshape(10, 1),
+                      np.arange(10) % 2)
+    mat = ex.materialize_client(rng_a, data, batch_size=4, epochs=5,
+                                max_batches=2)
+    assert mat.xs.shape[0] == 2
+    full = ex.materialize_client(rng_b, data, batch_size=4, epochs=1)
+    np.testing.assert_array_equal(mat.xs, full.xs[:2])
+
+
+def test_pad_and_stack_masks():
+    mk = lambda s, b: ex.MaterializedClient(
+        np.ones((s, b, 2), np.float32), np.ones((s, b), np.int64), s * b)
+    xs, ys, ex_mask, step_mask = ex._pad_and_stack([mk(3, 4), mk(1, 2)])
+    assert xs.shape == (2, 3, 4, 2)
+    assert float(ex_mask[0].sum()) == 12.0
+    assert float(ex_mask[1].sum()) == 2.0
+    assert step_mask.tolist() == [[True, True, True], [True, False, False]]
+
+
+# --- resolution / fl_loop plumbing -----------------------------------------
+
+def test_get_executor_resolution():
+    from repro.core.modelzoo import ModelBundle
+    avg = algorithms.make("fedavg")
+    assert ex.get_executor("auto", avg, 4).name == "vmap"
+    assert ex.get_executor("auto", avg, 1).name == "sequential"
+    conv = ModelBundle("resnet8", lambda r: {}, lambda p, x: x,
+                       lambda p, x: x, vmap_friendly=False)
+    assert ex.get_executor("auto", avg, 4, conv).name == "sequential"
+    no_vmap = algorithms.make("fedavg")
+    no_vmap.supports_vmap = False
+    assert ex.get_executor("auto", no_vmap, 4).name == "sequential"
+    inst = ex.SequentialExecutor()
+    assert ex.get_executor(inst, avg, 4) is inst
+    with pytest.raises(ValueError):
+        ex.get_executor("nope", avg, 4)
+
+
+def test_zero_rounds_fast_path(tiny_setup):
+    task, data = tiny_setup
+    h = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                              rounds=0)
+    assert h.records == []
+    assert h.local_model_acc == 0.0
+    assert h.final_params is not None
+
+
+def test_evaluate_apply_cache(tiny_setup):
+    task, data = tiny_setup
+    from repro.core.modelzoo import make_model
+    model = make_model(task)
+    params = model.init(jax.random.PRNGKey(0))
+    fl_loop.evaluate(model, params, data.test_x[:32], data.test_y[:32])
+    fn = fl_loop._APPLY_CACHE.get(model.apply)
+    assert fn is not None
+    model2 = make_model(task)     # same backbone => same cached wrapper
+    fl_loop.evaluate(model2, params, data.test_x[:32], data.test_y[:32])
+    assert fl_loop._APPLY_CACHE.get(model2.apply) is fn

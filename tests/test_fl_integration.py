@@ -43,12 +43,23 @@ def test_fedgkd_buffer_tracks_rounds(small_setup):
     assert len(h.records) == task.rounds
 
 
+@pytest.mark.slow
 def test_learning_happens_with_more_rounds():
     """With enough data/rounds the global model must beat chance (10%)."""
     task = scaled(CIFAR10, scale=0.05, rounds=4, local_epochs=2)
     data = fl_loop.make_federated_data(task, alpha=100.0, seed=0, n_test=300)
     h = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0)
     assert h.best_acc > 0.15, f"fedavg stuck at {h.best_acc}"
+
+
+def test_learning_happens_toy_task():
+    """Fast learning check (MLP task, batched executor): beat chance (10%)
+    by a wide margin within 3 rounds."""
+    from repro.configs.paper import TOY
+    data = fl_loop.make_federated_data(TOY, alpha=10.0, seed=0, n_test=400)
+    h = fl_loop.run_federated(TOY, algorithms.make("fedavg"), data, seed=0,
+                              rounds=3, executor="vmap")
+    assert h.best_acc > 0.3, f"fedavg stuck at {h.best_acc}"
 
 
 def test_dirichlet_partition_used(small_setup):

@@ -124,11 +124,11 @@ def test_train_step_decreases_loss_on_repeated_batch():
 
 def test_aggregate_step_weighted_mean():
     from repro.launch.steps import make_aggregate_step
+    from repro.sharding import shard_map_compat
     import jax
     from jax.sharding import PartitionSpec as P
     mesh = jax.make_mesh((1,), ("pod",))
     agg = make_aggregate_step("pod")
-    fn = jax.shard_map(agg, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
-                       check_vma=False)
+    fn = shard_map_compat(agg, mesh, in_specs=(P(), P()), out_specs=P())
     out = fn({"w": jnp.ones((2,))}, jnp.asarray(3.0))
     np.testing.assert_allclose(np.asarray(out["w"]), 1.0)
