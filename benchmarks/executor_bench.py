@@ -1,9 +1,15 @@
 """Executor benchmark: sequential vs vmap (vs shard_map) per-round time.
 
 Measures ONLY the client-execution stage (``ClientExecutor.run_round``) so
-the comparison isolates what the tentpole changed: with the sequential
-executor, round time scales linearly with the number of sampled clients;
-with the vmap executor the whole cohort is one jitted XLA call.
+the comparison isolates the executor pipeline: with the sequential executor,
+round time scales linearly with the number of sampled clients; with the vmap
+executor the whole cohort is one jitted XLA call.  Each (algo, executor)
+case additionally runs with the round-level teacher-precompute stage ON and
+OFF (where the algorithm has one), so the KD-precompute speedup is tracked
+round over round.
+
+Writes ``BENCH_executor.json`` at the repo root — the perf-trajectory
+artifact future PRs diff against:
 
     PYTHONPATH=src python benchmarks/executor_bench.py            # fast preset
     PYTHONPATH=src python benchmarks/executor_bench.py --clients 16 --rounds 5
@@ -12,6 +18,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import pathlib
 import time
 
 import jax
@@ -21,27 +29,120 @@ from repro.configs.paper import PAPER_TASKS, scaled
 from repro.core import algorithms, executor as executor_lib, fl_loop
 from repro.optim import adam, sgd
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
-def bench_executor(name: str, ctx, data, n_sample: int, seed: int,
-                   global_params, payload, states, *, rounds: int) -> dict:
-    exec_ = executor_lib.get_executor(name, ctx.algo, n_sample)
+
+def bench_executor(name: str, ctxs, data, n_sample: int, seed: int,
+                   global_params, payloads, states, *, rounds: int) -> list:
+    """Time ``run_round`` only, for one executor across several round
+    contexts (precompute on/off) with INTERLEAVED timed rounds — host-load
+    drift over the run hits every variant equally, so the recorded
+    speedups are drift-robust.  ``payloads`` is one broadcast payload per
+    timed round: KD algorithms rotate one teacher per round, so the
+    cross-round logit cache is measured at its honest steady state, never
+    at an all-hits fixed-payload best case."""
+    exec_ = executor_lib.get_executor(name, ctxs[0].algo, n_sample)
     rng = np.random.default_rng(seed)
     sampled = rng.choice(data.n_clients, size=n_sample, replace=False)
     cdata = [data.clients[int(k)] for k in sampled]
     cstates = [states[int(k)] for k in sampled]
+    cids = [int(k) for k in sampled]
 
-    # warmup: compile outside the timed region
-    res = exec_.run_round(ctx, global_params, payload, cstates, cdata, rng)
-    jax.block_until_ready(res.uploads[-1]["params"])
-
-    times = []
-    for _ in range(rounds):
-        t0 = time.perf_counter()
-        res = exec_.run_round(ctx, global_params, payload, cstates, cdata, rng)
+    times: list[list[float]] = [[] for _ in ctxs]
+    for ctx in ctxs:    # warmup: compile outside the timed region
+        res = exec_.run_round(ctx, global_params, payloads[0], cstates,
+                              cdata, rng, client_ids=cids)
         jax.block_until_ready(res.uploads[-1]["params"])
-        times.append(time.perf_counter() - t0)
-    return {"executor": name, "median_s": float(np.median(times)),
-            "min_s": float(np.min(times)), "rounds": rounds}
+    for t in range(rounds):
+        payload = payloads[min(t + 1, len(payloads) - 1)]
+        for i, ctx in enumerate(ctxs):
+            t0 = time.perf_counter()
+            res = exec_.run_round(ctx, global_params, payload, cstates,
+                                  cdata, rng, client_ids=cids)
+            jax.block_until_ready(res.uploads[-1]["params"])
+            times[i].append(time.perf_counter() - t0)
+    return [{"executor": name, "median_s": float(np.median(ts)),
+             "min_s": float(np.min(ts)), "rounds": rounds,
+             "times_s": [round(t, 5) for t in ts]} for ts in times]
+
+
+def _make_algo(name: str) -> algorithms.Algorithm:
+    if name == "fedgkd-vote":
+        return algorithms.make(name, buffer_m=5)       # the M=5 tracking case
+    return algorithms.make(name)
+
+
+def bench_algo(algo_name: str, task, data, args) -> list[dict]:
+    """All (executor, precompute, epochs) cases for one algorithm."""
+    algo = _make_algo(algo_name)
+    from repro.core.modelzoo import make_model
+    model = make_model(task, projection_head=algo.needs_projection_head,
+                       width=args.width)
+    global_params = model.init(jax.random.PRNGKey(1))
+    server = algo.init_server(global_params, model, task.num_classes)
+    buffer = server.get("buffer")
+    if buffer is not None:
+        # fill the buffer so the teacher ensemble is real, not padding
+        for m in range(buffer.size - 1):
+            buffer.push(jax.tree_util.tree_map(
+                lambda p: p * (1.0 + 0.01 * (m + 1)), global_params))
+        if "val_losses" in server:
+            server["val_losses"] = [0.1 * (m + 1) for m in range(buffer.size)]
+    # one payload per timed round (+ warmup): teachers rotate like a real run
+    payloads = []
+    for t in range(args.rounds + 1):
+        if buffer is not None and t > 0:
+            buffer.push(jax.tree_util.tree_map(
+                lambda p: p * (1.0 + 0.001 * t), global_params))
+        payloads.append(algo.round_payload(server, jax.random.PRNGKey(2 + t)))
+    opt = (adam(weight_decay=task.weight_decay) if task.optimizer == "adam"
+           else sgd(momentum=task.momentum, weight_decay=task.weight_decay))
+    states = {k: algo.init_client_state(k, global_params)
+              for k in range(data.n_clients)}
+
+    names = ["sequential", "vmap"]
+    if args.with_shard_map:
+        names.append("shard_map")
+    has_pre = (type(algo).precompute_aux
+               is not algorithms.Algorithm.precompute_aux)
+
+    rows = []
+    for epochs in args.epochs_list:
+        seq_base: dict = {}             # per-variant sequential reference
+        for name in names:
+            variants = [True, False] if has_pre else [True]
+            ctxs = [executor_lib.RoundContext(
+                        algo=algo, model=model, opt=opt, lr=task.lr,
+                        batch_size=task.batch_size, epochs=epochs,
+                        max_batches=args.max_batches, precompute=pre)
+                    for pre in variants]
+            case_rows = bench_executor(name, ctxs, data, args.clients, 0,
+                                       global_params, payloads, states,
+                                       rounds=args.rounds)
+            for r, pre in zip(case_rows, variants):
+                r.update(algo=algo_name, epochs=epochs,
+                         precompute=bool(pre and has_pre))
+            if has_pre:
+                # the tentpole criterion: precompute vs the PR-1 inline
+                # (no-aux) baseline at the same executor.  The rounds are
+                # interleaved, so the median of PER-ROUND ratios is immune
+                # to both load drift (hits the pair equally) and isolated
+                # spikes (trimmed by the median).
+                pair = np.asarray(case_rows[1]["times_s"]) / np.asarray(
+                    case_rows[0]["times_s"])
+                case_rows[0]["speedup_vs_no_precompute"] = float(
+                    np.median(pair))
+            if name == "sequential":
+                seq_base = {r["precompute"]: r["min_s"] for r in case_rows}
+            for r in case_rows:
+                # like-for-like: each variant against the SAME-variant
+                # sequential run (a pre-off row never mixes with the
+                # pre-on sequential baseline)
+                base = seq_base.get(r["precompute"])
+                if base:
+                    r["speedup_vs_sequential"] = base / r["min_s"]
+            rows.extend(case_rows)
+    return rows
 
 
 def main(argv=None) -> int:
@@ -53,56 +154,65 @@ def main(argv=None) -> int:
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--scale", type=float, default=1.0,
                     help="dataset scale (paper tasks need ~0.02)")
-    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--epochs-list", type=int, nargs="+", default=[2],
+                    dest="epochs_list", help="local-epoch settings to sweep")
     ap.add_argument("--max-batches", type=int, default=None)
-    ap.add_argument("--width", type=int, default=8)
-    ap.add_argument("--algo", default="fedgkd")
+    ap.add_argument("--width", type=int, default=32,
+                    help="MLP width knob; 32 puts the toy task in the "
+                         "compute-bound regime the executor comparison "
+                         "targets (8 is dispatch-overhead-bound)")
+    ap.add_argument("--algos", nargs="+",
+                    default=["fedavg", "fedgkd", "fedgkd-vote"],
+                    help="algorithms to benchmark (fedgkd-vote runs M=5)")
     ap.add_argument("--alpha", type=float, default=10.0,
                     help="Dirichlet concentration; small alpha => ragged "
                          "client sizes => more padding waste on the vmap path")
     ap.add_argument("--with-shard-map", action="store_true")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_executor.json"))
     args = ap.parse_args(argv)
 
     task = scaled(PAPER_TASKS[args.task], scale=args.scale, rounds=1,
-                  local_epochs=args.local_epochs)
+                  local_epochs=max(args.epochs_list))
     task = dataclasses.replace(
         task, n_clients=max(task.n_clients, args.clients),
         participation=args.clients / max(task.n_clients, args.clients))
     data = fl_loop.make_federated_data(task, alpha=args.alpha, seed=0,
                                        n_test=64)
-    algo = algorithms.make(args.algo)
 
-    from repro.core.modelzoo import make_model
-    model = make_model(task, projection_head=algo.needs_projection_head,
-                       width=args.width)
-    global_params = model.init(jax.random.PRNGKey(1))
-    server = algo.init_server(global_params, model, task.num_classes)
-    payload = algo.round_payload(server, jax.random.PRNGKey(2))
-    opt = (adam(weight_decay=task.weight_decay) if task.optimizer == "adam"
-           else sgd(momentum=task.momentum, weight_decay=task.weight_decay))
-    ctx = executor_lib.RoundContext(
-        algo=algo, model=model, opt=opt, lr=task.lr,
-        batch_size=task.batch_size, epochs=task.local_epochs,
-        max_batches=args.max_batches)
-    states = {k: algo.init_client_state(k, global_params)
-              for k in range(data.n_clients)}
+    all_rows = []
+    for algo_name in args.algos:
+        rows = bench_algo(algo_name, task, data, args)
+        all_rows.extend(rows)
+        print(f"\n{algo_name} on {task.name}, {args.clients} sampled "
+              f"clients, width={args.width}")
+        print(f"{'executor':<12} {'epochs':>6} {'pre':>5} "
+              f"{'median s/round':>15} {'vs seq':>8} {'vs no-pre':>10}")
+        for r in rows:
+            print(f"{r['executor']:<12} {r['epochs']:>6} "
+                  f"{str(r['precompute']):>5} {r['median_s']:>15.4f} "
+                  f"{r.get('speedup_vs_sequential', float('nan')):>7.2f}x "
+                  f"{r.get('speedup_vs_no_precompute', float('nan')):>9.2f}x")
 
-    names = ["sequential", "vmap"]
-    if args.with_shard_map:
-        names.append("shard_map")
-    rows = [bench_executor(n, ctx, data, args.clients, 0, global_params,
-                           payload, states, rounds=args.rounds)
-            for n in names]
-
-    print(f"\n{args.algo} on {task.name}, {args.clients} sampled clients, "
-          f"{args.local_epochs} local epochs, width={args.width}")
-    print(f"{'executor':<12} {'median s/round':>15} {'min s/round':>13}")
-    for r in rows:
-        print(f"{r['executor']:<12} {r['median_s']:>15.4f} {r['min_s']:>13.4f}")
-    base = rows[0]["median_s"]
-    for r in rows[1:]:
-        print(f"speedup {r['executor']} vs sequential: "
-              f"{base / r['median_s']:.2f}x")
+    payload = {
+        "bench": "executor", "task": task.name, "clients": args.clients,
+        "width": args.width, "alpha": args.alpha,
+        "timing_rounds": args.rounds, "backend": jax.default_backend(),
+        "notes": (
+            "speedup_vs_no_precompute = median per-round paired ratio "
+            "(interleaved rounds) of the inline (PR-1) loss path over the "
+            "precompute pipeline at the same executor; "
+            "speedup_vs_sequential compares like-for-like "
+            "precompute variants. On CPU the student fwd+bwd dominates the "
+            "round (~3 forward-equivalents/epoch), so teacher hoisting "
+            "caps near (3E+M*E)/(3E+M) — the issue's epochs=2 targets "
+            "(fedgkd 1.3x, vote 2x) need a TPU-class accelerator where "
+            "per-step teacher loops and softmax HBM traffic cost more; "
+            "see ROADMAP."),
+        "cases": all_rows,
+    }
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"\nwrote {out}")
     return 0
 
 

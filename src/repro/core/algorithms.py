@@ -19,6 +19,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import distillation as D
 from repro.core.modelzoo import ModelBundle
@@ -56,7 +57,10 @@ class Algorithm:
 
     def server_update(self, server: dict, uploads: list[dict],
                       weights: list[float], model: ModelBundle,
-                      val_batch=None) -> dict:
+                      val_batch=None, n_clients: int | None = None) -> dict:
+        """Aggregate the round.  ``n_clients`` is the TOTAL client count K
+        (|uploads| is only the sampled cohort |S|); algorithms whose update
+        scales with the participation fraction |S|/K need it."""
         new_global = weighted_average([u["params"] for u in uploads], weights)
         server = dict(server)
         server["global"] = new_global
@@ -67,11 +71,51 @@ class Algorithm:
     def init_client_state(self, client_id: int, global_params: Any) -> Any:
         return ()
 
-    def loss_fn(self, model: ModelBundle):
-        """Return loss(params, payload, client_state, x, y, mask=None)
-        -> (loss, aux)."""
+    def precompute_aux(self, model: ModelBundle, payload: Any, x: Any,
+                       y: Any, mask: Any) -> Any:
+        """Round-constant per-example tensors (see ``repro.core.executor``).
 
-        def loss(params, payload, client_state, x, y, mask=None):
+        Called by executors ONCE per round on each client's full shard,
+        outside autodiff — anything the loss needs that depends only on
+        (payload, data) belongs here, not inside the differentiated step.
+        ``None`` (the default) means the algorithm has no precompute stage;
+        otherwise return a pytree of arrays with leading axis ``len(x)``
+        that executors gather per batch and feed to ``loss_fn`` as ``aux``.
+        """
+        return None
+
+    def precompute_parts(self, payload: Any):
+        """Optional incremental decomposition of ``precompute_aux``.
+
+        ``None`` (default), or ``(keys, get_part)``: ``keys[m]`` is a stable
+        hashable version id of part ``m``'s payload slice (UNCHANGED parts
+        must keep their key across rounds) and ``get_part(m)`` returns that
+        slice.  Executors then cache each part's per-example output — from
+        ``precompute_part`` — under ``(client_id, key)`` across rounds and
+        recompute only parts whose key is new, folding the stacked outputs
+        with ``precompute_combine``.  FedGKD-VOTE uses this: a round
+        replaces ONE of the M buffered teachers, so steady-state teacher
+        inference drops from M to 1 forward per shard per round.
+        """
+        return None
+
+    def precompute_part(self, model: ModelBundle, part_payload: Any,
+                        x: Any) -> jax.Array:
+        """Per-example output of ONE cacheable part: (N, ...) array."""
+        raise NotImplementedError
+
+    def precompute_combine(self, payload: Any, parts: jax.Array, x: Any,
+                           y: Any, mask: Any) -> Any:
+        """Fold stacked part outputs (n_parts, N, ...) into the aux pytree.
+        Must equal ``precompute_aux`` run directly on the same shard."""
+        raise NotImplementedError
+
+    def loss_fn(self, model: ModelBundle):
+        """Return loss(params, payload, client_state, x, y, mask=None,
+        aux=None) -> (loss, metrics).  ``aux`` carries the per-batch rows of
+        ``precompute_aux`` (or None when executed without precompute)."""
+
+        def loss(params, payload, client_state, x, y, mask=None, aux=None):
             logits = model.apply(params, x)
             return D.cross_entropy(logits, y, mask=mask), {}
 
@@ -107,7 +151,7 @@ class FedProx(Algorithm):
     def loss_fn(self, model):
         mu = self.mu
 
-        def loss(params, payload, client_state, x, y, mask=None):
+        def loss(params, payload, client_state, x, y, mask=None, aux=None):
             logits = model.apply(params, x)
             prox = 0.5 * mu * D.param_sq_dist(params, payload["anchor"])
             return D.cross_entropy(logits, y, mask=mask) + prox, {}
@@ -140,13 +184,22 @@ class FedGKD(Algorithm):
     def round_payload(self, server, rng):
         return {"teacher": server["buffer"].fused()}
 
+    def precompute_aux(self, model, payload, x, y, mask):
+        # The teacher is frozen for the whole round (Eq. 4): its logits are
+        # constant per example, so one inference forward over the shard
+        # replaces E·S teacher applies inside the differentiated scan.
+        del y, mask
+        return {"t_logits": model.apply(payload["teacher"], x)
+                .astype(jnp.float32)}
+
     def loss_fn(self, model):
         gamma, ltype, temp = self.gamma, self.loss_type, self.temperature
 
-        def loss(params, payload, client_state, x, y, mask=None):
+        def loss(params, payload, client_state, x, y, mask=None, aux=None):
             logits = model.apply(params, x)
             t_logits = jax.lax.stop_gradient(
-                model.apply(payload["teacher"], x))
+                aux["t_logits"] if aux is not None
+                else model.apply(payload["teacher"], x))
             ce = D.cross_entropy(logits, y, mask=mask)
             if ltype == "mse":
                 kd = D.kd_loss_mse(t_logits, logits, gamma, mask=mask)
@@ -156,8 +209,10 @@ class FedGKD(Algorithm):
 
         return loss
 
-    def server_update(self, server, uploads, weights, model, val_batch=None):
-        server = super().server_update(server, uploads, weights, model, val_batch)
+    def server_update(self, server, uploads, weights, model, val_batch=None,
+                      n_clients=None):
+        server = super().server_update(server, uploads, weights, model,
+                                       val_batch, n_clients)
         server["buffer"].push(server["global"])
         return server
 
@@ -196,6 +251,7 @@ class FedGKDVote(FedGKD):
 
     def round_payload(self, server, rng):
         models = server["buffer"].models            # newest first, len m<=M
+        versions = server["buffer"].versions
         m_avail = len(models)
         losses = server["val_losses"][:m_avail]
         gammas = D.vote_coefficients(losses, lam=self.lam)
@@ -203,28 +259,76 @@ class FedGKDVote(FedGKD):
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(list(xs) + [xs[0]] * pad), *models)
         gvec = jnp.asarray(gammas + [0.0] * pad, jnp.float32)
-        return {"teachers": stacked, "gammas": gvec}
+        # versions pad with the NEWEST id, mirroring the teacher padding —
+        # a padded slot is the same model, so its cached logits are too
+        vvec = np.asarray(versions + [versions[0]] * pad, np.int32)
+        return {"teachers": stacked, "gammas": gvec, "teacher_versions": vvec}
+
+    def precompute_aux(self, model, payload, x, y, mask):
+        """Collapse the M-teacher ensemble to per-example sufficient stats.
+
+        Σ_m γ_m·KL(p_m‖p_s) = Σ_m γ_m Σ_c p_mc·log p_mc
+                              − Σ_c (Σ_m γ_m p_mc)·log p_sc
+        so the loss only needs the γ-mixture ``tbar`` (C-vector) and the
+        γ-weighted negative entropy ``tent`` (scalar) per example — the
+        per-step ``lax.map`` over M stacked teacher models disappears.
+        """
+        # vmap (not lax.map): M batched-weight matmuls beat a sequential
+        # M-iteration loop — this runs once per round, off the autodiff path
+        t_logits = jax.vmap(
+            lambda t: self.precompute_part(model, t, x))(payload["teachers"])
+        return self.precompute_combine(payload, t_logits, x, y, mask)
+
+    def precompute_parts(self, payload):
+        versions = payload.get("teacher_versions")
+        if versions is None:
+            return None
+        keys = tuple(int(v) for v in np.asarray(versions))
+        get_part = lambda m: jax.tree_util.tree_map(
+            lambda l: l[m], payload["teachers"])
+        return keys, get_part
+
+    def precompute_part(self, model, part_payload, x):
+        return model.apply(part_payload, x).astype(jnp.float32)   # (N, C)
+
+    def precompute_combine(self, payload, parts, x, y, mask):
+        del x, y, mask
+        temp = self.temperature
+        logp = jax.nn.log_softmax(parts.astype(jnp.float32) / temp, axis=-1)
+        p = jnp.exp(logp)
+        g = payload["gammas"].astype(jnp.float32)             # (M,)
+        return {"tbar": jnp.einsum("m,mnc->nc", g, p),
+                "tent": jnp.einsum("m,mnc->n", g, p * logp)}
 
     def loss_fn(self, model):
         temp = self.temperature
 
-        def loss(params, payload, client_state, x, y, mask=None):
+        def loss(params, payload, client_state, x, y, mask=None, aux=None):
             logits = model.apply(params, x)
             ce = D.cross_entropy(logits, y, mask=mask)
 
-            def one(teacher):
-                t_logits = model.apply(teacher, x)
-                return D.masked_mean(
-                    D.kl_divergence(t_logits, logits, temp), mask)
+            if aux is not None:
+                logp_s = jax.nn.log_softmax(
+                    logits.astype(jnp.float32) / temp, axis=-1)
+                kls = (aux["tent"] - jnp.sum(aux["tbar"] * logp_s, axis=-1)
+                       ) * (temp * temp)                      # Σ_m γ_m·KL_m
+                kd = 0.5 * D.masked_mean(kls, mask)
+            else:
+                def one(teacher):
+                    t_logits = model.apply(teacher, x)
+                    return D.masked_mean(
+                        D.kl_divergence(t_logits, logits, temp), mask)
 
-            kls = jax.lax.map(one, payload["teachers"])   # (M,)
-            kd = 0.5 * jnp.sum(payload["gammas"] * kls)   # Σ (γ_m/2)·KL_m
+                kls = jax.lax.map(one, payload["teachers"])   # (M,)
+                kd = 0.5 * jnp.sum(payload["gammas"] * kls)   # Σ (γ_m/2)·KL_m
             return ce + kd, {"kd": kd}
 
         return loss
 
-    def server_update(self, server, uploads, weights, model, val_batch=None):
-        server = super().server_update(server, uploads, weights, model, val_batch)
+    def server_update(self, server, uploads, weights, model, val_batch=None,
+                      n_clients=None):
+        server = super().server_update(server, uploads, weights, model,
+                                       val_batch, n_clients)
         # validation loss per buffered model (paper: γ set by val performance)
         if val_batch is not None:
             vx, vy = val_batch
@@ -267,7 +371,7 @@ class MOON(Algorithm):
             b = b * jax.lax.rsqrt(jnp.sum(b * b, -1, keepdims=True) + 1e-12)
             return jnp.sum(a * b, axis=-1)
 
-        def loss(params, payload, client_state, x, y, mask=None):
+        def loss(params, payload, client_state, x, y, mask=None, aux=None):
             logits = model.apply(params, x)
             z = model.features(params, x)
             z_g = jax.lax.stop_gradient(model.features(payload["global"], x))
@@ -307,12 +411,23 @@ class FedDistillPlus(Algorithm):
         return {"label_logits": server["label_logits"],
                 "enable": server["have_logits"]}
 
+    def precompute_aux(self, model, payload, x, y, mask):
+        # label-table gather is round-constant per example: hoisting it out
+        # of the differentiated step removes the (C, C) table from the
+        # backward graph.  Unlike the FedGKD teachers there is no forward
+        # to save, so the aux tensor is a wash on memory traffic — the
+        # executors only run this on the batched paths where it is fused
+        # into the round-level precompute dispatch anyway.
+        del model, x, mask
+        return {"teacher": payload["label_logits"][y]}    # (N, C)
+
     def loss_fn(self, model):
         beta, temp = self.beta, self.temperature
 
-        def loss(params, payload, client_state, x, y, mask=None):
+        def loss(params, payload, client_state, x, y, mask=None, aux=None):
             logits = model.apply(params, x)
-            teacher = payload["label_logits"][y]          # (B, C)
+            teacher = (aux["teacher"] if aux is not None
+                       else payload["label_logits"][y])   # (B, C)
             kd = D.masked_mean(D.kl_divergence(teacher, logits, temp), mask)
             ce = D.cross_entropy(logits, y, mask=mask)
             return ce + beta * payload["enable"] * kd, {"kd": kd}
@@ -327,8 +442,10 @@ class FedDistillPlus(Algorithm):
         counts = jnp.sum(onehot, axis=0)                  # (C,)
         return {"logit_sums": sums, "label_counts": counts}
 
-    def server_update(self, server, uploads, weights, model, val_batch=None):
-        server = super().server_update(server, uploads, weights, model, val_batch)
+    def server_update(self, server, uploads, weights, model, val_batch=None,
+                      n_clients=None):
+        server = super().server_update(server, uploads, weights, model,
+                                       val_batch, n_clients)
         sums = sum(u["logit_sums"] for u in uploads)
         counts = sum(u["label_counts"] for u in uploads)
         server["label_logits"] = sums / jnp.maximum(counts[:, None], 1.0)
@@ -378,10 +495,10 @@ class FedGen(Algorithm):
         return layers.dense(gp["fc2"], h)
 
     def init_server(self, global_params, model, num_classes):
-        feat = model.features(global_params,
-                              jnp.zeros((1,) + self._probe_shape, jnp.float32)
-                              if hasattr(self, "_probe_shape") else None)
-        raise RuntimeError("init_server requires probe; use init_server_with_probe")
+        raise TypeError(
+            "FedGen needs a data probe to size the generator's feature "
+            "output; call init_server_with_probe(global_params, model, "
+            "num_classes, probe_x) instead (the FL loop does this).")
 
     # the FL loop calls this variant (needs a data probe for feature dim)
     def init_server_with_probe(self, global_params, model, num_classes, probe_x):
@@ -402,7 +519,7 @@ class FedGen(Algorithm):
         def head_apply(params, feats):
             return layers.dense(params["fc"], feats)
 
-        def loss(params, payload, client_state, x, y, mask=None):
+        def loss(params, payload, client_state, x, y, mask=None, aux=None):
             logits = model.apply(params, x)
             ce = D.cross_entropy(logits, y, mask=mask)
             b = x.shape[0]
@@ -428,7 +545,8 @@ class FedGen(Algorithm):
                          * mask[:, None], axis=0)
         return {"head": params["fc"], "label_counts": counts}
 
-    def server_update(self, server, uploads, weights, model, val_batch=None):
+    def server_update(self, server, uploads, weights, model, val_batch=None,
+                      n_clients=None):
         server = Algorithm.server_update(self, server, uploads, weights, model)
         c = server["num_classes"]
         counts = sum(u["label_counts"] for u in uploads)
@@ -496,7 +614,7 @@ class SCAFFOLD(Algorithm):
         return {"c_k": jax.tree_util.tree_map(jnp.zeros_like, global_params)}
 
     def loss_fn(self, model):
-        def loss(params, payload, client_state, x, y, mask=None):
+        def loss(params, payload, client_state, x, y, mask=None, aux=None):
             logits = model.apply(params, x)
             ce = D.cross_entropy(logits, y, mask=mask)
             # linear correction term: <(c − c_k), w> has gradient (c − c_k)
@@ -513,7 +631,8 @@ class SCAFFOLD(Algorithm):
     def update_client_state(self, client_state, params, payload=None):
         return client_state  # updated in server_update via uploads
 
-    def server_update(self, server, uploads, weights, model, val_batch=None):
+    def server_update(self, server, uploads, weights, model, val_batch=None,
+                      n_clients=None):
         # c_k update (option II) folded here: Δc_k = (w_t − w_k)/(K·η) − c.
         # The round's anchor/control variate are still in the server state at
         # this point (uploading K broadcast copies of them would be waste).
@@ -528,7 +647,11 @@ class SCAFFOLD(Algorithm):
             deltas.append(d)
         mean_delta = jax.tree_util.tree_map(
             lambda *xs: sum(xs) / len(xs), *deltas)
-        frac = len(uploads) / max(1, len(uploads))  # |S|/K ≈ participation
+        # participation fraction |S|/K over the TOTAL population; without
+        # n_clients (direct server_update calls) fall back to full
+        # participation, which keeps the old behaviour for |S| == K
+        frac = len(uploads) / max(1, n_clients if n_clients is not None
+                                  else len(uploads))
         server = Algorithm.server_update(self, server, uploads, weights, model)
         server["c"] = jax.tree_util.tree_map(
             lambda c, d: c + frac * d, server["c"], mean_delta)
@@ -555,7 +678,7 @@ class FedDyn(Algorithm):
     def loss_fn(self, model):
         a = self.alpha
 
-        def loss(params, payload, client_state, x, y, mask=None):
+        def loss(params, payload, client_state, x, y, mask=None, aux=None):
             logits = model.apply(params, x)
             ce = D.cross_entropy(logits, y, mask=mask)
             lin = sum(jnp.sum(h.astype(jnp.float32) * w.astype(jnp.float32))

@@ -12,12 +12,17 @@ The local pass is expressed as a ``lax.scan`` over a stacked batch tensor
                           batches than its neighbours — the whole step is
                           an identity on (params, opt_state)
 
+and an optional per-step ``aux`` pytree: round-constant tensors gathered
+from the algorithm's ``precompute_aux`` stage (teacher logits etc. — see
+``repro.core.executor``), leaves shaped ``(S, B, ...)``.  ``()`` (the empty
+pytree) means "no precompute" and is delivered to the loss as ``aux=None``.
+
 That makes the SAME function usable three ways by the executors in
 ``repro.core.executor``: jitted per client (SequentialExecutor), vmapped
 over a stacked client axis (VmapExecutor), or vmapped inside a shard_map
 shard (ShardMapExecutor).  ``loss_fn`` comes from the algorithm and must be
 pure pytree-in/pytree-out: ``loss(params, payload, client_state, x, y,
-mask=None) -> (scalar, aux_dict)``.
+mask=None, aux=None) -> (scalar, metrics_dict)``.
 """
 from __future__ import annotations
 
@@ -29,18 +34,24 @@ import jax.numpy as jnp
 from repro.optim import Optimizer, apply_updates
 
 
+def _aux_or_none(aux: Any) -> Any:
+    """Normalize the executor convention: the empty pytree means no aux."""
+    return None if isinstance(aux, tuple) and len(aux) == 0 else aux
+
+
 def make_step(loss_fn: Callable, opt: Optimizer, jit: bool = True) -> Callable:
     """One masked SGD step.
 
-    ``loss_fn(params, payload, client_state, x, y, mask) -> (loss, aux)``.
-    Returns ``step(params, opt_state, payload, client_state, x, y, mask, lr)``.
+    ``loss_fn(params, payload, client_state, x, y, mask, aux) -> (loss,
+    metrics)``.  Returns ``step(params, opt_state, payload, client_state,
+    x, y, mask, aux, lr)``; pass ``aux=()`` when there is no precompute.
     """
 
-    def step(params, opt_state, payload, client_state, x, y, mask, lr):
-        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, payload, client_state, x, y, mask)
+    def step(params, opt_state, payload, client_state, x, y, mask, aux, lr):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, payload, client_state, x, y, mask, _aux_or_none(aux))
         updates, opt_state = opt.update(grads, opt_state, params, lr)
-        return apply_updates(params, updates), opt_state, loss, aux
+        return apply_updates(params, updates), opt_state, loss, metrics
 
     return jax.jit(step) if jit else step
 
@@ -49,30 +60,32 @@ def make_local_update(loss_fn: Callable, opt: Optimizer) -> Callable:
     """Build the scan-based client pass.
 
     Returns ``local_update(params, payload, client_state, xs, ys, ex_mask,
-    step_mask, lr) -> (new_params, mean_loss)`` where ``xs/ys`` carry a
+    aux, step_mask, lr) -> (new_params, mean_loss)`` where ``xs/ys`` carry a
     leading step axis ``S`` and every batch has a uniform size ``B``.
-    Masked-out steps leave params and optimizer state untouched (so a
-    padded client is bit-identical to one trained on its real steps only);
-    masked-out examples are zero-weighted inside the loss.
+    ``aux`` is the per-step precompute pytree (leaves ``(S, B, ...)``) or
+    ``()``.  Masked-out steps leave params and optimizer state untouched
+    (so a padded client is bit-identical to one trained on its real steps
+    only); masked-out examples are zero-weighted inside the loss.
     """
     step = make_step(loss_fn, opt, jit=False)
 
     def local_update(params: Any, payload: Any, client_state: Any,
                      xs: jax.Array, ys: jax.Array, ex_mask: jax.Array,
-                     step_mask: jax.Array, lr) -> tuple[Any, jax.Array]:
+                     aux: Any, step_mask: jax.Array, lr) -> tuple[Any, jax.Array]:
         opt_state = opt.init(params)
 
         def body(carry, batch):
             p, o = carry
-            x, y, m, live = batch
-            p2, o2, loss, _ = step(p, o, payload, client_state, x, y, m, lr)
+            x, y, m, aux_b, live = batch
+            p2, o2, loss, _ = step(p, o, payload, client_state, x, y, m,
+                                   aux_b, lr)
             keep = lambda new, old: jnp.where(live, new, old)
             p = jax.tree_util.tree_map(keep, p2, p)
             o = jax.tree_util.tree_map(keep, o2, o)
             return (p, o), jnp.where(live, loss, 0.0)
 
         (params, _), losses = jax.lax.scan(
-            body, (params, opt_state), (xs, ys, ex_mask, step_mask))
+            body, (params, opt_state), (xs, ys, ex_mask, aux, step_mask))
         denom = jnp.maximum(1.0, jnp.sum(step_mask.astype(jnp.float32)))
         return params, jnp.sum(losses) / denom
 

@@ -3,21 +3,34 @@
 The KD regularizer is ``(γ/2)·E_x[ KL( h(w_teacher; x) ‖ h(w; x) ) ]`` —
 teacher distribution first (forward KL), matching Eq. (3).  ``γ_m`` weights
 for FedGKD-VOTE follow the paper's softmax-of-validation-loss rule.
+
+``kl_divergence`` (and therefore ``kd_loss_kl``, the KD term in every hot
+loss) executes through the fused Pallas kernel
+``repro.kernels.kd_kl.ops.kd_kl_loss`` on TPU — one custom-VJP kernel pass
+instead of three materialized softmaxes.  Off-TPU it runs the pure-jnp
+oracle (identical math); gradients flow ONLY to the student either way,
+which matches every call site (teachers are frozen payload constants).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.kd_kl import ops as _kd_ops
+
 
 def kl_divergence(teacher_logits: jax.Array, student_logits: jax.Array,
-                  temperature: float = 1.0) -> jax.Array:
-    """Per-example KL(p_T ‖ p_S). Shapes (..., C) -> (...)."""
-    t = temperature
-    p_t = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
-    logp_t = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
-    logp_s = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
-    return jnp.sum(p_t * (logp_t - logp_s), axis=-1) * (t * t)
+                  temperature: float = 1.0,
+                  use_pallas: bool | None = None) -> jax.Array:
+    """Per-example KL(p_T ‖ p_S)·T². Shapes (..., C) -> (...).
+
+    ``use_pallas=None`` auto-selects the fused Pallas kernel on TPU and the
+    jnp oracle elsewhere; pass True/False to force a path (tests).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    return _kd_ops.kd_kl_loss(teacher_logits, student_logits,
+                              temperature=temperature, use_pallas=use_pallas)
 
 
 def masked_mean(values: jax.Array, mask: jax.Array | None) -> jax.Array:
@@ -31,10 +44,12 @@ def masked_mean(values: jax.Array, mask: jax.Array | None) -> jax.Array:
 
 
 def kd_loss_kl(teacher_logits, student_logits, gamma: float,
-               temperature: float = 1.0, mask=None) -> jax.Array:
-    """Paper Eq.(3) KD term: (γ/2)·mean KL."""
+               temperature: float = 1.0, mask=None,
+               use_pallas: bool | None = None) -> jax.Array:
+    """Paper Eq.(3) KD term: (γ/2)·mean KL (fused kernel on TPU)."""
     return 0.5 * gamma * masked_mean(
-        kl_divergence(teacher_logits, student_logits, temperature), mask)
+        kl_divergence(teacher_logits, student_logits, temperature,
+                      use_pallas=use_pallas), mask)
 
 
 def kd_loss_mse(teacher_logits, student_logits, gamma: float,

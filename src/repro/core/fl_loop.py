@@ -96,13 +96,20 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
                   eval_every: int = 1, max_batches_per_client: int | None = None,
                   verbose: bool = False, width: int = 16,
                   round_callback=None, dp=None,
-                  executor: "str | executor_lib.ClientExecutor" = "auto"
-                  ) -> History:
+                  executor: "str | executor_lib.ClientExecutor" = "auto",
+                  precompute: "bool | str" = "auto") -> History:
     """Run T communication rounds of ``algo`` on the partitioned data.
 
     ``executor`` selects the client-execution strategy: ``"sequential"``,
     ``"vmap"``, ``"shard_map"``, an executor instance, or ``"auto"``
-    (batched vmap whenever the algorithm supports it).
+    (batched vmap whenever the algorithm supports it).  ``precompute``
+    gates the round-level teacher-precompute stage (the algorithm's
+    ``precompute_aux`` hook): ``"auto"`` enables it for the batched
+    executors only — on the sequential reference the per-client dispatch
+    and host round-trips cost more than the hoisted teacher forward saves
+    (see BENCH_executor.json) — while ``True``/``False`` force it; False
+    is the inline no-aux pre-pipeline path, kept for equivalence tests
+    and benchmarking.
     """
     rounds = rounds if rounds is not None else task.rounds
     model = make_model(task, projection_head=algo.needs_projection_head,
@@ -128,10 +135,12 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
 
     n_sample = max(1, int(round(task.participation * data.n_clients)))
     exec_ = executor_lib.get_executor(executor, algo, n_sample, model)
+    if precompute == "auto":
+        precompute = exec_.name != "sequential"
     ctx = executor_lib.RoundContext(
         algo=algo, model=model, opt=opt, lr=task.lr,
         batch_size=task.batch_size, epochs=task.local_epochs,
-        max_batches=max_batches_per_client)
+        max_batches=max_batches_per_client, precompute=bool(precompute))
 
     client_states = {k: algo.init_client_state(k, global_params)
                      for k in range(data.n_clients)}
@@ -152,7 +161,8 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
         result = exec_.run_round(
             ctx, server["global"], payload,
             [client_states[int(k)] for k in sampled],
-            [data.clients[int(k)] for k in sampled], rng)
+            [data.clients[int(k)] for k in sampled], rng,
+            client_ids=[int(k) for k in sampled])
         uploads, weights = result.uploads, result.weights
         local_losses = result.local_losses
         for k, new_state in zip(sampled, result.client_states):
@@ -162,7 +172,8 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
             from repro.core import privacy
             uploads = privacy.privatize_uploads(uploads, server["global"],
                                                 dp, t)
-        server = algo.server_update(server, uploads, weights, model, val_batch)
+        server = algo.server_update(server, uploads, weights, model, val_batch,
+                                    n_clients=data.n_clients)
         if dp is not None:
             from repro.core import privacy
             server["global"] = privacy.noise_aggregate(server["global"], dp,

@@ -30,15 +30,25 @@ def weighted_average(params_list: list[Any], weights: list[float]) -> Any:
 
 
 class ModelBuffer:
-    """FIFO of the latest M global models."""
+    """FIFO of the latest M global models.
+
+    Every pushed model gets a monotonically increasing version number so
+    downstream consumers (the executor teacher-logit cache — see
+    ``repro.core.executor``) can tell WHICH buffer entries changed between
+    rounds: a push replaces one entry and leaves M−1 identical.
+    """
 
     def __init__(self, size: int):
         assert size >= 1
         self.size = size
         self._buf: collections.deque = collections.deque(maxlen=size)
+        self._versions: collections.deque = collections.deque(maxlen=size)
+        self._next_version = 0
 
     def push(self, params: Any) -> None:
         self._buf.append(params)
+        self._versions.append(self._next_version)
+        self._next_version += 1
 
     def __len__(self) -> int:
         return len(self._buf)
@@ -47,6 +57,11 @@ class ModelBuffer:
     def models(self) -> list[Any]:
         """Newest-first list of buffered global models."""
         return list(reversed(self._buf))
+
+    @property
+    def versions(self) -> list[int]:
+        """Newest-first version ids, aligned with ``models``."""
+        return list(reversed(self._versions))
 
     def fused(self) -> Any:
         """FedGKD ensemble teacher  w̄_t = mean of buffer."""

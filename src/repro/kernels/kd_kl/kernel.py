@@ -30,7 +30,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kd_kl_fwd_kernel(lt_ref, ls_ref, out_ref,
+def _kd_kl_fwd_kernel(lt_ref, ls_ref, out_ref, lse_t_ref, lse_s_ref,
                       mt_ref, st_ref, ms_ref, ss_ref, acc_ref,
                       *, inv_temp: float, n_vblocks: int):
     """One (row_block, vocab_block) step. Scratch refs carry row stats."""
@@ -67,20 +67,29 @@ def _kd_kl_fwd_kernel(lt_ref, ls_ref, out_ref,
     def _finalize():
         lse_t = mt_ref[...] + jnp.log(st_ref[...])
         lse_s = ms_ref[...] + jnp.log(ss_ref[...])
+        lse_t_ref[...] = lse_t
+        lse_s_ref[...] = lse_s
         out_ref[...] = (acc_ref[...] / st_ref[...] - lse_t + lse_s) / (inv_temp * inv_temp)
 
 
 def kd_kl_fwd(teacher_logits: jax.Array, student_logits: jax.Array, *,
               temperature: float = 1.0, block_rows: int = 256,
-              block_vocab: int = 1024, interpret: bool = False) -> jax.Array:
-    """(T, V) × (T, V) -> (T,) per-row KL(p_T‖p_S)·temp².  T % block_rows ==
-    0 and V % block_vocab == 0 (ops.py pads)."""
+              block_vocab: int = 1024, interpret: bool = False):
+    """(T, V) × (T, V) -> (kl (T,), lse_t (T,), lse_s (T,)).  T % block_rows
+    == 0 and V % block_vocab == 0 (ops.py pads).
+
+    The row logsumexps fall out of the online-softmax scratch for free; the
+    custom VJP saves them as residuals so the backward pass rebuilds both
+    probability rows without re-reducing the vocab axis (saves two full
+    reads of the logits tensors per backward)."""
     t, v = teacher_logits.shape
     assert t % block_rows == 0 and v % block_vocab == 0, (t, v)
     n_rblocks, n_vblocks = t // block_rows, v // block_vocab
 
     kernel = functools.partial(_kd_kl_fwd_kernel, inv_temp=1.0 / temperature,
                                n_vblocks=n_vblocks)
+    row_spec = pl.BlockSpec((block_rows,), lambda i, j: (i,))
+    row_shape = jax.ShapeDtypeStruct((t,), jnp.float32)
     return pl.pallas_call(
         kernel,
         grid=(n_rblocks, n_vblocks),
@@ -88,8 +97,8 @@ def kd_kl_fwd(teacher_logits: jax.Array, student_logits: jax.Array, *,
             pl.BlockSpec((block_rows, block_vocab), lambda i, j: (i, j)),
             pl.BlockSpec((block_rows, block_vocab), lambda i, j: (i, j)),
         ],
-        out_specs=pl.BlockSpec((block_rows,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        out_specs=[row_spec, row_spec, row_spec],
+        out_shape=[row_shape, row_shape, row_shape],
         scratch_shapes=[
             pltpu.VMEM((block_rows,), jnp.float32),  # m_t
             pltpu.VMEM((block_rows,), jnp.float32),  # s_t
@@ -159,7 +168,10 @@ def _row_lse_kernel(l_ref, out_ref, m_ref, s_ref, *, inv_temp, n_vblocks):
 def row_logsumexp(logits: jax.Array, *, temperature: float = 1.0,
                   block_rows: int = 256, block_vocab: int = 1024,
                   interpret: bool = False) -> jax.Array:
-    """(T, V) -> (T,) logsumexp(l/temp) — used to rebuild probs in bwd."""
+    """(T, V) -> (T,) logsumexp(l/temp).
+
+    Standalone utility; the KD-KL backward no longer calls it — the forward
+    kernel now emits both row logsumexps as VJP residuals."""
     t, v = logits.shape
     n_rblocks, n_vblocks = t // block_rows, v // block_vocab
     kernel = functools.partial(_row_lse_kernel, inv_temp=1.0 / temperature,

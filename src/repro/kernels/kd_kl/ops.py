@@ -27,33 +27,39 @@ def _pad2(x, br, bv, fill):
     return x
 
 
+def _fwd_impl(teacher_logits, student_logits, temperature, block_rows,
+              block_vocab, interpret):
+    lt = _pad2(teacher_logits, block_rows, block_vocab, _PAD)
+    ls = _pad2(student_logits, block_rows, block_vocab, _PAD)
+    kl, lse_t, lse_s = K.kd_kl_fwd(
+        lt, ls, temperature=temperature, block_rows=block_rows,
+        block_vocab=block_vocab, interpret=interpret)
+    return kl[: teacher_logits.shape[0]], lse_t, lse_s
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def _kd_kl_rows(teacher_logits, student_logits, temperature, block_rows,
                 block_vocab, interpret):
-    lt = _pad2(teacher_logits, block_rows, block_vocab, _PAD)
-    ls = _pad2(student_logits, block_rows, block_vocab, _PAD)
-    out = K.kd_kl_fwd(lt, ls, temperature=temperature, block_rows=block_rows,
-                      block_vocab=block_vocab, interpret=interpret)
-    return out[: teacher_logits.shape[0]]
+    return _fwd_impl(teacher_logits, student_logits, temperature, block_rows,
+                     block_vocab, interpret)[0]
 
 
 def _fwd(teacher_logits, student_logits, temperature, block_rows,
          block_vocab, interpret):
-    out = _kd_kl_rows(teacher_logits, student_logits, temperature, block_rows,
-                      block_vocab, interpret)
-    return out, (teacher_logits, student_logits)
+    # the (padded-length) row logsumexps fall out of the forward kernel's
+    # online-softmax scratch — saving them as residuals lets the backward
+    # rebuild p_T/p_S without re-reducing the vocab axis
+    out, lse_t, lse_s = _fwd_impl(teacher_logits, student_logits, temperature,
+                                  block_rows, block_vocab, interpret)
+    return out, (teacher_logits, student_logits, lse_t, lse_s)
 
 
 def _bwd(temperature, block_rows, block_vocab, interpret, res, g):
-    lt, ls = res
+    lt, ls, lse_t, lse_s = res
     t, v = lt.shape
     ltp = _pad2(lt, block_rows, block_vocab, _PAD)
     lsp = _pad2(ls, block_rows, block_vocab, _PAD)
     gp = jnp.pad(g, (0, (-t) % block_rows))
-    lse_t = K.row_logsumexp(ltp, temperature=temperature, block_rows=block_rows,
-                            block_vocab=block_vocab, interpret=interpret)
-    lse_s = K.row_logsumexp(lsp, temperature=temperature, block_rows=block_rows,
-                            block_vocab=block_vocab, interpret=interpret)
     dls = K.kd_kl_bwd(ltp, lsp, lse_t, lse_s, gp.astype(jnp.float32),
                       temperature=temperature, block_rows=block_rows,
                       block_vocab=block_vocab, interpret=interpret)
@@ -77,7 +83,10 @@ def kd_kl_loss(teacher_logits: jax.Array, student_logits: jax.Array, *,
     shape = teacher_logits.shape
     assert shape == student_logits.shape
     if not use_pallas:
-        return ref.kd_kl_rowwise(teacher_logits, student_logits, temperature)
+        # stop_gradient keeps the fallback's VJP identical to the kernel's
+        # custom VJP (teacher gradient is zero on BOTH backends)
+        return ref.kd_kl_rowwise(jax.lax.stop_gradient(teacher_logits),
+                                 student_logits, temperature)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     lt = teacher_logits.reshape(-1, shape[-1])

@@ -196,8 +196,16 @@ def gqa_decode_step(params: Params, x: jax.Array, cache: KVCache, *,
     # Validity mask over cache slots.
     slot = jnp.arange(cache.max_len)[None, :]
     if window is not None:
-        # ring buffer: every written slot is within-window by construction
-        valid = slot < jnp.minimum(cache.length, cache.max_len)
+        # ring buffer: slot j currently holds the newest token whose absolute
+        # position is ≡ j (mod ring size).  A slot is attendable iff that
+        # token (a) has been written and (b) is still inside the sliding
+        # window of the query (= the token just appended at position
+        # length-1).  When the ring is sized exactly to the window
+        # (init_cache's layout) this reduces to "every written slot", but
+        # deriving it from positions keeps oversized rings correct too.
+        last = cache.length - 1
+        slot_pos = last - ((last - slot) % cache.max_len)
+        valid = (slot_pos >= 0) & (slot_pos > last - window)
     else:
         valid = slot < cache.length
     mask = valid[:, None, None, None, :]  # (1,1,1,1,max_len) -> (B,H,G,S,K)

@@ -103,6 +103,12 @@ def test_swa_decode_ring_buffer():
     """Sliding-window decode (ring cache) matches windowed full attention."""
     cfg = configs.get_smoke_config("mixtral-8x7b")  # attn_window=8 in smoke
     assert cfg.attn_window == 8
+    # lossless MoE capacity, as in test_decode_matches_forward: with capacity
+    # dropping, prefill (grouped dispatch) and decode (single token)
+    # legitimately differ — here we are testing the attention ring cache, so
+    # the MoE layer must be drop-free or its noise masks the comparison.
+    cfg = cfg.replace(moe=cfg.moe._replace(
+        capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k))
     params = transformer.init(jax.random.PRNGKey(0), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab_size)
     full_logits, _ = transformer.forward(params, cfg, toks)
@@ -114,6 +120,29 @@ def test_swa_decode_ring_buffer():
     dec = jnp.stack(outs, axis=1)
     np.testing.assert_allclose(np.asarray(dec), np.asarray(full_logits),
                                rtol=2e-3, atol=2e-3)
+
+
+def test_swa_ring_larger_than_window():
+    """An oversized ring (max_len > window) must still mask out-of-window
+    slots: slot validity is position-derived, not 'every written slot'."""
+    from repro.models import attention as A
+    d_model, n_heads, n_kv, hd, window = 32, 4, 2, 8, 4
+    params = A.gqa_init(jax.random.PRNGKey(0), d_model, n_heads, n_kv, hd)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 10, d_model))
+    full = A.gqa_attention(params, x, n_heads=n_heads, n_kv_heads=n_kv,
+                           head_dim=hd, positions=jnp.arange(10)[None, :],
+                           window=window)
+    for ring in (window, 6, 16):         # exact, oversized, >seq oversized
+        cache = A.kv_cache_init(1, ring, n_kv, hd, jnp.float32)
+        outs = []
+        for i in range(10):
+            y, cache = A.gqa_decode_step(
+                params, x[:, i:i + 1], cache, n_heads=n_heads,
+                n_kv_heads=n_kv, head_dim=hd, window=window)
+            outs.append(y[:, 0])
+        dec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=2e-5, atol=2e-5, err_msg=f"ring={ring}")
 
 
 def test_param_count_analytic_matches_actual():

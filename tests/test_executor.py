@@ -70,6 +70,62 @@ def test_shard_map_executor_matches_sequential(tiny_setup):
     assert _max_param_diff(hs.final_params, hm.final_params) < 1e-5
 
 
+# --- round-level teacher precompute (the PR-2 tentpole) ---------------------
+
+@pytest.mark.parametrize("name", ["fedgkd", "fedgkd-vote", "feddistill+"])
+def test_precompute_matches_no_aux_baseline(tiny_setup, name):
+    """Sequential/vmap with the precompute_aux stage must reproduce the PR-1
+    inline-teacher (no-aux) execution to < 1e-5 on params, losses and acc."""
+    task, data = tiny_setup
+    algo = algorithms.make(name)
+    assert type(algo).precompute_aux is not algorithms.Algorithm.precompute_aux
+    base = fl_loop.run_federated(task, algorithms.make(name), data, seed=0,
+                                 executor="sequential", precompute=False)
+    for spec in ("sequential", "vmap"):
+        h = fl_loop.run_federated(task, algorithms.make(name), data, seed=0,
+                                  executor=spec, precompute=True)
+        assert _max_param_diff(base.final_params, h.final_params) < 1e-5, spec
+        for rb, rh in zip(base.records, h.records):
+            assert abs(rb.mean_local_loss - rh.mean_local_loss) < 1e-5, spec
+            assert abs(rb.test_acc - rh.test_acc) < 1e-5, spec
+
+
+def test_precompute_flag_gates_hook(tiny_setup):
+    """precompute=False must force has_precompute off even for KD algos; a
+    no-hook algorithm never precomputes."""
+    task, _ = tiny_setup
+    from repro.core.modelzoo import make_model
+    from repro.optim import sgd
+    model = make_model(task)
+    mk = lambda algo, pre: ex.RoundContext(
+        algo=algo, model=model, opt=sgd(), lr=0.1, batch_size=64, epochs=1,
+        precompute=pre)
+    assert mk(algorithms.make("fedgkd"), True).has_precompute
+    assert not mk(algorithms.make("fedgkd"), False).has_precompute
+    assert not mk(algorithms.make("fedavg"), True).has_precompute
+
+
+def test_precompute_aux_values_match_inline_teacher(tiny_setup):
+    """The gathered aux rows equal the teacher logits the inline loss would
+    compute on the same batch."""
+    task, data = tiny_setup
+    from repro.core.modelzoo import make_model
+    model = make_model(task)
+    params = model.init(jax.random.PRNGKey(0))
+    gkd = algorithms.make("fedgkd", buffer_m=1)
+    server = gkd.init_server(params, model, task.num_classes)
+    payload = gkd.round_payload(server, jax.random.PRNGKey(1))
+    cdata = data.clients[0]
+    aux = gkd.precompute_aux(model, payload, jnp.asarray(cdata.x),
+                             jnp.asarray(cdata.y),
+                             jnp.ones((cdata.n,), jnp.float32))
+    rng = np.random.default_rng(5)
+    mat = ex.materialize_client(rng, cdata, batch_size=8, epochs=1)
+    direct = model.apply(payload["teacher"], jnp.asarray(mat.xs[0]))
+    np.testing.assert_allclose(np.asarray(aux["t_logits"][mat.picks[0]]),
+                               np.asarray(direct), atol=1e-6)
+
+
 @pytest.mark.parametrize("name", ["moon", "scaffold", "feddyn",
                                   "feddistill+"])
 def test_stateful_algorithms_run_under_vmap(tiny_setup, name):
@@ -112,7 +168,7 @@ def test_masked_step_is_identity(tiny_setup):
     ys = jnp.zeros((2, 3), jnp.int32)
     ex_mask = jnp.zeros((2, 3), jnp.float32)
     step_mask = jnp.zeros((2,), bool)
-    new_params, mloss = jax.jit(local)(params, (), (), xs, ys, ex_mask,
+    new_params, mloss = jax.jit(local)(params, (), (), xs, ys, ex_mask, (),
                                        step_mask, 0.1)
     assert _max_param_diff(params, new_params) == 0.0
     assert float(mloss) == 0.0
@@ -149,12 +205,16 @@ def test_materialize_max_batches_rng_consumption():
 
 def test_pad_and_stack_masks():
     mk = lambda s, b: ex.MaterializedClient(
-        np.ones((s, b, 2), np.float32), np.ones((s, b), np.int64), s * b)
-    xs, ys, ex_mask, step_mask = ex._pad_and_stack([mk(3, 4), mk(1, 2)])
+        np.ones((s, b, 2), np.float32), np.ones((s, b), np.int64), s * b,
+        np.arange(s * b, dtype=np.int32).reshape(s, b) % max(1, s * b // 2))
+    xs, ys, ex_mask, picks, step_mask = ex._pad_and_stack([mk(3, 4), mk(1, 2)])
     assert xs.shape == (2, 3, 4, 2)
+    assert picks.shape == (2, 3, 4)
     assert float(ex_mask[0].sum()) == 12.0
     assert float(ex_mask[1].sum()) == 2.0
     assert step_mask.tolist() == [[True, True, True], [True, False, False]]
+    # padded pick slots are in-range gathers (row 0) for the masked examples
+    assert int(picks[1, 1:].max()) == 0
 
 
 # --- resolution / fl_loop plumbing -----------------------------------------

@@ -134,6 +134,33 @@ def test_fedprox_penalizes_distance():
     assert float(l_far) > float(l_at)
 
 
+def test_scaffold_participation_fraction():
+    """SCAFFOLD's global control variate moves by |S|/K · mean(Δc_k): half
+    participation must move c exactly half as far as full participation."""
+    sc = algorithms.make("scaffold", lr=0.1, local_steps_hint=10)
+    params = {"w": jnp.zeros((3,))}
+    server = sc.init_server(params, model=None, num_classes=2)
+    uploads = [{"params": {"w": jnp.full((3,), -1.0)}},
+               {"params": {"w": jnp.full((3,), -3.0)}}]
+    weights = [1.0, 1.0]
+    half = sc.server_update(dict(server), uploads, weights, None,
+                            n_clients=4)   # |S|=2 of K=4
+    full = sc.server_update(dict(server), uploads, weights, None,
+                            n_clients=2)   # |S|=K=2
+    np.testing.assert_allclose(np.asarray(half["c"]["w"]),
+                               np.asarray(full["c"]["w"]) / 2, rtol=1e-6)
+    # legacy call without n_clients keeps the old full-participation reading
+    legacy = sc.server_update(dict(server), uploads, weights, None)
+    np.testing.assert_allclose(np.asarray(legacy["c"]["w"]),
+                               np.asarray(full["c"]["w"]), rtol=1e-6)
+
+
+def test_fedgen_init_server_requires_probe():
+    gen = algorithms.make("fedgen")
+    with pytest.raises(TypeError, match="init_server_with_probe"):
+        gen.init_server({}, model=None, num_classes=3)
+
+
 def test_fedgkd_vote_payload_padding():
     from repro.configs.paper import CIFAR10, scaled
     from repro.core.modelzoo import make_model
