@@ -5,7 +5,6 @@ round-trajectory table costs nothing extra."""
 import dataclasses
 import json
 
-import numpy as np
 
 from benchmarks.common import make_algo
 from repro.configs.paper import CIFAR10, SST5, scaled

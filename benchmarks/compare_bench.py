@@ -1,0 +1,94 @@
+"""Gate a fresh executor-bench run against the committed baseline.
+
+Compares the per-case SPEEDUP ratios (``speedup_vs_sequential`` and
+``speedup_vs_no_precompute``) of two ``BENCH_executor.json`` files — ratios,
+not wall-clock, so a slower CI runner does not read as a regression.  A case
+is keyed by ``(algo, executor, epochs, precompute)``; only keys present in
+BOTH files are compared (the baseline may predate newer cases, e.g. the
+shard_map rows), and a metric regresses when
+
+    new_speedup < baseline_speedup * (1 - tolerance)
+
+Exit code 1 on any regression — the nightly CI job fails on it.
+
+    python benchmarks/compare_bench.py BENCH_executor.json BENCH_new.json \
+        --tolerance 0.20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+METRICS = ("speedup_vs_sequential", "speedup_vs_no_precompute")
+
+
+def case_key(row: dict) -> tuple:
+    return (row["algo"], row["executor"], row["epochs"],
+            bool(row.get("precompute")))
+
+
+def index_cases(payload: dict) -> dict:
+    return {case_key(r): r for r in payload["cases"]}
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list[dict]:
+    """Rows of {key, metric, base, new, ok}; only shared keys+metrics."""
+    base_idx, new_idx = index_cases(baseline), index_cases(fresh)
+    rows = []
+    for key in sorted(set(base_idx) & set(new_idx), key=str):
+        for metric in METRICS:
+            b = base_idx[key].get(metric)
+            n = new_idx[key].get(metric)
+            if b is None or n is None:
+                continue
+            rows.append({"key": key, "metric": metric, "base": float(b),
+                         "new": float(n),
+                         "ok": float(n) >= float(b) * (1.0 - tolerance)})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_executor.json")
+    ap.add_argument("fresh", help="the run to validate")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional speedup drop (default 20%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    # speedup ratios transfer across runner speeds but NOT across execution
+    # environments: a 1-device "shard_map" row would be the vmap fallback
+    for field in ("devices", "backend", "clients", "width"):
+        b, n = baseline.get(field), fresh.get(field)
+        if b is not None and n is not None and b != n:
+            print(f"compare_bench: refusing to compare — baseline "
+                  f"{field}={b} but fresh run has {field}={n}; regenerate "
+                  f"with matching settings")
+            return 2
+    rows = compare(baseline, fresh, args.tolerance)
+    if not rows:
+        print("compare_bench: no overlapping cases — nothing to gate")
+        return 0
+
+    bad = [r for r in rows if not r["ok"]]
+    width = max(len(str(r["key"])) for r in rows)
+    print(f"{'case':<{width}}  {'metric':<26} {'base':>7} {'new':>7}  ok")
+    for r in rows:
+        print(f"{str(r['key']):<{width}}  {r['metric']:<26} "
+              f"{r['base']:>7.3f} {r['new']:>7.3f}  "
+              f"{'ok' if r['ok'] else 'REGRESSED'}")
+    if bad:
+        print(f"\n{len(bad)} speedup(s) regressed by more than "
+              f"{args.tolerance:.0%} vs {args.baseline}")
+        return 1
+    print(f"\nall {len(rows)} shared speedups within {args.tolerance:.0%} "
+          f"of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,12 +10,10 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.paper import CIFAR10, scaled
 from repro.core import algorithms, fl_loop
 from repro.core.distillation import cross_entropy
-from repro.core.modelzoo import make_model
 from repro.optim import global_norm
 
 

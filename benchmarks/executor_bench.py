@@ -9,17 +9,23 @@ OFF (where the algorithm has one), so the KD-precompute speedup is tracked
 round over round.
 
 Writes ``BENCH_executor.json`` at the repo root — the perf-trajectory
-artifact future PRs diff against:
+artifact future PRs diff against (``benchmarks/compare_bench.py`` gates the
+nightly CI job on it):
 
     PYTHONPATH=src python benchmarks/executor_bench.py            # fast preset
     PYTHONPATH=src python benchmarks/executor_bench.py --clients 16 --rounds 5
+    # the forced-multi-device case: shard_map on an 8-device host mesh
+    PYTHONPATH=src python benchmarks/executor_bench.py \
+        --host-devices 8 --with-shard-map
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import pathlib
+import sys
 import time
 
 import jax
@@ -41,7 +47,13 @@ def bench_executor(name: str, ctxs, data, n_sample: int, seed: int,
     timed round: KD algorithms rotate one teacher per round, so the
     cross-round logit cache is measured at its honest steady state, never
     at an all-hits fixed-payload best case."""
-    exec_ = executor_lib.get_executor(name, ctxs[0].algo, n_sample)
+    if name == "shard_map":
+        # strict: benchmark the REAL mesh route or die — never time the
+        # vmap fallback under a shard_map label (main() refuses the case
+        # on a single-device host before it gets here)
+        exec_ = executor_lib.ShardMapExecutor(strict=True)
+    else:
+        exec_ = executor_lib.get_executor(name, ctxs[0].algo, n_sample)
     rng = np.random.default_rng(seed)
     sampled = rng.choice(data.n_clients, size=n_sample, replace=False)
     cdata = [data.clients[int(k)] for k in sampled]
@@ -168,8 +180,28 @@ def main(argv=None) -> int:
                     help="Dirichlet concentration; small alpha => ragged "
                          "client sizes => more padding waste on the vmap path")
     ap.add_argument("--with-shard-map", action="store_true")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force this many XLA host-platform devices (the "
+                         "multi-device shard_map case on a CPU box); must "
+                         "run before jax initializes a backend")
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_executor.json"))
     args = ap.parse_args(argv)
+
+    if args.host_devices:
+        # XLA reads the flag at first backend init, which nothing in this
+        # module triggers at import time — but verify rather than hope
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}"
+        ).strip()
+        if len(jax.devices()) != args.host_devices:
+            sys.exit(f"--host-devices {args.host_devices} requested but jax "
+                     f"already initialized {len(jax.devices())} device(s); "
+                     f"set XLA_FLAGS in the environment instead")
+    if args.with_shard_map and len(jax.devices()) == 1:
+        sys.exit("--with-shard-map on a single device would only measure "
+                 "the vmap fallback under a shard_map label; pass "
+                 "--host-devices N (or set XLA_FLAGS) for a real mesh")
 
     task = scaled(PAPER_TASKS[args.task], scale=args.scale, rounds=1,
                   local_epochs=max(args.epochs_list))
@@ -197,6 +229,7 @@ def main(argv=None) -> int:
         "bench": "executor", "task": task.name, "clients": args.clients,
         "width": args.width, "alpha": args.alpha,
         "timing_rounds": args.rounds, "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
         "notes": (
             "speedup_vs_no_precompute = median per-round paired ratio "
             "(interleaved rounds) of the inline (PR-1) loss path over the "

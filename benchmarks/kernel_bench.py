@@ -12,7 +12,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.kd_kl import ref as kd_ref
 from repro.models import ssm

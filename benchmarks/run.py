@@ -20,7 +20,6 @@ def main() -> None:
                             table5_participation, table6_rounds,
                             table7_buffer, table9_losstype)
 
-    rows = []
 
     def bench(name, fn):
         t0 = time.time()

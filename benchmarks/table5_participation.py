@@ -4,7 +4,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-from benchmarks.common import csv_rows, make_algo, run_methods
+from benchmarks.common import csv_rows, run_methods
 from repro.configs.paper import CIFAR10
 
 

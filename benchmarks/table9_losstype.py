@@ -3,9 +3,8 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
 
-from benchmarks.common import csv_rows, make_algo
+from benchmarks.common import csv_rows
 from repro.configs.paper import CIFAR10, scaled
 from repro.core import algorithms, fl_loop
 

@@ -11,7 +11,6 @@ same numbers as the sequential reference (same batch draws, masked padding).
 import argparse
 import time
 
-import numpy as np
 
 from repro.configs.paper import TOY
 from repro.core import algorithms, fl_loop

@@ -12,8 +12,10 @@ strategy (repro.core.executor):
     "sequential"  reference semantics — one jitted lax.scan per client
     "vmap"        the whole sampled cohort trains in ONE jitted XLA call
                   (stacked/padded batches, masked ragged clients)
-    "shard_map"   experimental: the stacked round routed through a
-                  ("clients",) device mesh
+    "shard_map"   multi-device: the cohort sharded over a ("clients",)
+                  device mesh, client shards device-resident across
+                  rounds, non-dividing cohorts padded with masked
+                  phantom clients
     "auto"        (default) vmap when both the algorithm and the model
                   support batched execution, else sequential
 

@@ -15,7 +15,7 @@ Every algorithm implements the same small interface; the FL loop
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

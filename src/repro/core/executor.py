@@ -11,10 +11,13 @@ how the clients actually run is its business:
     VmapExecutor         pad/stack the sampled clients' batches and vmap the
                          SAME scan so one jitted XLA call trains every
                          client in parallel
-    ShardMapExecutor     VmapExecutor whose stacked computation is routed
-                         through a "clients" device mesh with shard_map
-                         (the repro/launch path); falls back to plain vmap
-                         when the device count does not divide the cohort
+    ShardMapExecutor     the multi-device path: the cohort is sharded over a
+                         ``("clients",)`` device mesh with shard_map, client
+                         shards live device-resident across rounds, and
+                         cohorts that do not divide the device count are
+                         padded with fully masked phantom clients (never a
+                         silent fallback; ``strict=True`` raises if the mesh
+                         route cannot run at all, i.e. on a single device)
 
 All three consume identical materialized batches (one shared host-RNG draw,
 same order as the historical per-client iterator), so sequential and vmap
@@ -61,22 +64,51 @@ part's per-example output under ``(client_id, version_key)`` in
 steady-state teacher inference is ~1 shard forward per round instead of M.
 Requires the caller to pass stable ``client_ids`` to ``run_round``; cached
 values must be bit-reproducible from (part payload, shard) alone.
+
+The multi-device path (ShardMapExecutor)
+----------------------------------------
+``ShardMapExecutor`` maps the cohort onto a 1-D ``("clients",)`` mesh over
+every visible device (``repro.launch.mesh.make_clients_mesh``):
+
+  * cohorts whose size K does not divide the device count are padded to
+    ``K_pad = ceil(K / n_dev) * n_dev`` with PHANTOM clients whose step and
+    example masks are all zero — the same masking machinery that makes
+    ragged clients exact makes the phantoms exact identities, and their
+    outputs are sliced off before aggregation and metrics;
+  * each sampled client's FULL shard is materialized once into a
+    device-resident slab pinned to the client's mesh slot
+    (``repro.data.pipeline.ClientSlabStore``, keyed by client id) and
+    re-used across rounds — per-round host→device traffic drops to the
+    cohort's batch-pick indices and masks, with training batches gathered
+    from the resident slab ON the owning device inside the sharded round;
+  * the ``precompute_aux`` teacher forward and the ``precompute_parts`` /
+    ``ModelBuffer`` part-cache run through the same mesh, so teacher logits
+    are computed — and their per-version slabs cached — on the device that
+    owns the client;
+  * which route actually ran is logged and exposed via
+    ``RoundContext.telemetry`` (``route``/``n_devices``/``padded_to``/
+    ``placement`` counters); ``ShardMapExecutor(strict=True)`` raises
+    instead of ever degrading to the single-device vmap computation.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import client as client_lib
 from repro.core.algorithms import Algorithm
 from repro.core.modelzoo import ModelBundle
-from repro.data.pipeline import ClientData
+from repro.data.pipeline import ClientData, ClientSlabStore, slab_rows
 from repro.optim import Optimizer
+
+_LOG = logging.getLogger("repro.executor")
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +126,10 @@ class RoundContext:
     epochs: int
     max_batches: Optional[int] = None
     precompute: bool = True   # False forces the inline (no-aux) loss path
+    # cap on device-resident client shards (ShardMapExecutor; LRU-evicted
+    # past the cap).  None = unbounded — right for full participation, but
+    # long partial-participation runs on real accelerators should bound it
+    placement_max_resident: Optional[int] = None
 
     def __post_init__(self):
         loss_fn = self.algo.loss_fn(self.model)
@@ -118,6 +154,14 @@ class RoundContext:
         # cross-round cache of per-(client, part-version) precompute outputs
         # (see "The precompute_aux stage" in the module docstring)
         self.aux_cache: dict = {}
+        # device-resident per-client shard slabs (ShardMapExecutor) — owned
+        # by the context so placement survives across rounds with the jit
+        # artifacts it feeds
+        self.placement = ClientSlabStore(self.placement_max_resident)
+        # per-round observability: which route ran, mesh/padding geometry,
+        # placement counters, parts recomputed — written by executors, read
+        # by fl_loop logging and the regression tests
+        self.telemetry: dict = {}
 
 
 @dataclasses.dataclass
@@ -157,16 +201,16 @@ class MaterializedClient:
     picks: np.ndarray   # (S_k, bs_k) int32 — shard-row index of each example
 
 
-def materialize_client(rng: np.random.Generator, data: ClientData,
-                       batch_size: int, epochs: int,
-                       max_batches: Optional[int] = None) -> MaterializedClient:
-    """Draw the client's epoch batches up front.
+def materialize_picks(rng: np.random.Generator, data: ClientData,
+                      batch_size: int, epochs: int,
+                      max_batches: Optional[int] = None) -> np.ndarray:
+    """Draw the client's epoch batch INDICES up front: (S_k, bs_k) int32.
 
     Consumes ``rng`` exactly like the historical lazy ``batch_iterator``
     (one permutation per *started* epoch, partial batches wrap-padded), so
-    a given seed yields the same batch sequence under every executor.
-    ``picks`` records each batch example's row in the client shard so that
-    round-level precomputed per-example tensors can be gathered per batch.
+    a given seed yields the same batch sequence under every executor —
+    including the shard_map path, which ships only these indices to the
+    device and gathers the rows from the resident shard slab there.
     """
     n = data.n
     bs = min(batch_size, n)
@@ -182,8 +226,16 @@ def materialize_client(rng: np.random.Generator, data: ClientData,
                 break
         if max_batches is not None and len(picks) >= max_batches:
             break
-    sel = np.stack(picks).astype(np.int32)  # (S_k, bs_k)
-    return MaterializedClient(data.x[sel], data.y[sel], n, sel)
+    return np.stack(picks).astype(np.int32)  # (S_k, bs_k)
+
+
+def materialize_client(rng: np.random.Generator, data: ClientData,
+                       batch_size: int, epochs: int,
+                       max_batches: Optional[int] = None) -> MaterializedClient:
+    """``materialize_picks`` plus the host-side row gather (the sequential
+    and vmap executors feed the gathered batches straight to the device)."""
+    sel = materialize_picks(rng, data, batch_size, epochs, max_batches)
+    return MaterializedClient(data.x[sel], data.y[sel], data.n, sel)
 
 
 def _pad_and_stack(mats: list[MaterializedClient]):
@@ -208,6 +260,36 @@ def _pad_and_stack(mats: list[MaterializedClient]):
         step_mask[i, :s] = True
     return (jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(ex_mask),
             jnp.asarray(picks), jnp.asarray(step_mask))
+
+
+def _pad_and_stack_picks(picks: list[np.ndarray], k_pad: int):
+    """Stack per-client pick indices to (k_pad, S, B) + example mask
+    (k_pad, S, B) + step mask (k_pad, S) — the shard_map path's entire
+    per-round host→device payload.  Rows beyond ``len(picks)`` are phantom
+    clients: all-zero masks make their every step an identity."""
+    S = max(p.shape[0] for p in picks)
+    B = max(p.shape[1] for p in picks)
+    out = np.zeros((k_pad, S, B), np.int32)
+    ex_mask = np.zeros((k_pad, S, B), np.float32)
+    step_mask = np.zeros((k_pad, S), bool)
+    for i, p in enumerate(picks):
+        s, b = p.shape
+        out[i, :s, :b] = p
+        ex_mask[i, :s, :b] = 1.0
+        step_mask[i, :s] = True
+    return out, ex_mask, step_mask
+
+
+def _pad_clients_axis(tree: Any, k_pad: int) -> Any:
+    """Zero-pad every leaf's leading (clients) axis to ``k_pad`` (phantom
+    clients' states; their updates are masked out and sliced off)."""
+    def pad(leaf):
+        k = leaf.shape[0]
+        if k == k_pad:
+            return leaf
+        return jnp.concatenate(
+            [leaf, jnp.zeros((k_pad - k,) + leaf.shape[1:], leaf.dtype)])
+    return jax.tree_util.tree_map(pad, tree)
 
 
 def _pad_full_data(client_data: list[ClientData], cache: Optional[dict] = None,
@@ -281,6 +363,7 @@ class SequentialExecutor:
 
     def run_round(self, ctx, global_params, payload, client_states,
                   client_data, rng, client_ids=None) -> RoundResult:
+        ctx.telemetry["route"] = "sequential"
         uploads, weights, losses, new_states = [], [], [], []
         for state, cdata in zip(client_states, client_data):
             mat = materialize_client(rng, cdata, ctx.batch_size, ctx.epochs,
@@ -407,6 +490,8 @@ class VmapExecutor:
         def ensure_stacked(m, key):
             if key not in stacked_by_key:
                 stacked_by_key[key] = part_fn(get_part(m), fx)  # (K, N_max, .)
+                ctx.telemetry["parts_computed"] = (
+                    ctx.telemetry.get("parts_computed", 0) + 1)
             return stacked_by_key[key]
 
         # fill the per-client numpy cache for any (client, version) misses
@@ -457,6 +542,7 @@ class VmapExecutor:
 
     def run_round(self, ctx, global_params, payload, client_states,
                   client_data, rng, client_ids=None) -> RoundResult:
+        ctx.telemetry["route"] = "vmap"
         k = len(client_data)
         full = None
         aux_full = None
@@ -512,47 +598,353 @@ class VmapExecutor:
 
 
 class ShardMapExecutor(VmapExecutor):
-    """Route the stacked round through a ``("clients",)`` device mesh.
+    """The multi-device executor: cohort sharded over a ``("clients",)``
+    mesh, client shards device-resident across rounds.
 
-    Experimental stub for the multi-device path (repro/launch idiom): each
-    shard vmaps its slice of the cohort with no cross-client collectives;
-    outputs stay client-stacked.  Requires the sampled-cohort size to be a
-    multiple of the device count — otherwise it silently degrades to the
-    single-device vmap computation.
+    See "The multi-device path" in the module docstring.  Cohorts that do
+    not divide the device count are padded with fully masked phantom
+    clients (no fallback); the only configuration the mesh route cannot
+    serve is a single-device host, where it degrades to the vmap
+    computation with a logged warning — or raises under ``strict=True``.
     """
 
     name = "shard_map"
 
-    def _execute(self, ctx, global_params, payload, states_stacked,
-                 xs, ys, ex_mask, aux, step_mask):
-        from jax.sharding import PartitionSpec as P
+    def __init__(self, strict: bool = False):
+        self.strict = strict
 
-        from repro.sharding import shard_map_compat
+    # -- mesh + sharded jitted stages ------------------------------------
+    def _mesh(self, ctx: RoundContext, ndev: int):
+        key = ("clients_mesh", ndev)
+        mesh = ctx.jit_cache.get(key)
+        if mesh is None:
+            from repro.launch.mesh import make_clients_mesh
+            mesh = make_clients_mesh(ndev)
+            ctx.jit_cache[key] = mesh
+        return mesh
 
-        ndev = len(jax.devices())
-        k = xs.shape[0]
-        if ndev == 1 or k % ndev != 0:
-            return super()._execute(ctx, global_params, payload,
-                                    states_stacked, xs, ys, ex_mask, aux,
-                                    step_mask)
-
-        key = ("smap", ndev)
+    def _sharded_round_fn(self, ctx: RoundContext, mesh) -> Callable:
+        key = ("smap_round", mesh.devices.size)
         jfn = ctx.jit_cache.get(key)
         if jfn is None:
-            mesh = jax.make_mesh((ndev,), ("clients",))
-            inner = jax.vmap(ctx.local_update,
-                             in_axes=(None, None, 0, 0, 0, 0, 0, 0, None))
+            from repro.sharding import shard_map_compat
+
+            def per_shard(gp, pl, st, fx, fy, picks, ex_mask, step_mask,
+                          aux_full):
+                def one(st_i, fx_i, fy_i, p_i, em_i, sm_i, aux_i):
+                    # batch rows gathered from the resident slab ON the
+                    # device that owns the client — the host never ships
+                    # (S, B, ...) batch tensors for this path
+                    xs = fx_i[p_i]
+                    ys = fy_i[p_i]
+                    aux_rows = jax.tree_util.tree_map(lambda l: l[p_i],
+                                                      aux_i)
+                    return ctx.local_update(gp, pl, st_i, xs, ys, em_i,
+                                            aux_rows, sm_i, ctx.lr)
+
+                return jax.vmap(one)(st, fx, fy, picks, ex_mask, step_mask,
+                                     aux_full)
+
             fn = shard_map_compat(
-                lambda gp, pl, st, a, b, c, x, d: inner(gp, pl, st, a, b, c,
-                                                        x, d, ctx.lr),
-                mesh,
+                per_shard, mesh,
                 in_specs=(P(), P(), P("clients"), P("clients"), P("clients"),
-                          P("clients"), P("clients"), P("clients")),
+                          P("clients"), P("clients"), P("clients"),
+                          P("clients")),
                 out_specs=(P("clients"), P("clients")))
             jfn = jax.jit(fn)
             ctx.jit_cache[key] = jfn
-        return jfn(global_params, payload, states_stacked, xs, ys,
-                   ex_mask, aux, step_mask)
+        return jfn
+
+    def _sharded_precompute_fn(self, ctx: RoundContext, mesh) -> Callable:
+        key = ("smap_pre", mesh.devices.size)
+        jfn = ctx.jit_cache.get(key)
+        if jfn is None:
+            from repro.sharding import shard_map_compat
+
+            def per_shard(pl, fx, fy, fmask):
+                return jax.vmap(
+                    lambda x, y, m: ctx.algo.precompute_aux(
+                        ctx.model, pl, x, y, m))(fx, fy, fmask)
+
+            fn = shard_map_compat(
+                per_shard, mesh,
+                in_specs=(P(), P("clients"), P("clients"), P("clients")),
+                out_specs=P("clients"))
+            jfn = jax.jit(fn)
+            ctx.jit_cache[key] = jfn
+        return jfn
+
+    def _sharded_part_fn(self, ctx: RoundContext, mesh) -> Callable:
+        key = ("smap_part", mesh.devices.size)
+        jfn = ctx.jit_cache.get(key)
+        if jfn is None:
+            from repro.sharding import shard_map_compat
+
+            def per_shard(pp, fx):
+                return jax.vmap(
+                    lambda x: ctx.algo.precompute_part(ctx.model, pp,
+                                                       x))(fx)
+
+            fn = shard_map_compat(per_shard, mesh,
+                                  in_specs=(P(), P("clients")),
+                                  out_specs=P("clients"))
+            jfn = jax.jit(fn)
+            ctx.jit_cache[key] = jfn
+        return jfn
+
+    def _sharded_combine_fn(self, ctx: RoundContext, mesh,
+                            n_parts: int) -> Callable:
+        key = ("smap_combine", mesh.devices.size, n_parts)
+        jfn = ctx.jit_cache.get(key)
+        if jfn is None:
+            from repro.sharding import shard_map_compat
+
+            def per_shard(pl, parts, fx, fy, fmask):
+                stacked = jnp.stack(parts)          # (P, g, rows, ...)
+                return jax.vmap(
+                    lambda pr, x, y, m: ctx.algo.precompute_combine(
+                        pl, pr, x, y, m),
+                    in_axes=(1, 0, 0, 0))(stacked, fx, fy, fmask)
+
+            fn = shard_map_compat(
+                per_shard, mesh,
+                in_specs=(P(), P("clients"), P("clients"), P("clients"),
+                          P("clients")),
+                out_specs=P("clients"))
+            jfn = jax.jit(fn)
+            ctx.jit_cache[key] = jfn
+        return jfn
+
+    # -- device-resident cohort assembly ---------------------------------
+    def _resident_cohort(self, ctx: RoundContext, mesh,
+                         client_data: list[ClientData],
+                         client_ids: Optional[list[int]], k_pad: int):
+        """(k_pad, rows, ...) x/y/mask stacks sharded ``P("clients")``,
+        assembled from the per-client resident slabs in ``ctx.placement``.
+
+        Assembly is pure device work (pad + stack of resident arrays);
+        the host uploads a shard only the first time a client is seen.
+        A back-to-back repeated cohort skips even the device-side
+        restack via a single-entry cache (mirrors ``_pad_full_data``)."""
+        devices = list(mesh.devices.reshape(-1))
+        ndev = len(devices)
+        g = k_pad // ndev
+        rows = max(slab_rows(d.n) for d in client_data)
+        cohort_key = (tuple(client_ids), rows, ndev) \
+            if client_ids is not None else None
+        cache = ctx.jit_cache.setdefault("slab_stack", {})
+        if cohort_key is not None and cache.get("key") == cohort_key:
+            return cache["value"]
+
+        entries: list[Optional[dict]] = []
+        for i, d in enumerate(client_data):
+            cid = client_ids[i] if client_ids is not None else None
+            entries.append(ctx.placement.get(cid, d, devices[i // g]))
+        feat = client_data[0].x.shape[1:]
+        x_dtype = client_data[0].x.dtype
+        pad_width = ((0, 0),) * len(feat)
+        xs_shards, ys_shards = [], []
+        for didx, device in enumerate(devices):
+            members = entries[didx * g:(didx + 1) * g]
+            xs, ys = [], []
+            for e in members:
+                short = rows - e["rows"]
+                ex, ey = e["x"], e["y"]
+                if short:
+                    ex = jnp.pad(ex, ((0, short),) + pad_width)
+                    ey = jnp.pad(ey, ((0, short),))
+                xs.append(ex)
+                ys.append(ey)
+            for _ in range(g - len(members)):           # phantom clients
+                xs.append(jnp.zeros((rows,) + feat, x_dtype))
+                ys.append(jnp.zeros((rows,), jnp.int32))
+            xs_shards.append(jax.device_put(jnp.stack(xs), device))
+            ys_shards.append(jax.device_put(jnp.stack(ys), device))
+        sharding = NamedSharding(mesh, P("clients"))
+        fx = jax.make_array_from_single_device_arrays(
+            (k_pad, rows) + feat, sharding, xs_shards)
+        fy = jax.make_array_from_single_device_arrays(
+            (k_pad, rows), sharding, ys_shards)
+        mask = np.zeros((k_pad, rows), np.float32)
+        for i, d in enumerate(client_data):
+            mask[i, :d.n] = 1.0
+        fmask = jax.device_put(mask, sharding)
+        out = (fx, fy, fmask)
+        if cohort_key is not None:
+            cache.clear()
+            cache["key"] = cohort_key
+            cache["value"] = out
+        return out
+
+    def _stack_to_mesh(self, mesh, pieces: list, rows: int, k_pad: int,
+                       dtype):
+        """Assemble per-client device arrays ``(rows_i, ...)`` into one
+        ``(k_pad, rows, ...)`` stack sharded ``P("clients")`` — pad/trim
+        each piece to ``rows`` on its slot device, phantom slots zero.
+        Device work only; nothing round-trips through the host."""
+        devices = list(mesh.devices.reshape(-1))
+        g = k_pad // len(devices)
+        tail = pieces[0].shape[1:]
+        pad_width = ((0, 0),) * len(tail)
+        shards = []
+        for didx, device in enumerate(devices):
+            members = pieces[didx * g:(didx + 1) * g]
+            arrs = []
+            for p in members:
+                p = jax.device_put(p, device)
+                if p.shape[0] < rows:
+                    p = jnp.pad(p, ((0, rows - p.shape[0]),) + pad_width)
+                elif p.shape[0] > rows:
+                    p = p[:rows]
+                arrs.append(p)
+            for _ in range(g - len(arrs)):
+                arrs.append(jnp.zeros((rows,) + tail, dtype))
+            shards.append(jax.device_put(jnp.stack(arrs), device))
+        return jax.make_array_from_single_device_arrays(
+            (k_pad, rows) + tail, NamedSharding(mesh, P("clients")), shards)
+
+    def _incremental_aux_sharded(self, ctx: RoundContext, mesh, payload,
+                                 parts_spec, client_ids, client_data, full):
+        """The parts cache on the mesh.  Two layers, mirroring the vmap
+        path but with everything device-resident:
+
+          * per-(client_id, version) part outputs in ``ctx.aux_cache`` —
+            device arrays trimmed to the client's own slab rows, so the
+            cache survives cohort churn under partial participation;
+          * per-version ``(k_pad, rows, ...)`` slabs sharded
+            ``P("clients")`` in ``jit_cache["parts_smap"]``, rebuilt from
+            the per-client layer when the cohort (or its slab geometry)
+            changes — a reassembly, not a recompute.
+
+        A version is recomputed (ONE sharded teacher forward over the
+        whole cohort) only when some sampled client has never seen it —
+        the steady state stays one forward per round however the cohort
+        rotates."""
+        keys, get_part = parts_spec
+        fx, fy, fmask = full
+        rows = int(fx.shape[1])
+        k_pad = int(fx.shape[0])
+        cohort = (tuple(client_ids), rows)
+        for cid in client_ids:
+            ctx.aux_cache.setdefault(cid, {})
+        dev = ctx.jit_cache.get("parts_smap")
+        if dev is None or dev["cohort"] != cohort:
+            dev = {"cohort": cohort, "slabs": {}}
+            ctx.jit_cache["parts_smap"] = dev
+        slabs = dev["slabs"]
+        part_fn = self._sharded_part_fn(ctx, mesh)
+        own_rows = [slab_rows(d.n) for d in client_data]
+        for m, key in enumerate(keys):
+            if key in slabs:
+                continue
+            if any(key not in ctx.aux_cache[cid] for cid in client_ids):
+                out = part_fn(get_part(m), fx)      # sharded (k_pad, R, .)
+                ctx.telemetry["parts_computed"] = (
+                    ctx.telemetry.get("parts_computed", 0) + 1)
+                for i, cid in enumerate(client_ids):
+                    if key not in ctx.aux_cache[cid]:
+                        ctx.aux_cache[cid][key] = out[i, :own_rows[i]]
+                slabs[key] = out
+            else:                   # every client resident: reassemble only
+                slabs[key] = self._stack_to_mesh(
+                    mesh, [ctx.aux_cache[cid][key] for cid in client_ids],
+                    rows, k_pad, jnp.float32)
+        keyset = set(keys)
+        dev["slabs"] = {kk: v for kk, v in slabs.items() if kk in keyset}
+        for cid in client_ids:
+            ctx.aux_cache[cid] = {kk: v for kk, v in
+                                  ctx.aux_cache[cid].items() if kk in keyset}
+        combine = self._sharded_combine_fn(ctx, mesh, len(keys))
+        parts = tuple(dev["slabs"][key] for key in keys)
+        return combine(payload, parts, fx, fy, fmask)
+
+    # -- the round ---------------------------------------------------------
+    def run_round(self, ctx, global_params, payload, client_states,
+                  client_data, rng, client_ids=None) -> RoundResult:
+        ndev = len(jax.devices())
+        if ndev == 1:
+            if self.strict:
+                raise RuntimeError(
+                    "ShardMapExecutor(strict=True): only one device is "
+                    "visible, the clients mesh cannot run.  On a CPU host "
+                    "set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                    "before the first jax import, or drop strict to allow "
+                    "the vmap fallback.")
+            _LOG.warning(
+                "shard_map executor: single visible device — degrading to "
+                "the vmap computation (set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N for a real mesh)")
+            result = super().run_round(ctx, global_params, payload,
+                                       client_states, client_data, rng,
+                                       client_ids)
+            ctx.telemetry.update(route="vmap-fallback", n_devices=1)
+            return result
+        return self._run_sharded(ctx, global_params, payload, client_states,
+                                 client_data, rng, client_ids, ndev)
+
+    def _run_sharded(self, ctx, global_params, payload, client_states,
+                     client_data, rng, client_ids, ndev) -> RoundResult:
+        mesh = self._mesh(ctx, ndev)
+        k = len(client_data)
+        g = -(-k // ndev)
+        k_pad = g * ndev
+        full = self._resident_cohort(ctx, mesh, client_data, client_ids,
+                                     k_pad)
+        aux_full: Any = ()
+        if ctx.has_precompute:
+            parts_spec = (ctx.algo.precompute_parts(payload)
+                          if client_ids is not None else None)
+            if parts_spec is not None:
+                aux_full = self._incremental_aux_sharded(
+                    ctx, mesh, payload, parts_spec, client_ids, client_data,
+                    full)
+            else:
+                aux_full = self._sharded_precompute_fn(ctx, mesh)(payload,
+                                                                  *full)
+
+        picks_list = [materialize_picks(rng, d, ctx.batch_size, ctx.epochs,
+                                        ctx.max_batches)
+                      for d in client_data]
+        picks, ex_mask, step_mask = _pad_and_stack_picks(picks_list, k_pad)
+        sharding = NamedSharding(mesh, P("clients"))
+        picks = jax.device_put(picks, sharding)
+        ex_mask = jax.device_put(ex_mask, sharding)
+        step_mask = jax.device_put(step_mask, sharding)
+        states_stacked = tree_stack(client_states)
+        states_padded = _pad_clients_axis(states_stacked, k_pad)
+
+        fx, fy, fmask = full
+        params_padded, mloss_padded = self._sharded_round_fn(ctx, mesh)(
+            global_params, payload, states_padded, fx, fy, picks, ex_mask,
+            step_mask, aux_full)
+        # drop the phantom clients before anything downstream sees them
+        params_stacked = jax.tree_util.tree_map(lambda l: l[:k],
+                                                params_padded)
+        mloss = mloss_padded[:k]
+
+        if ctx.has_finalize:
+            extras_stacked = self._finalize_fn(ctx)(
+                params_stacked, fx[:k], fy[:k], fmask[:k], payload)
+        else:
+            extras_stacked = {}
+        if ctx.has_state_update:
+            new_states_stacked = self._state_fn(ctx)(states_stacked,
+                                                     params_stacked, payload)
+        else:
+            new_states_stacked = None
+
+        per_client = _tree_unstack_jit((params_stacked, extras_stacked), k)
+        uploads = [{"params": p, **e} for p, e in per_client]
+        new_states = (_tree_unstack_jit(new_states_stacked, k)
+                      if ctx.has_state_update else list(client_states))
+        ctx.telemetry.update(route="shard_map", n_devices=ndev, cohort=k,
+                             padded_to=k_pad,
+                             placement=ctx.placement.stats())
+        _LOG.debug("shard_map round: K=%d padded to %d on %d devices", k,
+                   k_pad, ndev)
+        return RoundResult(uploads, [float(d.n) for d in client_data],
+                           np.asarray(mloss).astype(float).tolist(),
+                           new_states)
 
 
 # ---------------------------------------------------------------------------

@@ -3,9 +3,10 @@
 Single-host simulation path used by the paper-reproduction benchmarks.  HOW
 the sampled clients run each round is delegated to a pluggable
 ``ClientExecutor`` (repro.core.executor): sequential reference, batched
-vmap (one jitted call trains the whole cohort), or the experimental
-shard_map mesh route.  The multi-device driver for the big assigned
-architectures lives in repro/launch/train.py.
+vmap (one jitted call trains the whole cohort), or the multi-device
+shard_map route (cohort sharded over a ("clients",) mesh with
+device-resident client shards).  The multi-device driver for the big
+assigned architectures lives in repro/launch/train.py.
 """
 from __future__ import annotations
 
@@ -163,6 +164,15 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
             [client_states[int(k)] for k in sampled],
             [data.clients[int(k)] for k in sampled], rng,
             client_ids=[int(k) for k in sampled])
+        if verbose and t == 0:
+            # which route actually ran (the shard_map executor may degrade
+            # to vmap on a single device — see RoundContext.telemetry)
+            tele = ctx.telemetry
+            print(f"[{algo.name}] executor route: "
+                  f"{tele.get('route', exec_.name)}"
+                  + (f" ({tele['n_devices']} devices, cohort "
+                     f"{tele['cohort']} padded to {tele['padded_to']})"
+                     if "padded_to" in tele else ""))
         uploads, weights = result.uploads, result.weights
         local_losses = result.local_losses
         for k, new_state in zip(sampled, result.client_states):

@@ -3,14 +3,32 @@
 ``FederatedData`` owns the full arrays and the Dirichlet partition;
 ``batch_iterator`` yields shuffled minibatches per local epoch (numpy on the
 host — the arrays are small; device transfer happens inside the jitted step).
+
+Device-resident slabs
+---------------------
+The multi-device executor (``repro.core.executor.ShardMapExecutor``) keeps
+each client's FULL shard on the device that owns the client's slot of the
+``("clients",)`` mesh, as a zero-padded "slab" whose row count is quantized
+(``slab_rows``) so shapes stay stable as cohorts change.  ``ClientSlabStore``
+owns those slabs, keyed by the stable client id: a client sampled in
+consecutive rounds re-uses its resident slab — per-round host→device traffic
+drops to the sampled cohort's batch-pick indices and masks.  The store counts
+``host_transfers`` (numpy → device uploads), ``device_moves`` (a cached slab
+re-pinned because the client landed on a different mesh slot) and ``hits``
+so tests and telemetry can assert residency instead of guessing.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
 from repro.data.dirichlet import dirichlet_partition, partition_stats
+
+SLAB_QUANT = 64   # slab rows are multiples of this (stable shapes => stable
+                  # compiled executables as ragged cohorts rotate)
 
 
 @dataclasses.dataclass
@@ -64,3 +82,88 @@ def batch_iterator(rng: np.random.Generator, data: ClientData, batch_size: int,
 def num_batches(n: int, batch_size: int, epochs: int) -> int:
     bs = min(batch_size, n)
     return epochs * int(np.ceil(n / bs))
+
+
+# ---------------------------------------------------------------------------
+# device-resident slab layout (the ShardMapExecutor placement layer)
+# ---------------------------------------------------------------------------
+
+def slab_rows(n: int) -> int:
+    """Quantized slab row count: ``n`` rounded up to SLAB_QUANT."""
+    return max(SLAB_QUANT, int(-(-n // SLAB_QUANT)) * SLAB_QUANT)
+
+
+def make_slab(data: ClientData, rows: int) -> tuple[np.ndarray, np.ndarray]:
+    """Zero-pad one client's shard to ``rows`` (labels as int32).
+
+    Padded rows carry arbitrary (zero) values — every consumer sees them
+    through a validity mask or through batch-pick gathers that an example
+    mask zero-weights, so the pad never reaches a loss.
+    """
+    assert rows >= data.n, (rows, data.n)
+    x = np.zeros((rows,) + data.x.shape[1:], data.x.dtype)
+    y = np.zeros((rows,), np.int32)
+    x[:data.n] = data.x
+    y[:data.n] = data.y
+    return x, y
+
+
+class ClientSlabStore:
+    """Device-resident per-client shard slabs, keyed by stable client id.
+
+    ``get(cid, data, device)`` returns ``{"x", "y", "n", "rows", "device"}``
+    with ``x``/``y`` committed to ``device``.  Repeat lookups for a resident
+    client are cache hits (no host transfer); a client whose mesh slot
+    changed is moved device-to-device, never re-uploaded from the host.
+    ``cid=None`` disables caching (every call is a fresh upload).
+
+    ``max_resident`` bounds device memory under partial participation —
+    without it every client ever sampled would stay pinned forever.  The
+    store evicts least-recently-USED clients past the cap (an evicted
+    client re-uploads from the host on its next sample); ``None`` means
+    unbounded, the right default for full-participation runs and the
+    equivalence suites.
+    """
+
+    def __init__(self, max_resident: Optional[int] = None):
+        self.slabs: "collections.OrderedDict" = collections.OrderedDict()
+        self.max_resident = max_resident
+        self.host_transfers = 0
+        self.device_moves = 0
+        self.hits = 0
+        self.evictions = 0
+
+    def get(self, cid, data: ClientData, device) -> dict:
+        import jax
+
+        entry = self.slabs.get(cid) if cid is not None else None
+        if entry is not None and entry["n"] == data.n:
+            self.slabs.move_to_end(cid)
+            if entry["device"] == device:
+                self.hits += 1
+                return entry
+            entry = dict(entry, device=device,
+                         x=jax.device_put(entry["x"], device),
+                         y=jax.device_put(entry["y"], device))
+            self.slabs[cid] = entry
+            self.device_moves += 1
+            return entry
+        rows = slab_rows(data.n)
+        x, y = make_slab(data, rows)
+        entry = {"device": device, "x": jax.device_put(x, device),
+                 "y": jax.device_put(y, device), "n": data.n, "rows": rows}
+        if cid is not None:
+            self.slabs[cid] = entry
+            self.slabs.move_to_end(cid)
+            while (self.max_resident is not None
+                   and len(self.slabs) > self.max_resident):
+                self.slabs.popitem(last=False)
+                self.evictions += 1
+        self.host_transfers += 1
+        return entry
+
+    def stats(self) -> dict:
+        return {"resident_clients": len(self.slabs),
+                "host_transfers": self.host_transfers,
+                "device_moves": self.device_moves, "hits": self.hits,
+                "evictions": self.evictions}

@@ -5,9 +5,8 @@ configured (launch/dryrun.py sets XLA_FLAGS first).
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

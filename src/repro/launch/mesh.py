@@ -1,11 +1,13 @@
 """Production meshes (TPU v5e pods).
 
-A FUNCTION, not a module constant — importing this module must never touch
+FUNCTIONS, not module constants — importing this module must never touch
 jax device state (the dry-run sets XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
 import jax
+
+from repro.sharding import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -13,11 +15,24 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever host devices exist (tests / examples)."""
     n = len(jax.devices())
     assert n % model == 0, (n, model)
-    return jax.make_mesh((n // model, model), ("data", "model"))
+    return make_mesh_compat((n // model, model), ("data", "model"))
+
+
+def make_clients_mesh(n: int | None = None) -> jax.sharding.Mesh:
+    """1-D ``("clients",)`` mesh for cohort-parallel federated rounds.
+
+    Used by ``repro.core.executor.ShardMapExecutor`` (and the
+    ``repro.launch.train --sharded`` driver): the sampled cohort's client
+    axis is sharded over it, weights stay replicated.  Defaults to every
+    visible device; on a CPU dev box force several host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    n = len(jax.devices()) if n is None else n
+    return make_mesh_compat((n,), ("clients",))

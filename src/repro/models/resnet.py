@@ -10,7 +10,6 @@ do the same.  NHWC layout, pure JAX.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Sequence
 
 import jax

@@ -459,7 +459,6 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array, cache,
         seg, shared = params["seg0"], cache["seg0"]
         period = cfg.shared_attn_period
         groups = cfg.n_layers // period
-        n_shared = groups
 
         def scan_mamba(h, gp, gc):
             if cfg.scan_layers:

@@ -25,7 +25,7 @@ leading None.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np
@@ -37,6 +37,27 @@ from repro.models.config import ModelConfig
 def data_axes(mesh: Mesh) -> tuple:
     """The data-parallel axis (grouped with 'pod' when present)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_mesh_compat(shape: tuple[int, ...], axis_names: tuple[str, ...]) -> Mesh:
+    """``jax.make_mesh`` across jax versions.
+
+    ``jax.make_mesh`` (with its device-order heuristics) appeared in
+    jax 0.4.35; on older releases fall back to
+    ``mesh_utils.create_device_mesh`` + the ``Mesh`` constructor, which is
+    what ``make_mesh`` wraps.  Every mesh in this repo (production pods,
+    host test meshes, the executor's ``("clients",)`` mesh) goes through
+    here so a jax bump only has one seam to patch.
+    """
+    mk = getattr(jax, "make_mesh", None)
+    if mk is not None:
+        return mk(shape, axis_names)
+    from jax.experimental import mesh_utils
+    # match make_mesh: a mesh smaller than the visible device set takes the
+    # first prod(shape) devices (create_device_mesh would raise instead)
+    n = int(np.prod(shape))
+    devs = mesh_utils.create_device_mesh(shape, devices=jax.devices()[:n])
+    return Mesh(devs, axis_names)
 
 
 def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):

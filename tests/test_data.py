@@ -1,6 +1,5 @@
 """Data pipeline: Dirichlet partitioning invariants + synthetic generators."""
 import numpy as np
-import pytest
 
 from repro.data.dirichlet import dirichlet_partition, partition_stats
 from repro.data.pipeline import ClientData, batch_iterator, num_batches

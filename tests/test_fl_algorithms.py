@@ -129,7 +129,6 @@ def test_fedprox_penalizes_distance():
     payload = {"anchor": params}
     l_at, _ = prox.loss_fn(model)(params, payload, (), x, y)
     l_far, _ = prox.loss_fn(model)(far, payload, (), x, y)
-    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
     # the proximal term alone contributes mu/2 * n_params at distance 1
     assert float(l_far) > float(l_at)
 

@@ -1,7 +1,6 @@
 """HLO collective parser: handcrafted text + a real compiled artifact."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlo_stats
 

@@ -50,6 +50,25 @@ def test_moe_expert_parallel_spec():
     assert moe["router"]["w"] == P(None, None, None)
 
 
+def test_make_mesh_compat_matches_make_mesh():
+    """The version shim must produce the same mesh jax.make_mesh would
+    (and still work if jax.make_mesh is absent, via the mesh_utils path)."""
+    m = sh.make_mesh_compat((1,), ("clients",))
+    assert m.axis_names == ("clients",)
+    assert m.devices.shape == (1,)
+    m2 = sh.make_mesh_compat((1, 1), ("data", "model"))
+    assert m2.axis_names == ("data", "model")
+
+
+def test_make_clients_mesh_spans_all_devices():
+    from repro.launch.mesh import make_clients_mesh
+    mesh = make_clients_mesh()
+    assert mesh.axis_names == ("clients",)
+    assert mesh.devices.size == len(jax.devices())
+    explicit = make_clients_mesh(1)
+    assert explicit.devices.size == 1
+
+
 def test_fit_specs_drops_nondivisible():
     mesh = jax.make_mesh((1,), ("model",))
     spec = sh.fit_specs(P("model"), jax.ShapeDtypeStruct((7,), jnp.float32),
