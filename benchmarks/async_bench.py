@@ -1,0 +1,163 @@
+"""Async-vs-sync simulated wall-clock-to-target-accuracy benchmark.
+
+The synchronous executors end every round at the barrier — the slowest
+sampled client.  Under a straggler tail that barrier dominates: this bench
+puts a configurable tail (default: 20% of clients at 4x slowdown) under
+the ``toy`` preset, runs the synchronous baseline for ``--rounds`` rounds,
+replays its per-round barrier cost on the same seeded virtual clock
+(``repro.core.systemsim``), then measures how much simulated wall-clock
+the buffered-async executor needs to reach the SAME accuracy.
+
+Writes ``BENCH_async.json`` at the repo root — the artifact
+``benchmarks/compare_bench.py`` gates the nightly job on (metric:
+``sim_speedup_vs_sync``, bigger is better).  The acceptance criterion from
+the async-rounds issue — async reaches the sync round-10 accuracy in
+<= 0.6x the simulated clock — is enforced directly via ``--max-ratio``:
+
+    PYTHONPATH=src python benchmarks/async_bench.py                # default
+    PYTHONPATH=src python benchmarks/async_bench.py --algos fedgkd \
+        --buffer 4 --straggler-frac 0.2 --straggler-slowdown 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+from repro.configs.paper import PAPER_TASKS
+from repro.core import algorithms, fl_loop
+from repro.core.executor import AsyncExecutor
+from repro.core.systemsim import SpeedProfile, SystemSim, derive_rng
+from repro.data.pipeline import num_batches
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def sync_sim_clock(records, sim: SystemSim, work) -> list[float]:
+    """Cumulative synchronous virtual clock: each round costs the barrier
+    max over its sampled cohort's durations."""
+    out, t = [], 0.0
+    for rec in records:
+        t += max(sim.duration(k, work[k]) for k in rec.sampled)
+        out.append(t)
+    return out
+
+
+def bench_algo(algo_name: str, task, data, args) -> dict:
+    profile = SpeedProfile(kind="straggler",
+                           straggler_frac=args.straggler_frac,
+                           straggler_slowdown=args.straggler_slowdown)
+    work = [num_batches(c.n, task.batch_size, task.local_epochs)
+            for c in data.clients]
+    mk = lambda: algorithms.make(algo_name, **(
+        {"buffer_m": args.buffer_m} if algo_name.startswith("fedgkd") else {}))
+
+    hs = fl_loop.run_federated(task, mk(), data, rounds=args.rounds,
+                               seed=args.seed, executor="vmap")
+    sim = SystemSim(data.n_clients, profile, rng=derive_rng(args.seed))
+    sync_clock = sync_sim_clock(hs.records, sim, work)
+    target = hs.records[-1].test_acc
+
+    scheme = "fedgkd" if algo_name.startswith("fedgkd") else "polynomial"
+    ha = fl_loop.run_federated(
+        task, mk(), data, rounds=args.rounds * args.async_rounds_mult,
+        seed=args.seed,
+        executor=AsyncExecutor(buffer_size=args.buffer, staleness=scheme,
+                               profile=profile))
+    hit = next((r for r in ha.records if r.test_acc >= target), None)
+
+    row = {"algo": algo_name, "executor": "async",
+           "epochs": task.local_epochs, "precompute": True,
+           "buffer_size": args.buffer, "staleness_scheme": scheme,
+           "profile": profile.kind,
+           "straggler_frac": args.straggler_frac,
+           "straggler_slowdown": args.straggler_slowdown,
+           "target_acc": round(target, 4),
+           "sync_rounds": args.rounds,
+           "sync_sim_clock": round(sync_clock[-1], 2),
+           "async_best_acc": round(ha.best_acc, 4),
+           "mean_staleness": round(ha.telemetry["mean_staleness"], 3),
+           "max_staleness": ha.telemetry["max_staleness"],
+           "stale_absorbed": ha.telemetry["stale_absorbed"]}
+    if hit is None:
+        row.update(reached=False, sim_speedup_vs_sync=0.0)
+    else:
+        row.update(reached=True,
+                   aggregations_to_target=hit.round,
+                   async_sim_clock=round(hit.sim_time, 2),
+                   clock_ratio=round(hit.sim_time / sync_clock[-1], 4),
+                   sim_speedup_vs_sync=round(sync_clock[-1] / hit.sim_time,
+                                             4))
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="toy", choices=sorted(PAPER_TASKS))
+    ap.add_argument("--algos", nargs="+", default=["fedavg", "fedgkd"])
+    ap.add_argument("--rounds", type=int, default=10,
+                    help="sync baseline rounds; the target is the sync "
+                         "accuracy after this many rounds")
+    ap.add_argument("--async-rounds-mult", type=int, default=4,
+                    dest="async_rounds_mult",
+                    help="async aggregation budget as a multiple of "
+                         "--rounds (each aggregation applies only B "
+                         "updates, so async needs more of them)")
+    ap.add_argument("--buffer", type=int, default=4,
+                    help="async aggregation buffer B")
+    ap.add_argument("--buffer-m", type=int, default=3,
+                    help="FedGKD teacher buffer M")
+    ap.add_argument("--straggler-frac", type=float, default=0.2)
+    ap.add_argument("--straggler-slowdown", type=float, default=4.0)
+    ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-ratio", type=float, default=0.6,
+                    help="fail if async needs more than this fraction of "
+                         "the sync simulated clock (the acceptance "
+                         "criterion); 0 disables the gate")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_async.json"))
+    args = ap.parse_args(argv)
+
+    task = PAPER_TASKS[args.task]
+    data = fl_loop.make_federated_data(task, alpha=args.alpha, seed=0,
+                                       n_test=400)
+    n_sample = max(1, int(round(task.participation * data.n_clients)))
+
+    cases = []
+    for algo_name in args.algos:
+        row = bench_algo(algo_name, task, data, args)
+        cases.append(row)
+        if row["reached"]:
+            print(f"{algo_name:>12}: sync acc {row['target_acc']:.4f} at "
+                  f"sim t={row['sync_sim_clock']:.0f}; async reached it at "
+                  f"t={row['async_sim_clock']:.0f} "
+                  f"({row['clock_ratio']:.2f}x, speedup "
+                  f"{row['sim_speedup_vs_sync']:.2f}x)")
+        else:
+            print(f"{algo_name:>12}: async best {row['async_best_acc']:.4f} "
+                  f"< target {row['target_acc']:.4f} — NOT reached")
+
+    payload = {"task": args.task, "devices": len(jax.devices()),
+               "backend": jax.default_backend(), "clients": n_sample,
+               "width": 16, "buffer": args.buffer,
+               "profile": "straggler", "cases": cases}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out}")
+
+    if args.max_ratio > 0:
+        bad = [c for c in cases if not c["reached"]
+               or c["clock_ratio"] > args.max_ratio]
+        if bad:
+            print(f"FAIL: {len(bad)} case(s) missed the <= "
+                  f"{args.max_ratio:.1f}x simulated-clock criterion: "
+                  f"{[c['algo'] for c in bad]}")
+            return 1
+        print(f"all cases within {args.max_ratio:.1f}x of the sync clock")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

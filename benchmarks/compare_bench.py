@@ -1,31 +1,38 @@
-"""Gate a fresh executor-bench run against the committed baseline.
+"""Gate a fresh bench run against the committed baseline.
 
-Compares the per-case SPEEDUP ratios (``speedup_vs_sequential`` and
-``speedup_vs_no_precompute``) of two ``BENCH_executor.json`` files — ratios,
-not wall-clock, so a slower CI runner does not read as a regression.  A case
-is keyed by ``(algo, executor, epochs, precompute)``; only keys present in
-BOTH files are compared (the baseline may predate newer cases, e.g. the
-shard_map rows), and a metric regresses when
+Compares the per-case SPEEDUP ratios of two bench JSON files — ratios, not
+wall-clock, so a slower CI runner does not read as a regression.  Handles
+both artifacts with the shared ``cases`` schema:
+
+  * ``BENCH_executor.json`` — ``speedup_vs_sequential`` /
+    ``speedup_vs_no_precompute`` (executor pipeline vs references);
+  * ``BENCH_async.json`` — ``sim_speedup_vs_sync`` (simulated wall-clock
+    to target accuracy, async vs the synchronous straggler barrier).
+
+A case is keyed by ``(algo, executor, epochs, precompute, buffer_size)``;
+only keys present in BOTH files are compared (the baseline may predate
+newer cases), and a metric regresses when
 
     new_speedup < baseline_speedup * (1 - tolerance)
 
-Exit code 1 on any regression — the nightly CI job fails on it.
+Exit code 1 on any regression — the nightly CI jobs fail on it.
 
     python benchmarks/compare_bench.py BENCH_executor.json BENCH_new.json \
         --tolerance 0.20
+    python benchmarks/compare_bench.py BENCH_async.json BENCH_async_new.json
 """
 from __future__ import annotations
 
 import argparse
 import json
-import sys
 
-METRICS = ("speedup_vs_sequential", "speedup_vs_no_precompute")
+METRICS = ("speedup_vs_sequential", "speedup_vs_no_precompute",
+           "sim_speedup_vs_sync")
 
 
 def case_key(row: dict) -> tuple:
     return (row["algo"], row["executor"], row["epochs"],
-            bool(row.get("precompute")))
+            bool(row.get("precompute")), row.get("buffer_size"))
 
 
 def index_cases(payload: dict) -> dict:

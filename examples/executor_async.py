@@ -1,0 +1,79 @@
+"""Async straggler-aware rounds vs the synchronous barrier.
+
+``run_federated(..., executor="async")`` runs buffered-asynchronous rounds
+on a simulated heterogeneous system (``repro.core.systemsim``): every
+client gets a seeded compute speed, the server aggregates the B earliest
+completions with staleness-aware weights, and stale arrivals can be
+absorbed into the FedGKD teacher buffer instead of discarded.  This
+example puts a 4x straggler tail under 20% of the clients and compares
+simulated wall-clock to a fixed accuracy against the synchronous vmap
+executor (whose every round waits for the slowest sampled client):
+
+    PYTHONPATH=src python examples/executor_async.py [--rounds 12]
+"""
+import argparse
+
+from repro.configs.paper import TOY
+from repro.core import algorithms, fl_loop
+from repro.core.executor import AsyncExecutor
+from repro.core.systemsim import SpeedProfile, SystemSim, derive_rng
+from repro.data.pipeline import num_batches
+
+
+def sync_sim_clock(history, sim: SystemSim, work) -> list[float]:
+    """Cumulative synchronous wall-clock: each round ends when the slowest
+    sampled client finishes (the barrier the async path removes)."""
+    out, t = [], 0.0
+    for rec in history.records:
+        t += max(sim.duration(k, work[k]) for k in rec.sampled)
+        out.append(t)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--buffer", type=int, default=4)
+    ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    profile = SpeedProfile(kind="straggler", straggler_frac=0.2,
+                           straggler_slowdown=4.0)
+    data = fl_loop.make_federated_data(TOY, alpha=args.alpha, seed=0,
+                                       n_test=400)
+    work = [num_batches(c.n, TOY.batch_size, TOY.local_epochs)
+            for c in data.clients]
+
+    hs = fl_loop.run_federated(TOY, algorithms.make("fedgkd", buffer_m=3),
+                               data, rounds=args.rounds, seed=args.seed,
+                               executor="vmap")
+    sim = SystemSim(data.n_clients, profile, rng=derive_rng(args.seed))
+    sync_clock = sync_sim_clock(hs, sim, work)
+
+    ha = fl_loop.run_federated(
+        TOY, algorithms.make("fedgkd", buffer_m=3), data,
+        rounds=3 * args.rounds, seed=args.seed,
+        executor=AsyncExecutor(buffer_size=args.buffer, staleness="fedgkd",
+                               profile=profile))
+
+    target = hs.records[-1].test_acc
+    print(f"\nsync  ({args.rounds} rounds): acc={target:.4f} at simulated "
+          f"t={sync_clock[-1]:.0f}")
+    hit = next((r for r in ha.records if r.test_acc >= target), None)
+    if hit is None:
+        print(f"async ({len(ha.records)} aggregations): best "
+              f"acc={ha.best_acc:.4f} — target not reached, raise --rounds")
+    else:
+        print(f"async (B={args.buffer}): acc={hit.test_acc:.4f} at simulated "
+              f"t={hit.sim_time:.0f}  "
+              f"({hit.sim_time / sync_clock[-1]:.2f}x the sync clock)")
+    tele = ha.telemetry
+    print(f"staleness: mean={tele['mean_staleness']:.2f} "
+          f"max={tele['max_staleness']:.0f}; "
+          f"{tele['stale_absorbed']} stale updates absorbed into the "
+          f"teacher buffer")
+
+
+if __name__ == "__main__":
+    main()

@@ -121,6 +121,25 @@ class Algorithm:
 
         return loss
 
+    def absorb_stale(self, server: dict, uploads: list[dict],
+                     staleness: list[float], weights: list[float],
+                     model: ModelBundle | None = None,
+                     val_batch=None) -> dict:
+        """Async-aggregation hook: what to do with STALE arrivals beyond
+        (down-)weighting them in the parameter average.
+
+        Called by the buffered async server (``fl_loop``,
+        ``executor="async"`` under the ``"fedgkd"`` staleness scheme) after
+        ``server_update``, with the full aggregation buffer, each update's
+        staleness, and each update's DATA weight n_k (never the scaled
+        aggregation weight — past-cutoff updates scale to zero there,
+        which is exactly when this hook matters).  The base discards —
+        KD algorithms override to absorb stale models into the historical
+        teacher buffer, where drift-regularization wants them (stale
+        clients still distill toward recent global knowledge).
+        """
+        return server
+
     def client_finalize(self, model: ModelBundle, params: Any,
                         x: Any, y: Any, mask: Any, payload: Any) -> dict:
         """Extra uploads beyond the trained weights.
@@ -214,6 +233,22 @@ class FedGKD(Algorithm):
         server = super().server_update(server, uploads, weights, model,
                                        val_batch, n_clients)
         server["buffer"].push(server["global"])
+        return server
+
+    def absorb_stale(self, server, uploads, staleness, weights, model=None,
+                     val_batch=None):
+        """Late arrivals join the historical-teacher ensemble (Eq. 4's
+        buffer) instead of being discarded: the stale client models are
+        fused by their data weights into ONE buffer entry per aggregation
+        event, so the ``ModelBuffer`` version counter bumps exactly once
+        and the executor part-caches invalidate exactly one part."""
+        stale = [(u["params"], w) for u, s, w in
+                 zip(uploads, staleness, weights) if s > 0]
+        if not stale:
+            return server
+        fused = weighted_average([p for p, _ in stale],
+                                 [w for _, w in stale])
+        server["buffer"].push(fused)
         return server
 
 
@@ -329,6 +364,34 @@ class FedGKDVote(FedGKD):
                       n_clients=None):
         server = super().server_update(server, uploads, weights, model,
                                        val_batch, n_clients)
+        self._refresh_val_losses(server, model, val_batch)
+        return server
+
+    def absorb_stale(self, server, uploads, staleness, weights, model=None,
+                     val_batch=None):
+        """A stale-fused buffer entry needs a vote coefficient too: after
+        the FedGKD ingestion the val-loss list is recomputed so γ covers
+        the absorbed teacher (without a val batch it pads pessimistically
+        with the worst current loss, giving the stale entry the smallest
+        vote rather than a free ride)."""
+        # detect the push by version, not length: a full deque keeps its
+        # length on push (oldest entry evicted)
+        newest = server["buffer"].versions[0]
+        server = super().absorb_stale(server, uploads, staleness, weights,
+                                      model, val_batch)
+        if server["buffer"].versions[0] == newest:
+            return server           # nothing was stale, nothing was pushed
+        if model is not None and val_batch is not None:
+            self._refresh_val_losses(server, model, val_batch)
+        else:
+            # newest-first like buffer.models: the absorbed entry is the
+            # newest, priced at the worst current loss
+            worst = max(server["val_losses"], default=0.0)
+            server["val_losses"] = (
+                [worst] + list(server["val_losses"]))[:len(server["buffer"])]
+        return server
+
+    def _refresh_val_losses(self, server, model, val_batch):
         # validation loss per buffered model (paper: γ set by val performance)
         if val_batch is not None:
             vx, vy = val_batch
@@ -339,7 +402,6 @@ class FedGKDVote(FedGKD):
             server["val_losses"] = losses
         else:
             server["val_losses"] = [0.0] * len(server["buffer"])
-        return server
 
 
 # ---------------------------------------------------------------------------

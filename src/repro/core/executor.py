@@ -18,6 +18,11 @@ how the clients actually run is its business:
                          padded with fully masked phantom clients (never a
                          silent fallback; ``strict=True`` raises if the mesh
                          route cannot run at all, i.e. on a single device)
+    AsyncExecutor        buffered-asynchronous rounds over a simulated
+                         heterogeneous system (``repro.core.systemsim``):
+                         staleness-aware aggregation driven by the fl_loop
+                         async path, ready-cohort training delegated to one
+                         of the executors above (see the class docstring)
 
 All three consume identical materialized batches (one shared host-RNG draw,
 same order as the historical per-client iterator), so sequential and vmap
@@ -947,6 +952,83 @@ class ShardMapExecutor(VmapExecutor):
                            new_states)
 
 
+class AsyncExecutor:
+    """Straggler-aware buffered-asynchronous rounds.
+
+    This executor changes the ROUND STRUCTURE, not just how a cohort
+    trains: clients run on a simulated heterogeneous system
+    (``repro.core.systemsim``), dispatch local updates tagged with the
+    global version they started from, and the server aggregates a buffer
+    of ``buffer_size`` completions with pluggable staleness weighting
+    (``repro.core.server.async_aggregation_weights``).  The sampled
+    in-flight concurrency stays at the task's cohort size; every
+    aggregation consumes the B earliest completions and refills the fleet
+    with B freshly sampled idle clients.
+
+    Because the structure differs, the drive loop lives in
+    ``repro.core.fl_loop`` (version counters, async history records); this
+    class is the configuration + the READY-COHORT trainer: each dispatch
+    wave — the clients starting from the same global version — is trained
+    through an ordinary inner executor (``vmap``/``shard_map``/
+    ``sequential``), so the jitted round bodies, the teacher-precompute
+    pipeline and the device-resident slab placement are all reused
+    unchanged.  In the degenerate regime (homogeneous speeds, full buffer
+    B == cohort, zero staleness) the async loop reproduces the synchronous
+    executors' numbers to < 1e-5 — the equivalence suite pins that down.
+
+    Knobs:
+      buffer_size       aggregation buffer B (default: the cohort size —
+                        the synchronous-equivalent "full buffer")
+      staleness         "constant" | "polynomial" | "fedgkd" (the KD
+                        teacher buffer absorbs stale models, see
+                        ``Algorithm.absorb_stale``)
+      staleness_a       polynomial decay exponent (1+s)^(-a)
+      staleness_cutoff  fedgkd scheme: staleness beyond this is dropped
+                        from averaging (absorbed only); None = never drop
+      profile           ``systemsim.SpeedProfile`` for per-client speeds
+      availability      optional ``systemsim.Availability`` duty cycle
+      inner             ready-cohort executor spec or instance
+      base_step_time    virtual seconds per unit of local work
+    """
+
+    name = "async"
+
+    def __init__(self, buffer_size: Optional[int] = None,
+                 staleness: str = "polynomial", staleness_a: float = 0.5,
+                 staleness_cutoff: Optional[float] = None,
+                 profile=None, availability=None,
+                 inner: "str | ClientExecutor" = "auto",
+                 base_step_time: float = 1.0):
+        from repro.core.server import STALENESS_SCHEMES
+        if staleness not in STALENESS_SCHEMES:
+            raise ValueError(f"unknown staleness scheme {staleness!r}; "
+                             f"available: {STALENESS_SCHEMES}")
+        if isinstance(inner, str) and inner == "async":
+            raise ValueError("AsyncExecutor cannot nest itself as inner")
+        self.buffer_size = buffer_size
+        self.staleness = staleness
+        self.staleness_a = staleness_a
+        self.staleness_cutoff = staleness_cutoff
+        self.profile = profile
+        self.availability = availability
+        self.inner = inner
+        self.base_step_time = base_step_time
+
+    def resolve_inner(self, algo: Algorithm, n_sample: int,
+                      model: Optional[ModelBundle] = None) -> ClientExecutor:
+        resolved = get_executor(self.inner, algo, n_sample, model)
+        if isinstance(resolved, AsyncExecutor):
+            raise ValueError("AsyncExecutor cannot nest itself as inner")
+        return resolved
+
+    def run_round(self, ctx, global_params, payload, client_states,
+                  client_data, rng, client_ids=None) -> RoundResult:
+        raise NotImplementedError(
+            "AsyncExecutor rounds are event-driven, not cohort-at-a-time; "
+            "drive it through run_federated(..., executor=\"async\") (the "
+            "buffered-aggregation loop lives in repro.core.fl_loop)")
+
+
 # ---------------------------------------------------------------------------
 # registry / resolution
 # ---------------------------------------------------------------------------
@@ -955,6 +1037,7 @@ _EXECUTORS = {
     "sequential": SequentialExecutor,
     "vmap": VmapExecutor,
     "shard_map": ShardMapExecutor,
+    "async": AsyncExecutor,
 }
 
 

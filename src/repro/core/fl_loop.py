@@ -24,7 +24,8 @@ from repro.core import executor as executor_lib
 from repro.core.algorithms import Algorithm, FedGen
 from repro.core.distillation import accuracy, cross_entropy
 from repro.core.modelzoo import ModelBundle, make_model
-from repro.data.pipeline import FederatedData
+from repro.data.pipeline import FederatedData, num_batches as \
+    pipeline_num_batches
 from repro.optim import adam, sgd
 
 
@@ -35,6 +36,13 @@ class RoundRecord:
     test_loss: float
     mean_local_loss: float
     seconds: float
+    # -- async extensions (defaults keep synchronous records unchanged) --
+    sim_time: float = 0.0        # virtual clock at this aggregation event
+    version: int = 0             # global model version AFTER the update
+    mean_staleness: float = 0.0  # mean (version - start_version) in buffer
+    sampled: tuple = ()          # client ids aggregated this round (sync:
+    #                              the sampled cohort) — benchmarks replay
+    #                              simulated wall-clock from these
 
 
 @dataclasses.dataclass
@@ -43,6 +51,8 @@ class History:
     records: list[RoundRecord]
     final_params: Any
     local_model_acc: float = 0.0       # last sampled client's local-model acc
+    telemetry: dict = dataclasses.field(default_factory=dict)
+    #                                  # final RoundContext.telemetry snapshot
 
     @property
     def best_acc(self) -> float:
@@ -102,8 +112,12 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
     """Run T communication rounds of ``algo`` on the partitioned data.
 
     ``executor`` selects the client-execution strategy: ``"sequential"``,
-    ``"vmap"``, ``"shard_map"``, an executor instance, or ``"auto"``
-    (batched vmap whenever the algorithm supports it).  ``precompute``
+    ``"vmap"``, ``"shard_map"``, ``"async"`` (buffered straggler-aware
+    rounds on a simulated heterogeneous system — see ``_run_async`` and
+    ``executor_lib.AsyncExecutor`` for the knobs; records then carry
+    ``sim_time``/``version``/``mean_staleness``), an executor instance, or
+    ``"auto"`` (batched vmap whenever the algorithm supports it).
+    ``precompute``
     gates the round-level teacher-precompute stage (the algorithm's
     ``precompute_aux`` hook): ``"auto"`` enables it for the batched
     executors only — on the sequential reference the per-client dispatch
@@ -136,8 +150,12 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
 
     n_sample = max(1, int(round(task.participation * data.n_clients)))
     exec_ = executor_lib.get_executor(executor, algo, n_sample, model)
+    inner = None
+    if isinstance(exec_, executor_lib.AsyncExecutor):
+        inner = exec_.resolve_inner(algo, n_sample, model)
     if precompute == "auto":
-        precompute = exec_.name != "sequential"
+        effective = inner.name if inner is not None else exec_.name
+        precompute = effective != "sequential"
     ctx = executor_lib.RoundContext(
         algo=algo, model=model, opt=opt, lr=task.lr,
         batch_size=task.batch_size, epochs=task.local_epochs,
@@ -148,6 +166,14 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
     # small server-side validation split for FedGKD-VOTE coefficients
     n_val = min(256, len(data.test_y) // 4)
     val_batch = (jnp.asarray(data.test_x[:n_val]), jnp.asarray(data.test_y[:n_val]))
+
+    if inner is not None:
+        return _run_async(task, algo, data, model, server, ctx, exec_, inner,
+                          rng, jrng, seed=seed, rounds=rounds,
+                          eval_every=eval_every, verbose=verbose,
+                          round_callback=round_callback, dp=dp,
+                          n_sample=n_sample, client_states=client_states,
+                          val_batch=val_batch)
 
     records: list[RoundRecord] = []
     local_acc = 0.0
@@ -194,7 +220,9 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
         else:
             acc, loss = (records[-1].test_acc, records[-1].test_loss) if records else (0.0, 0.0)
         records.append(RoundRecord(t + 1, acc, loss,
-                                   float(np.mean(local_losses)), time.time() - t0))
+                                   float(np.mean(local_losses)),
+                                   time.time() - t0,
+                                   sampled=tuple(int(k) for k in sampled)))
         if round_callback is not None:
             round_callback(t + 1, server, model)
         if verbose:
@@ -205,7 +233,177 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
     if uploads:
         local_acc, _ = evaluate(model, uploads[-1]["params"],
                                 data.test_x, data.test_y)
-    return History(algo.name, records, server["global"], local_acc)
+    return History(algo.name, records, server["global"], local_acc,
+                   dict(ctx.telemetry))
+
+
+def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
+               model: ModelBundle, server: dict,
+               ctx: "executor_lib.RoundContext",
+               exec_: "executor_lib.AsyncExecutor",
+               inner: "executor_lib.ClientExecutor",
+               rng: np.random.Generator, jrng, *, seed: int, rounds: int,
+               eval_every: int, verbose: bool, round_callback, dp,
+               n_sample: int, client_states: dict, val_batch) -> History:
+    """Buffered-asynchronous rounds on a simulated heterogeneous system.
+
+    Event structure (one History record per AGGREGATION, i.e. per global
+    version bump):
+
+      * ``n_sample`` clients are always in flight; each dispatch WAVE
+        samples idle clients, trains them through the inner executor
+        against the CURRENT global (tagging the uploads with its version),
+        and schedules their completions on the virtual clock at
+        ``now + local_steps / speed`` (``repro.core.systemsim``);
+      * an aggregation consumes the ``B`` earliest completions, weights
+        them by data size × staleness scale
+        (``repro.core.server.async_aggregation_weights``), applies
+        ``server_update``, bumps the version, and redials ``B`` fresh
+        clients — the server never waits for the straggler tail;
+      * within a buffer, updates aggregate in DISPATCH order (arrival
+        order only decides membership): deterministic, and in the
+        degenerate homogeneous/full-buffer regime bit-compatible with the
+        synchronous executors' cohort order;
+      * under the ``"fedgkd"`` staleness scheme stale arrivals are also
+        absorbed into the KD teacher buffer (``Algorithm.absorb_stale``)
+        so their knowledge distills instead of dragging the average.
+
+    All randomness (speeds, availability phases) comes from a child
+    stream of the training seed (``systemsim.derive_rng``); the main
+    ``rng``/``jrng`` are consumed exactly like the synchronous loop
+    (sample, then materialize), which is what makes the equivalence and
+    determinism suites exact.
+    """
+    from repro.core import systemsim
+    from repro.core.server import async_aggregation_weights
+
+    b = exec_.buffer_size if exec_.buffer_size is not None else n_sample
+    if not (1 <= b <= n_sample):
+        raise ValueError(
+            f"async buffer_size must be in [1, cohort={n_sample}]: a larger "
+            f"buffer than the in-flight fleet can never fill (got {b})")
+    sim = systemsim.SystemSim(
+        data.n_clients, profile=exec_.profile,
+        availability=exec_.availability, rng=systemsim.derive_rng(seed),
+        base_step_time=exec_.base_step_time)
+
+    def client_work(n: int) -> int:
+        steps = pipeline_num_batches(n, ctx.batch_size, ctx.epochs)
+        if ctx.max_batches is not None:
+            steps = min(steps, ctx.max_batches)
+        return steps
+
+    work = [client_work(c.n) for c in data.clients]
+    idle = set(range(data.n_clients))
+    version = 0
+    stale_absorbed = 0
+    max_stale = 0.0
+    records: list[RoundRecord] = []
+    uploads: list[dict] = []
+
+    def dispatch_wave(k_count: int) -> None:
+        nonlocal jrng
+        if k_count == 0:
+            return
+        jrng, krng = jax.random.split(jrng)
+        # with a FULL idle fleet the sorted array is arange(n_clients), so
+        # this is the synchronous loop's exact rng.choice call — a seed
+        # draws the same cohorts here as in the sync loop
+        idle_arr = np.sort(np.fromiter(idle, dtype=np.int64))
+        sampled = idle_arr[rng.choice(len(idle_arr), size=k_count,
+                                      replace=False)]
+        payload = algo.round_payload(server, krng)
+        cids = [int(k) for k in sampled]
+        result = inner.run_round(
+            ctx, server["global"], payload,
+            [client_states[k] for k in cids],
+            [data.clients[k] for k in cids], rng, client_ids=cids)
+        for k, new_state in zip(cids, result.client_states):
+            client_states[k] = new_state
+        for i, k in enumerate(cids):
+            idle.discard(k)
+            sim.dispatch(k, work[k], tag={
+                "upload": result.uploads[i], "weight": result.weights[i],
+                "loss": result.local_losses[i], "version": version})
+
+    dispatch_wave(n_sample)
+    for t in range(rounds):
+        t0 = time.time()
+        completions = sim.pop_batch(b)
+        # canonical aggregation order: dispatch sequence (see docstring)
+        completions.sort(key=lambda c: c.seq)
+        staleness = [version - c.tag["version"] for c in completions]
+        max_stale = max(max_stale, float(max(staleness)))
+        agg_uploads = [c.tag["upload"] for c in completions]
+        data_weights = [c.tag["weight"] for c in completions]
+        weights = async_aggregation_weights(
+            data_weights, staleness, exec_.staleness, a=exec_.staleness_a,
+            cutoff=exec_.staleness_cutoff, normalize=False)
+        local_losses = [c.tag["loss"] for c in completions]
+        if verbose and t == 0:
+            tele = ctx.telemetry
+            print(f"[{algo.name}] executor route: async/"
+                  f"{tele.get('route', inner.name)} (buffer B={b}, "
+                  f"staleness={exec_.staleness}, "
+                  f"profile={sim.profile.kind})")
+
+        uploads = agg_uploads
+        if dp is not None:
+            from repro.core import privacy
+            uploads = privacy.privatize_uploads(uploads, server["global"],
+                                                dp, t)
+        server = algo.server_update(server, uploads, weights, model,
+                                    val_batch, n_clients=data.n_clients)
+        if dp is not None:
+            from repro.core import privacy
+            server["global"] = privacy.noise_aggregate(server["global"], dp,
+                                                       len(uploads), t)
+        if exec_.staleness == "fedgkd":
+            n_stale = sum(1 for s in staleness if s > 0)
+            if n_stale:
+                stale_absorbed += n_stale
+                server = algo.absorb_stale(server, uploads, staleness,
+                                           data_weights, model=model,
+                                           val_batch=val_batch)
+        version += 1
+        for c in completions:
+            idle.add(c.client)
+
+        if (t + 1) % eval_every == 0 or t == rounds - 1:
+            acc, loss = evaluate(model, server["global"], data.test_x,
+                                 data.test_y)
+        else:
+            acc, loss = ((records[-1].test_acc, records[-1].test_loss)
+                         if records else (0.0, 0.0))
+        records.append(RoundRecord(
+            t + 1, acc, loss, float(np.mean(local_losses)),
+            time.time() - t0, sim_time=sim.now, version=version,
+            mean_staleness=float(np.mean(staleness)),
+            sampled=tuple(c.client for c in completions)))
+        if round_callback is not None:
+            round_callback(t + 1, server, model)
+        if verbose:
+            print(f"[{algo.name}] agg {t+1:3d}/{rounds} v{version} "
+                  f"acc={acc:.4f} loss={loss:.4f} "
+                  f"local={np.mean(local_losses):.4f} "
+                  f"sim_t={sim.now:.1f} stale={np.mean(staleness):.2f}")
+        if t < rounds - 1:
+            dispatch_wave(b)
+
+    ctx.telemetry.update(
+        route="async", inner_route=ctx.telemetry.get("route", inner.name),
+        buffer_size=b, staleness_scheme=exec_.staleness,
+        aggregations=rounds, final_version=version,
+        stale_absorbed=stale_absorbed,
+        mean_staleness=float(np.mean([r.mean_staleness for r in records])),
+        max_staleness=max_stale, sim=sim.stats())
+
+    local_acc = 0.0
+    if uploads:
+        local_acc, _ = evaluate(model, uploads[-1]["params"],
+                                data.test_x, data.test_y)
+    return History(algo.name, records, server["global"], local_acc,
+                   dict(ctx.telemetry))
 
 
 def make_federated_data(task: PaperTask, alpha: float, seed: int = 0,

@@ -3,16 +3,38 @@
 ``ModelBuffer`` is the M-deep FIFO of historical global weights (Alg. 1,
 line 11).  For FedGKD the server ships only the fused mean (communication =
 2× FedAvg, == 1× when M == 1); FedGKD-VOTE ships all M entries.
+
+Staleness-aware aggregation (the async path)
+--------------------------------------------
+The buffered-asynchronous server (``fl_loop`` with ``executor="async"``)
+aggregates a buffer of B client updates, each tagged with the global
+version it STARTED from; ``staleness = current_version - start_version``.
+``async_aggregation_weights`` combines the FedAvg data weights with a
+pluggable per-update staleness multiplier (``staleness_scale``):
+
+    constant      stale updates count like fresh ones
+    polynomial    (1 + s)^(-a) — FedAsync-style polynomial decay
+    fedgkd        polynomial decay, but updates past ``cutoff`` are
+                  DROPPED from parameter averaging (weight 0) and instead
+                  absorbed into the KD teacher buffer via the algorithm's
+                  ``absorb_stale`` hook — stale knowledge distills rather
+                  than drags the global model backwards
+
+Invariants the property suite pins down: scales are non-negative, the
+normalized weights sum to 1, and the polynomial scale is monotone
+non-increasing in staleness.
 """
 from __future__ import annotations
 
 import collections
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.distillation import ensemble_average
+
+STALENESS_SCHEMES = ("constant", "polynomial", "fedgkd")
 
 
 def weighted_average(params_list: list[Any], weights: list[float]) -> Any:
@@ -27,6 +49,51 @@ def weighted_average(params_list: list[Any], weights: list[float]) -> Any:
         return acc.astype(leaves[0].dtype)
 
     return jax.tree_util.tree_map(agg, *params_list)
+
+
+def staleness_scale(staleness: float, scheme: str = "polynomial", *,
+                    a: float = 0.5, cutoff: "float | None" = None) -> float:
+    """Per-update multiplier for an update that started ``staleness``
+    versions ago.  Non-negative; ``polynomial`` is monotone non-increasing
+    in staleness; ``constant`` is exactly 1.0 (so the async path with zero
+    staleness reproduces the synchronous weights bit-for-bit)."""
+    if scheme not in STALENESS_SCHEMES:
+        raise ValueError(f"unknown staleness scheme {scheme!r}; "
+                         f"available: {STALENESS_SCHEMES}")
+    s = float(staleness)
+    assert s >= 0.0, f"negative staleness {s}"
+    if scheme == "constant":
+        return 1.0
+    if scheme == "fedgkd" and cutoff is not None and s > cutoff:
+        return 0.0
+    return (1.0 + s) ** (-a)
+
+
+def async_aggregation_weights(data_weights: Sequence[float],
+                              staleness: Sequence[float],
+                              scheme: str = "polynomial", *,
+                              a: float = 0.5,
+                              cutoff: "float | None" = None,
+                              normalize: bool = True) -> list[float]:
+    """Combine FedAvg data weights with staleness multipliers.
+
+    With ``normalize=True`` the result is a distribution (non-negative,
+    sums to 1).  ``normalize=False`` returns the raw products for callers
+    that feed ``weighted_average`` (which normalizes internally) — under
+    the constant scheme the raw products ARE the synchronous n_k weights.
+    If every update scaled to zero (an all-stale buffer past the fedgkd
+    cutoff) the data weights are used unscaled: the aggregation must stay
+    well-defined, and the absorb path has already captured the knowledge.
+    """
+    assert len(data_weights) == len(staleness)
+    raw = [float(n) * staleness_scale(s, scheme, a=a, cutoff=cutoff)
+           for n, s in zip(data_weights, staleness)]
+    if sum(raw) <= 0.0:
+        raw = [float(n) for n in data_weights]
+    if not normalize:
+        return raw
+    total = sum(raw)
+    return [r / total for r in raw]
 
 
 class ModelBuffer:

@@ -1,0 +1,205 @@
+"""Simulated system heterogeneity: the virtual clock behind async rounds.
+
+The source paper attributes client drift to local updates running "through
+heterogeneous systems", but a single-host simulation has no heterogeneous
+systems — this module supplies them, deterministically.  A ``SystemSim``
+owns
+
+  * per-client COMPUTE SPEEDS drawn once from a configurable
+    ``SpeedProfile`` (homogeneous / straggler tail / lognormal / uniform),
+  * optional AVAILABILITY windows (a client dispatched while off-duty
+    starts when its next window opens),
+  * a VIRTUAL CLOCK plus an event heap of in-flight client completions.
+
+``dispatch(client, work, tag)`` schedules a completion at
+``start + work/speed`` and ``pop()`` consumes the earliest completion,
+advancing the clock.  Two invariants the property tests pin down:
+
+  * the clock NEVER goes backwards: completions pop in time order and a
+    freshly dispatched completion can never land before the current clock
+    (durations are strictly positive);
+  * with equal speeds and equal work the order clients complete in is the
+    dispatch order, whatever buffer size the consumer drains with —
+    simultaneous completions tie-break on a monotone dispatch sequence
+    number, never on hash order or wall time.
+
+Determinism: every random draw (speeds, availability phases) comes from
+the ``numpy.random.Generator`` handed in at construction — there is no
+``random`` module, no wall clock, no global state.  ``derive_rng(seed)``
+builds the canonical generator for a training seed (a child stream of the
+run's SeedSequence, so the simulation does not perturb the batch/sampling
+draws of the equivalent synchronous run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, NamedTuple, Optional
+
+import numpy as np
+
+# child-stream key for derive_rng: the sim draws from a stream SPAWNED off
+# the training seed so async and sync runs consume the main rng identically
+_SIM_STREAM_KEY = 0x5E1F
+
+_PROFILE_KINDS = ("homogeneous", "straggler", "lognormal", "uniform")
+
+
+def derive_rng(seed: int) -> np.random.Generator:
+    """The canonical simulation generator for a training seed."""
+    return np.random.default_rng(np.random.SeedSequence(
+        entropy=seed, spawn_key=(_SIM_STREAM_KEY,)))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeedProfile:
+    """How per-client compute speeds are drawn (speed 1.0 == baseline;
+    duration of ``work`` units is ``work / speed``).
+
+        homogeneous   every client at speed 1.0 (the equivalence regime)
+        straggler     a ``straggler_frac`` tail runs ``straggler_slowdown``×
+                      slower (the paper-style systems-heterogeneity case)
+        lognormal     speed ~ LogNormal(0, sigma) — smooth heavy tail
+        uniform       speed ~ U[lo, hi]
+    """
+    kind: str = "homogeneous"
+    straggler_frac: float = 0.2
+    straggler_slowdown: float = 4.0
+    sigma: float = 0.5
+    lo: float = 0.5
+    hi: float = 2.0
+
+    def __post_init__(self):
+        if self.kind not in _PROFILE_KINDS:
+            raise ValueError(f"unknown speed profile {self.kind!r}; "
+                             f"available: {_PROFILE_KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Availability:
+    """Periodic duty-cycle availability: client ``k`` is reachable during
+    ``[n*period + phase_k, n*period + phase_k + duty*period)`` for every
+    integer ``n``.  Phases are drawn per client from the sim generator so
+    windows are staggered; ``duty=1`` disables the model."""
+    period: float = 64.0
+    duty: float = 1.0
+
+    def __post_init__(self):
+        if not (0.0 < self.duty <= 1.0):
+            raise ValueError(f"duty must be in (0, 1], got {self.duty}")
+        if self.period <= 0.0:
+            raise ValueError(f"period must be positive, got {self.period}")
+
+
+def draw_speeds(profile: SpeedProfile, n_clients: int,
+                rng: np.random.Generator) -> np.ndarray:
+    """(K,) float64 per-client speeds, strictly positive."""
+    if profile.kind == "homogeneous":
+        return np.ones(n_clients)
+    if profile.kind == "straggler":
+        speeds = np.ones(n_clients)
+        slow = rng.random(n_clients) < profile.straggler_frac
+        speeds[slow] = 1.0 / profile.straggler_slowdown
+        return speeds
+    if profile.kind == "lognormal":
+        return np.exp(rng.normal(0.0, profile.sigma, n_clients))
+    # uniform
+    return rng.uniform(profile.lo, profile.hi, n_clients)
+
+
+class Completion(NamedTuple):
+    """One client finishing its local work (popped from the event heap)."""
+    time: float     # virtual completion time
+    seq: int        # monotone dispatch sequence number (the tie-break)
+    client: int
+    tag: Any        # caller payload (the async loop stores the update here)
+
+
+class SystemSim:
+    """Virtual clock + in-flight completion heap over K simulated clients.
+
+    ``now`` only moves forward (``pop`` advances it to the completion's
+    time); dispatches happen AT ``now`` and complete strictly later.  All
+    counters (dispatches, availability delays, total waiting) are plain
+    ints/floats derived from seeded draws — two sims built from the same
+    generator state replay bit-identically.
+    """
+
+    def __init__(self, n_clients: int, profile: Optional[SpeedProfile] = None,
+                 availability: Optional[Availability] = None,
+                 rng: Optional[np.random.Generator] = None,
+                 base_step_time: float = 1.0):
+        assert base_step_time > 0.0
+        rng = rng if rng is not None else np.random.default_rng(0)
+        self.profile = profile if profile is not None else SpeedProfile()
+        self.speeds = draw_speeds(self.profile, n_clients, rng)
+        assert np.all(self.speeds > 0.0)
+        self.availability = availability
+        self.phases = (rng.random(n_clients) * availability.period
+                       if availability is not None else None)
+        self.base_step_time = float(base_step_time)
+        self.now = 0.0
+        self._heap: list[tuple[float, int, int, Any]] = []
+        self._seq = 0
+        self.dispatches = 0
+        self.availability_delays = 0
+        self.total_wait = 0.0
+
+    # -- geometry ---------------------------------------------------------
+    def duration(self, client: int, work: float) -> float:
+        """Virtual seconds for ``work`` units on ``client``."""
+        return self.base_step_time * float(work) / float(self.speeds[client])
+
+    def next_available(self, client: int, t: float) -> float:
+        """Earliest time >= t the client's availability window is open."""
+        av = self.availability
+        if av is None or av.duty >= 1.0:
+            return t
+        local = (t - self.phases[client]) % av.period
+        if local < av.duty * av.period:
+            return t
+        return t + (av.period - local)
+
+    # -- event machinery --------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return len(self._heap)
+
+    def dispatch(self, client: int, work: float, tag: Any = None) -> float:
+        """Start ``work`` units on ``client`` at the current clock (or its
+        next availability window); returns the scheduled completion time."""
+        start = self.next_available(client, self.now)
+        if start > self.now:
+            self.availability_delays += 1
+            self.total_wait += start - self.now
+        completion = start + self.duration(client, work)
+        heapq.heappush(self._heap, (completion, self._seq, client, tag))
+        self._seq += 1
+        self.dispatches += 1
+        return completion
+
+    def pop(self) -> Completion:
+        """Consume the earliest completion, advancing the clock (monotone:
+        remaining heap entries are all >= the popped time)."""
+        if not self._heap:
+            raise RuntimeError("SystemSim.pop: no in-flight clients")
+        t, seq, client, tag = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        return Completion(t, seq, client, tag)
+
+    def pop_batch(self, b: int) -> list[Completion]:
+        """The next ``b`` completions in time order (the aggregation
+        buffer fill of the async server)."""
+        if b > len(self._heap):
+            raise RuntimeError(
+                f"SystemSim.pop_batch({b}): only {len(self._heap)} in flight")
+        return [self.pop() for _ in range(b)]
+
+    def stats(self) -> dict:
+        return {"sim_time": self.now, "dispatches": self.dispatches,
+                "in_flight": self.in_flight,
+                "availability_delays": self.availability_delays,
+                "total_wait": self.total_wait,
+                "speed_min": float(self.speeds.min()),
+                "speed_max": float(self.speeds.max()),
+                "speed_mean": float(self.speeds.mean())}

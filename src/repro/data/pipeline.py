@@ -132,6 +132,9 @@ class ClientSlabStore:
         self.device_moves = 0
         self.hits = 0
         self.evictions = 0
+        # high-water mark of resident slabs: under churning async cohorts
+        # this is the device-memory bound the cap actually enforced
+        self.peak_resident = 0
 
     def get(self, cid, data: ClientData, device) -> dict:
         import jax
@@ -159,6 +162,7 @@ class ClientSlabStore:
                    and len(self.slabs) > self.max_resident):
                 self.slabs.popitem(last=False)
                 self.evictions += 1
+            self.peak_resident = max(self.peak_resident, len(self.slabs))
         self.host_transfers += 1
         return entry
 
@@ -166,4 +170,5 @@ class ClientSlabStore:
         return {"resident_clients": len(self.slabs),
                 "host_transfers": self.host_transfers,
                 "device_moves": self.device_moves, "hits": self.hits,
-                "evictions": self.evictions}
+                "evictions": self.evictions,
+                "peak_resident": self.peak_resident}

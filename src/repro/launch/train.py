@@ -63,10 +63,39 @@ def eval_ppl(params, cfg, tokens: jnp.ndarray) -> float:
 # serial FL round
 # ---------------------------------------------------------------------------
 
+def make_round_clock(n_clients: int, *, straggler_frac: float,
+                     straggler_slowdown: float, seed: int):
+    """Optional simulated system-heterogeneity clock for the LM drivers.
+
+    Returns ``None`` (no simulation) or a callable mapping per-round work
+    (batches per client) to the SYNCHRONOUS barrier cost — the virtual
+    seconds until the slowest client of the round finishes
+    (``repro.core.systemsim`` speeds, straggler profile).  The drivers
+    attach it as ``sim_seconds`` per round so a straggler tail's cost on
+    the round barrier is measurable before real heterogeneous hardware
+    exists; the single-host FL loop's ``executor="async"`` path is the
+    remedy those numbers motivate.
+    """
+    if straggler_frac <= 0.0:
+        return None
+    from repro.core import systemsim
+    sim = systemsim.SystemSim(
+        n_clients,
+        systemsim.SpeedProfile(kind="straggler",
+                               straggler_frac=straggler_frac,
+                               straggler_slowdown=straggler_slowdown),
+        rng=systemsim.derive_rng(seed))
+    return lambda work: max(sim.duration(k, work) for k in range(n_clients))
+
+
 def run_serial(cfg, *, rounds: int, n_clients: int, batches_per_round: int,
                batch: int, seq: int, algo: str = "fedgkd", gamma: float = 0.2,
                buffer_m: int = 3, lr: float = 0.1, seed: int = 0,
-               verbose: bool = True) -> dict:
+               verbose: bool = True, straggler_frac: float = 0.0,
+               straggler_slowdown: float = 4.0) -> dict:
+    round_clock = make_round_clock(n_clients, straggler_frac=straggler_frac,
+                                   straggler_slowdown=straggler_slowdown,
+                                   seed=seed)
     opt = sgd(momentum=0.9)
     kd_mode = "teacher" if algo == "fedgkd" else "none"
     step = jax.jit(steps_lib.make_train_step(cfg, opt, kd_mode=kd_mode,
@@ -95,9 +124,11 @@ def run_serial(cfg, *, rounds: int, n_clients: int, batches_per_round: int,
         global_params = weighted_average(new_params, weights)
         buf.push(global_params)
         ppl = eval_ppl(global_params, cfg, eval_toks)
-        history.append({"round": t + 1, "ppl": ppl,
-                        "loss": float(metrics["loss"]),
-                        "seconds": time.time() - t0})
+        rec = {"round": t + 1, "ppl": ppl, "loss": float(metrics["loss"]),
+               "seconds": time.time() - t0}
+        if round_clock is not None:
+            rec["sim_seconds"] = round_clock(batches_per_round)
+        history.append(rec)
         if verbose:
             print(f"[{algo}] round {t+1}/{rounds} ppl={ppl:.2f} "
                   f"loss={float(metrics['loss']):.4f} "
@@ -159,9 +190,13 @@ def make_parallel_round(cfg, mesh: Mesh, *, gamma: float = 0.2,
 def run_sharded(cfg, *, rounds: int, batches_per_round: int, batch: int,
                 seq: int, gamma: float = 0.2, buffer_m: int = 3,
                 lr: float = 0.1, seed: int = 0, algo: str = "fedgkd",
-                verbose: bool = True) -> dict:
+                verbose: bool = True, straggler_frac: float = 0.0,
+                straggler_slowdown: float = 4.0) -> dict:
     """Clients == host devices; one shard_map program per round."""
     n_clients = len(jax.devices())
+    round_clock = make_round_clock(n_clients, straggler_frac=straggler_frac,
+                                   straggler_slowdown=straggler_slowdown,
+                                   seed=seed)
     mesh = jax.make_mesh((n_clients,), ("clients",))
     kd_mode = "teacher" if algo == "fedgkd" else "none"
     round_fn = make_parallel_round(cfg, mesh, gamma=gamma, lr=lr,
@@ -186,8 +221,11 @@ def run_sharded(cfg, *, rounds: int, batches_per_round: int, batch: int,
         global_params = jax.tree_util.tree_map(lambda x: x[0], stacked)
         buf.push(global_params)
         ppl = eval_ppl(global_params, cfg, eval_toks)
-        history.append({"round": t + 1, "ppl": ppl, "loss": float(loss[0]),
-                        "seconds": time.time() - t0})
+        rec = {"round": t + 1, "ppl": ppl, "loss": float(loss[0]),
+               "seconds": time.time() - t0}
+        if round_clock is not None:
+            rec["sim_seconds"] = round_clock(batches_per_round)
+        history.append(rec)
         if verbose:
             print(f"[{algo}/sharded] round {t+1}/{rounds} ppl={ppl:.2f} "
                   f"loss={float(loss[0]):.4f}", flush=True)
@@ -210,17 +248,31 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--sharded", action="store_true",
                     help="clients-in-parallel via shard_map")
+    ap.add_argument("--straggler-frac", type=float, default=0.0,
+                    help="simulate a straggler tail: this fraction of "
+                         "clients runs --straggler-slowdown x slower and "
+                         "each round reports sim_seconds (the synchronous "
+                         "barrier cost on the virtual clock)")
+    ap.add_argument("--straggler-slowdown", type=float, default=4.0)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     kw = dict(rounds=args.rounds, batches_per_round=args.batches_per_round,
               batch=args.batch, seq=args.seq, gamma=args.gamma,
-              buffer_m=args.buffer_m, lr=args.lr, algo=args.algo)
+              buffer_m=args.buffer_m, lr=args.lr, algo=args.algo,
+              straggler_frac=args.straggler_frac,
+              straggler_slowdown=args.straggler_slowdown)
     if args.sharded:
         out = run_sharded(cfg, **kw)
     else:
         out = run_serial(cfg, n_clients=args.clients, **kw)
     print("final ppl:", out["history"][-1]["ppl"])
+    if args.straggler_frac > 0:
+        total = sum(r["sim_seconds"] for r in out["history"])
+        print(f"simulated round-barrier time: {total:.1f} virtual s over "
+              f"{args.rounds} rounds (straggler tail "
+              f"{args.straggler_frac:.0%} at "
+              f"{args.straggler_slowdown:g}x slowdown)")
     return 0
 
 

@@ -35,3 +35,15 @@ def rand_shape(rng, ndim_lo=1, ndim_hi=3, dim_lo=1, dim_hi=64):
 
 def rand_logits(rng, shape, scale=4.0):
     return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# -- async-round generators (staleness weighting / virtual-clock sims) ------
+
+def rand_data_weights(rng, n, lo=1.0, hi=500.0):
+    """Per-client example counts: strictly positive floats."""
+    return rng.uniform(lo, hi, n)
+
+
+def rand_staleness(rng, n, hi=8):
+    """Non-negative integer staleness values (version lag of an update)."""
+    return rng.integers(0, hi + 1, n).astype(float)

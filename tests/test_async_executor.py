@@ -1,0 +1,495 @@
+"""Async straggler-aware rounds: systemsim virtual clock, staleness-aware
+buffered aggregation, determinism, and cache behaviour under churning
+async cohorts.
+
+The synchronous-regime EQUIVALENCE suite (async vs sequential/vmap/
+shard_map, including the K=6-on-8-devices multidevice gate) lives with
+its siblings in ``tests/test_executor.py``; this file covers everything
+the async structure adds on top:
+
+  * property tests (``proptest.sweep``): staleness weights are
+    non-negative, normalize to 1, polynomial decay is monotone
+    non-increasing; the virtual clock never goes backwards; completion
+    ordering is invariant to the consumer's buffer size when clients are
+    equally fast;
+  * bit-identical determinism of two same-seed async runs (histories AND
+    telemetry — speeds and the event queue come from the seeded PRNG
+    plumbing, never ``random``/wall time);
+  * cache-under-churn: ``ClientSlabStore`` counters/LRU under async-style
+    cohort churn, and the FedGKD-VOTE ``(client, version)`` part cache
+    when stale arrivals bump ``ModelBuffer`` versions mid-buffer;
+  * the ``--runslow`` straggler-profile sweep the nightly job runs.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from proptest import rand_data_weights, rand_staleness, sweep
+from repro.configs.paper import TOY
+from repro.core import algorithms, executor as ex, fl_loop
+from repro.core.server import (STALENESS_SCHEMES, async_aggregation_weights,
+                               staleness_scale)
+from repro.core.systemsim import (Availability, SpeedProfile, SystemSim,
+                                  derive_rng, draw_speeds)
+from repro.data.pipeline import ClientData, ClientSlabStore, FederatedData
+from repro.data.synthetic import SyntheticTabularTask
+
+RAGGED_SIZES = (20, 45, 64, 100, 130, 150)
+
+STRAGGLER = SpeedProfile(kind="straggler", straggler_frac=0.25,
+                         straggler_slowdown=4.0)
+
+
+def _ragged_data(task, sizes=RAGGED_SIZES):
+    gen = SyntheticTabularTask(task.num_classes, dim=task.feat_dim, seed=0)
+    clients = [ClientData(*gen.generate(n, seed=100 + i))
+               for i, n in enumerate(sizes)]
+    test_x, test_y = gen.generate(200, seed=999)
+    return FederatedData(clients, test_x, test_y,
+                         np.zeros((len(sizes), task.num_classes)))
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    task = dataclasses.replace(TOY, n_clients=len(RAGGED_SIZES),
+                               participation=1.0, batch_size=64, rounds=2,
+                               local_epochs=2)
+    return task, _ragged_data(task)
+
+
+# --- staleness weighting properties -----------------------------------------
+
+@sweep(20)
+def test_prop_weights_nonneg_and_normalized(rng):
+    n = int(rng.integers(1, 12))
+    ws = rand_data_weights(rng, n)
+    st = rand_staleness(rng, n)
+    scheme = STALENESS_SCHEMES[int(rng.integers(len(STALENESS_SCHEMES)))]
+    a = float(rng.uniform(0.0, 3.0))
+    cutoff = float(rng.integers(0, 6)) if rng.random() < 0.5 else None
+    out = async_aggregation_weights(ws, st, scheme, a=a, cutoff=cutoff)
+    assert all(w >= 0.0 for w in out), (scheme, out)
+    assert abs(sum(out) - 1.0) < 1e-9, (scheme, sum(out))
+    raw = async_aggregation_weights(ws, st, scheme, a=a, cutoff=cutoff,
+                                    normalize=False)
+    assert all(w >= 0.0 for w in raw)
+    if scheme == "constant":            # raw products ARE the sync weights
+        np.testing.assert_allclose(raw, ws)
+
+
+@sweep(20)
+def test_prop_polynomial_monotone_in_staleness(rng):
+    a = float(rng.uniform(0.0, 3.0))
+    st = np.sort(rand_staleness(rng, 16))
+    scales = [staleness_scale(s, "polynomial", a=a) for s in st]
+    assert all(x >= 0.0 for x in scales)
+    assert all(x >= y - 1e-12 for x, y in zip(scales, scales[1:])), \
+        "polynomial staleness scale must be monotone non-increasing"
+    assert staleness_scale(0.0, "polynomial", a=a) == 1.0
+
+
+def test_fedgkd_scheme_cutoff_and_fallback():
+    # beyond the cutoff an update is dropped from averaging ...
+    assert staleness_scale(3, "fedgkd", cutoff=2) == 0.0
+    assert staleness_scale(2, "fedgkd", cutoff=2) > 0.0
+    # ... and an ALL-stale buffer falls back to plain data weights
+    out = async_aggregation_weights([10.0, 30.0], [5, 9], "fedgkd", cutoff=2)
+    np.testing.assert_allclose(out, [0.25, 0.75])
+    with pytest.raises(ValueError):
+        staleness_scale(1, "nope")
+
+
+# --- virtual-clock properties -----------------------------------------------
+
+@sweep(15)
+def test_prop_clock_never_goes_backwards(rng):
+    kind = ("straggler", "lognormal", "uniform")[int(rng.integers(3))]
+    n = int(rng.integers(2, 10))
+    av = (Availability(period=float(rng.uniform(4, 32)),
+                       duty=float(rng.uniform(0.3, 1.0)))
+          if rng.random() < 0.5 else None)
+    sim = SystemSim(n, SpeedProfile(kind=kind), availability=av, rng=rng)
+    for c in range(n):
+        sim.dispatch(c, work=float(rng.uniform(0.5, 8.0)))
+    last_now, last_t = sim.now, 0.0
+    for _ in range(40):
+        comp = sim.pop()
+        assert sim.now >= last_now, "virtual clock went backwards"
+        assert comp.time >= last_t, "completions popped out of time order"
+        last_now, last_t = sim.now, comp.time
+        sim.dispatch(comp.client, work=float(rng.uniform(0.5, 8.0)))
+    assert sim.dispatches == n + 40
+
+
+@sweep(10)
+def test_prop_event_order_invariant_to_buffer_size(rng):
+    """Equally fast clients with equal work complete in dispatch order —
+    whatever buffer size the aggregation loop drains with."""
+    n = int(rng.integers(3, 9))
+    total = 6 * n
+    seed = int(rng.integers(2 ** 31))
+
+    def drain_order(b):
+        sim = SystemSim(n, SpeedProfile(kind="homogeneous"),
+                        rng=np.random.default_rng(seed))
+        for c in range(n):
+            sim.dispatch(c, work=3.0)
+        order = []
+        while len(order) < total:
+            batch = sim.pop_batch(min(b, sim.in_flight))
+            order.extend(c.client for c in batch)
+            for c in batch:
+                sim.dispatch(c.client, work=3.0)
+        return order[:total]
+
+    ref = drain_order(1)
+    for b in (2, 3, n):
+        assert drain_order(b) == ref, f"buffer size {b} changed event order"
+
+
+def test_draw_speeds_profiles():
+    rng = np.random.default_rng(0)
+    assert (draw_speeds(SpeedProfile(), 8, rng) == 1.0).all()
+    s = draw_speeds(SpeedProfile(kind="straggler", straggler_frac=0.5,
+                                 straggler_slowdown=4.0), 400, rng)
+    assert set(np.unique(s)) == {0.25, 1.0}
+    assert 0.3 < (s == 0.25).mean() < 0.7
+    s = draw_speeds(SpeedProfile(kind="uniform", lo=0.5, hi=2.0), 100, rng)
+    assert (s >= 0.5).all() and (s <= 2.0).all()
+    assert (draw_speeds(SpeedProfile(kind="lognormal"), 100, rng) > 0).all()
+    with pytest.raises(ValueError):
+        SpeedProfile(kind="warp")
+
+
+def test_availability_windows():
+    av = Availability(period=10.0, duty=0.5)
+    sim = SystemSim(2, SpeedProfile(), availability=av,
+                    rng=np.random.default_rng(3))
+    sim.phases = np.array([0.0, 5.0])   # pin phases: windows [0,5), [5,10)
+    assert sim.next_available(0, 2.0) == 2.0        # inside the window
+    assert sim.next_available(0, 7.0) == 10.0       # wait for next period
+    assert sim.next_available(1, 2.0) == 5.0
+    sim.now = 7.0
+    sim.dispatch(0, work=1.0)
+    assert sim.availability_delays == 1 and sim.total_wait == 3.0
+    with pytest.raises(ValueError):
+        Availability(duty=0.0)
+    with pytest.raises(ValueError):
+        Availability(period=-1.0)
+
+
+def test_pop_empty_and_overdrain_raise():
+    sim = SystemSim(2, SpeedProfile(), rng=np.random.default_rng(0))
+    with pytest.raises(RuntimeError):
+        sim.pop()
+    sim.dispatch(0, work=1.0)
+    with pytest.raises(RuntimeError):
+        sim.pop_batch(2)
+
+
+def test_derive_rng_is_stable_and_independent():
+    a, b = derive_rng(7), derive_rng(7)
+    np.testing.assert_array_equal(a.random(8), b.random(8))
+    # a child stream, not the training stream itself
+    assert not np.allclose(derive_rng(7).random(8),
+                           np.random.default_rng(7).random(8))
+
+
+# --- determinism -------------------------------------------------------------
+
+def _async_exec():
+    return ex.AsyncExecutor(buffer_size=3, staleness="fedgkd",
+                            staleness_a=0.5, staleness_cutoff=4,
+                            profile=STRAGGLER,
+                            availability=Availability(period=24.0, duty=0.8))
+
+
+def test_async_runs_are_bit_identical(tiny_setup):
+    """Same seed => bit-identical histories and telemetry: every source of
+    randomness (speeds, availability phases, event queue, sampling, batch
+    draws) threads through the seeded PRNG plumbing."""
+    task, data = tiny_setup
+    runs = [fl_loop.run_federated(task, algorithms.make("fedgkd-vote",
+                                                        buffer_m=3),
+                                  data, seed=11, rounds=5,
+                                  executor=_async_exec())
+            for _ in range(2)]
+    ra, rb = runs[0].records, runs[1].records
+    assert len(ra) == len(rb) == 5
+    for a, b in zip(ra, rb):
+        for field in ("round", "test_acc", "test_loss", "mean_local_loss",
+                      "sim_time", "version", "mean_staleness", "sampled"):
+            assert getattr(a, field) == getattr(b, field), field
+    assert runs[0].telemetry == runs[1].telemetry
+    assert runs[0].local_model_acc == runs[1].local_model_acc
+    # and a different seed actually changes the trajectory
+    other = fl_loop.run_federated(task, algorithms.make("fedgkd-vote",
+                                                        buffer_m=3),
+                                  data, seed=12, rounds=5,
+                                  executor=_async_exec())
+    assert any(a.sampled != o.sampled or a.test_acc != o.test_acc
+               for a, o in zip(ra, other.records))
+
+
+def test_async_telemetry_and_records(tiny_setup):
+    task, data = tiny_setup
+    h = fl_loop.run_federated(task, algorithms.make("fedgkd"), data, seed=3,
+                              rounds=4,
+                              executor=ex.AsyncExecutor(buffer_size=2,
+                                                        profile=STRAGGLER))
+    t = h.telemetry
+    assert t["route"] == "async" and t["inner_route"] == "vmap"
+    assert t["buffer_size"] == 2
+    assert t["staleness_scheme"] == "polynomial"
+    assert t["aggregations"] == 4 and t["final_version"] == 4
+    assert t["sim"]["dispatches"] == 6 + 3 * 2   # initial fleet + 3 refills
+    assert t["sim"]["in_flight"] == 6 - 2        # final refill is skipped
+    sim_times = [r.sim_time for r in h.records]
+    assert sim_times == sorted(sim_times) and sim_times[0] > 0.0
+    assert [r.version for r in h.records] == [1, 2, 3, 4]
+    assert all(len(r.sampled) == 2 for r in h.records)
+    assert all(r.mean_staleness >= 0.0 for r in h.records)
+
+
+def test_async_buffer_size_validation(tiny_setup):
+    task, data = tiny_setup
+    for bad in (0, 7):      # cohort is 6: a bigger buffer can never fill
+        with pytest.raises(ValueError, match="buffer_size"):
+            fl_loop.run_federated(task, algorithms.make("fedavg"), data,
+                                  seed=0, rounds=1,
+                                  executor=ex.AsyncExecutor(buffer_size=bad))
+
+
+def test_sync_records_carry_sampled_cohort(tiny_setup):
+    task, data = tiny_setup
+    h = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                              rounds=2, executor="vmap")
+    for r in h.records:
+        assert len(r.sampled) == len(data.clients)
+        assert set(r.sampled) <= set(range(data.n_clients))
+        assert r.sim_time == 0.0 and r.version == 0     # sync defaults
+
+
+# --- stale absorption into the KD teacher buffer ----------------------------
+
+def test_absorb_stale_fuses_one_buffer_entry(tiny_setup):
+    task, data = tiny_setup
+    from repro.core.modelzoo import make_model
+    algo = algorithms.make("fedgkd", buffer_m=3)
+    model = make_model(task)
+    gp = model.init(jax.random.PRNGKey(0))
+    server = algo.init_server(gp, model, task.num_classes)
+    v0 = list(server["buffer"].versions)
+    mk = lambda f: jax.tree_util.tree_map(lambda p: p * f, gp)
+    uploads = [{"params": mk(2.0)}, {"params": mk(4.0)}, {"params": mk(1.0)}]
+    # no stale arrivals => no push
+    server = algo.absorb_stale(server, uploads, [0, 0, 0], [1.0, 1.0, 1.0])
+    assert list(server["buffer"].versions) == v0
+    # two stale arrivals fuse (by data weight) into ONE new entry
+    server = algo.absorb_stale(server, uploads, [2, 1, 0], [1.0, 3.0, 9.0])
+    assert len(server["buffer"].versions) == len(v0) + 1
+    fused = server["buffer"].models[0]
+    want = jax.tree_util.tree_map(
+        lambda a, b: 0.25 * a + 0.75 * b, mk(2.0), mk(4.0))
+    diff = max(float(np.max(np.abs(x - y))) for x, y in zip(
+        jax.tree_util.tree_leaves(fused), jax.tree_util.tree_leaves(want)))
+    assert diff < 1e-6
+    # fedavg has no buffer: the base hook is a no-op
+    avg = algorithms.make("fedavg")
+    s2 = avg.init_server(gp, model, task.num_classes)
+    assert avg.absorb_stale(s2, uploads, [3, 0, 0], [1.0, 1.0, 1.0]) is s2
+
+
+def test_vote_absorb_keeps_val_losses_aligned(tiny_setup):
+    task, data = tiny_setup
+    from repro.core.modelzoo import make_model
+    algo = algorithms.make("fedgkd-vote", buffer_m=3)
+    model = make_model(task)
+    gp = model.init(jax.random.PRNGKey(0))
+    server = algo.init_server(gp, model, task.num_classes)
+    server["buffer"].push(gp)
+    server["val_losses"] = [0.5, 0.7]
+    uploads = [{"params": jax.tree_util.tree_map(lambda p: p * 2.0, gp)}]
+    server = algo.absorb_stale(server, uploads, [2], [1.0])
+    assert len(server["val_losses"]) == len(server["buffer"])
+    # without a val batch the absorbed teacher is priced pessimistically
+    assert server["val_losses"][0] == 0.7
+    # with model+val_batch the losses are recomputed for every entry
+    vx = np.asarray(data.test_x[:16])
+    vy = np.asarray(data.test_y[:16])
+    server = algo.absorb_stale(server, uploads, [1], [1.0], model=model,
+                               val_batch=(vx, vy))
+    assert len(server["val_losses"]) == len(server["buffer"]) == 3
+    # FULL buffer: a push evicts the oldest entry and keeps len constant —
+    # the refresh must still fire (regression: len-based push detection)
+    before = list(server["val_losses"])
+    v_newest = server["buffer"].versions[0]
+    server = algo.absorb_stale(server, uploads, [3], [1.0], model=model,
+                               val_batch=(vx, vy))
+    assert server["buffer"].versions[0] == v_newest + 1
+    assert len(server["val_losses"]) == len(server["buffer"]) == 3
+    assert server["val_losses"] != before, \
+        "full-buffer absorb must refresh the vote losses"
+    # and without stale arrivals nothing is pushed or refreshed
+    same = algo.absorb_stale(server, uploads, [0], [1.0])
+    assert same["buffer"].versions[0] == v_newest + 1
+    # and the payload built from the absorbed buffer stays well-formed
+    payload = algo.round_payload(server, jax.random.PRNGKey(1))
+    assert payload["gammas"].shape == (3,)
+    # γ_m sum to 2λ (vote_coefficients: γ_m/2 = λ·softmax), every slot live
+    assert abs(float(payload["gammas"].sum()) - 2 * algo.lam) < 1e-5
+    assert (np.asarray(payload["gammas"]) > 0).all()
+
+
+# --- cache behaviour under churning async cohorts ---------------------------
+
+def test_slab_store_counters_under_async_churn():
+    """Drive the slab store with the cohort churn an async run produces
+    (fast clients return often, stragglers rarely): the LRU cap bounds
+    residency the whole time and every access is exactly one of
+    hit / host transfer / device move."""
+    dev = jax.devices()[0]
+    store = ClientSlabStore(max_resident=4)
+    n = 6
+    datas = [ClientData(np.zeros((8 + i, 2), np.float32),
+                        np.zeros(8 + i, np.int64)) for i in range(n)]
+    sim = SystemSim(n, STRAGGLER, rng=derive_rng(0))
+    # pin a skewed fleet: 0/1 complete 8x as often as the 2..5 tail, so
+    # their slabs re-hit while the tail's arrivals churn past the cap
+    sim.speeds = np.array([4.0, 4.0, 0.5, 0.5, 0.5, 0.5])
+    for c in range(n):
+        sim.dispatch(c, work=4.0)
+    gets = 0
+    for _ in range(40):
+        batch = sim.pop_batch(2)
+        for comp in batch:
+            store.get(comp.client, datas[comp.client], dev)
+            gets += 1
+            sim.dispatch(comp.client, work=4.0)
+        assert len(store.slabs) <= 4, "LRU cap violated mid-churn"
+    st = store.stats()
+    assert st["peak_resident"] <= 4
+    assert st["hits"] + st["host_transfers"] + st["device_moves"] == gets
+    assert st["evictions"] > 0 and st["hits"] > 0
+    assert st["evictions"] == st["host_transfers"] - min(
+        4, st["host_transfers"])  # every transfer past the cap evicted one
+
+
+def _vote_setup(task, m_teachers=3):
+    from repro.core.modelzoo import make_model
+    from repro.optim import sgd
+    algo = algorithms.make("fedgkd-vote", buffer_m=m_teachers)
+    model = make_model(task)
+    gp = model.init(jax.random.PRNGKey(0))
+    server = algo.init_server(gp, model, task.num_classes)
+    for m in range(m_teachers - 1):
+        server["buffer"].push(jax.tree_util.tree_map(
+            lambda p: p * (1.0 + 0.01 * (m + 1)), gp))
+    server["val_losses"] = [0.1 * (m + 1) for m in range(m_teachers)]
+    ctx = ex.RoundContext(algo=algo, model=model, opt=sgd(), lr=0.05,
+                          batch_size=64, epochs=1)
+    return algo, model, gp, server, ctx
+
+
+def test_vote_part_cache_absorb_bumps_recompute_exactly_once(tiny_setup):
+    """An async stale-arrival absorption bumps the ModelBuffer version
+    mid-buffer; the (client, version) part cache must recompute exactly
+    the one absorbed teacher and stay bounded across churning cohorts."""
+    task, data = tiny_setup
+    m = 3
+    algo, model, gp, server, ctx = _vote_setup(task, m)
+    exec_ = ex.VmapExecutor()
+    rng = np.random.default_rng(0)
+    k = len(data.clients)
+    payload0 = algo.round_payload(server, jax.random.PRNGKey(1))
+
+    cohorts = [list(range(k)), list(range(k - 1, -1, -1)),
+               [0, 2, 4], [1, 3, 5]]          # churn incl. partial cohorts
+    for cohort in cohorts:
+        exec_.run_round(ctx, gp, payload0, [() for _ in cohort],
+                        [data.clients[c] for c in cohort], rng,
+                        client_ids=cohort)
+    assert ctx.telemetry["parts_computed"] == m, \
+        "cohort churn without version bumps must never recompute"
+
+    # async late arrival: the KD buffer absorbs a stale client model
+    server = algo.absorb_stale(
+        server, [{"params": jax.tree_util.tree_map(lambda p: p * 1.1, gp)}],
+        [2], [1.0])
+    payload1 = algo.round_payload(server, jax.random.PRNGKey(2))
+    exec_.run_round(ctx, gp, payload1, [() for _ in range(k)],
+                    data.clients, rng, client_ids=list(range(k)))
+    assert ctx.telemetry["parts_computed"] == m + 1, \
+        "absorb version bump must invalidate exactly one part"
+    exec_.run_round(ctx, gp, payload1, [() for _ in range(k)],
+                    data.clients, rng, client_ids=list(range(k)))
+    assert ctx.telemetry["parts_computed"] == m + 1
+    # rotated-out versions are evicted: the per-client cache stays at M
+    for cid in range(k):
+        assert len(ctx.aux_cache[cid]) <= m, "part cache grew unbounded"
+
+
+def test_async_end_to_end_vote_absorbs_and_stays_bounded(tiny_setup):
+    task, data = tiny_setup
+    m = 3
+    h = fl_loop.run_federated(
+        task, algorithms.make("fedgkd-vote", buffer_m=m), data, seed=5,
+        rounds=6,
+        executor=ex.AsyncExecutor(buffer_size=2, staleness="fedgkd",
+                                  profile=STRAGGLER))
+    assert h.telemetry["stale_absorbed"] > 0, \
+        "a straggler run must produce stale arrivals to absorb"
+    assert np.isfinite([r.test_acc for r in h.records]).all()
+    # versions created: M initial + 1 global push + 1 possible absorb per
+    # aggregation — the part cache can never have computed more than that
+    assert h.telemetry["parts_computed"] <= m + 2 * 6
+    assert h.telemetry["max_staleness"] >= 1.0
+
+
+# --- the launch-driver round clock ------------------------------------------
+
+def test_launch_round_clock():
+    from repro.launch.train import make_round_clock
+    assert make_round_clock(4, straggler_frac=0.0, straggler_slowdown=4.0,
+                            seed=0) is None
+    clock = make_round_clock(64, straggler_frac=0.3, straggler_slowdown=4.0,
+                             seed=0)
+    # the barrier costs the slowest client: 4x the work at slowdown 4
+    assert clock(8.0) == pytest.approx(32.0)
+    clock2 = make_round_clock(64, straggler_frac=0.3, straggler_slowdown=4.0,
+                              seed=0)
+    assert clock(3.0) == clock2(3.0)        # seeded => reproducible
+
+
+# --- nightly --runslow straggler-profile sweep ------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("profile", [
+    SpeedProfile(kind="straggler", straggler_frac=0.2,
+                 straggler_slowdown=4.0),
+    SpeedProfile(kind="straggler", straggler_frac=0.4,
+                 straggler_slowdown=8.0),
+    SpeedProfile(kind="lognormal", sigma=0.8),
+    SpeedProfile(kind="uniform", lo=0.25, hi=2.0),
+], ids=["tail20x4", "tail40x8", "lognormal", "uniform"])
+@pytest.mark.parametrize("scheme", ["constant", "polynomial", "fedgkd"])
+def test_straggler_profile_sweep(tiny_setup, profile, scheme):
+    """Every (profile, staleness scheme) combination trains to finite
+    losses with a monotone virtual clock and full telemetry — the nightly
+    wide-net over the async configuration space."""
+    task, data = tiny_setup
+    h = fl_loop.run_federated(
+        task, algorithms.make("fedgkd", buffer_m=3), data, seed=2, rounds=5,
+        executor=ex.AsyncExecutor(
+            buffer_size=3, staleness=scheme, profile=profile,
+            availability=Availability(period=32.0, duty=0.75)))
+    assert len(h.records) == 5
+    assert np.isfinite([r.test_acc for r in h.records]).all()
+    assert np.isfinite([r.mean_local_loss for r in h.records]).all()
+    times = [r.sim_time for r in h.records]
+    assert times == sorted(times) and times[0] > 0.0
+    assert h.telemetry["route"] == "async"
+    assert h.telemetry["staleness_scheme"] == scheme
+    assert h.telemetry["sim"]["speed_min"] > 0.0

@@ -93,6 +93,64 @@ def test_shard_map_executor_matches_sequential(tiny_setup):
     assert _max_param_diff(hs.final_params, hm.final_params) < 1e-5
 
 
+# --- async equivalence (the PR-4 tentpole) ----------------------------------
+#
+# In the degenerate regime — homogeneous speeds, full buffer B == cohort,
+# zero staleness — the buffered-async loop must reproduce the synchronous
+# executors: same sampling, same batch draws, same aggregation order.
+
+@pytest.mark.parametrize("name", ["fedavg", "fedprox", "fedgkd",
+                                  "fedgkd-vote"])
+def test_async_matches_sequential(tiny_setup, name):
+    task, data = tiny_setup
+    hs = fl_loop.run_federated(task, algorithms.make(name), data, seed=0,
+                               rounds=3, executor="sequential")
+    ha = fl_loop.run_federated(
+        task, algorithms.make(name), data, seed=0, rounds=3,
+        executor=ex.AsyncExecutor(staleness="constant"))
+    assert _max_param_diff(hs.final_params, ha.final_params) < 1e-5
+    for rs, ra in zip(hs.records, ha.records):
+        assert abs(rs.mean_local_loss - ra.mean_local_loss) < 1e-5
+        assert abs(rs.test_acc - ra.test_acc) < 1e-5
+        assert rs.sampled == ra.sampled     # same cohorts, same order
+    assert all(r.mean_staleness == 0.0 for r in ha.records)
+
+
+def test_async_sequential_inner_is_bit_identical(tiny_setup):
+    """With the SEQUENTIAL inner executor there is no vmap associativity
+    left: the async loop in the degenerate regime is the same computation
+    in the same order — bit-identical, not just < 1e-5."""
+    task, data = tiny_setup
+    hs = fl_loop.run_federated(task, algorithms.make("fedgkd"), data, seed=0,
+                               rounds=2, executor="sequential")
+    ha = fl_loop.run_federated(
+        task, algorithms.make("fedgkd"), data, seed=0, rounds=2,
+        executor=ex.AsyncExecutor(staleness="constant", inner="sequential"))
+    assert _max_param_diff(hs.final_params, ha.final_params) == 0.0
+    for rs, ra in zip(hs.records, ha.records):
+        assert rs.test_acc == ra.test_acc
+        assert rs.mean_local_loss == ra.mean_local_loss
+
+
+@multidevice
+@pytest.mark.parametrize("name", ["fedavg", "fedgkd-vote"])
+def test_async_shard_map_inner_matches_sequential(tiny_setup, name):
+    """The CI multidevice gate: async ready-cohorts on the strict mesh
+    route (K=6 padded onto 8 devices, device-resident slabs, sharded
+    teacher precompute) still reproduce the sequential reference."""
+    task, data = tiny_setup
+    hs = fl_loop.run_federated(task, algorithms.make(name), data, seed=0,
+                               rounds=3, executor="sequential")
+    ha = fl_loop.run_federated(
+        task, algorithms.make(name), data, seed=0, rounds=3,
+        executor=ex.AsyncExecutor(
+            staleness="constant", inner=ex.ShardMapExecutor(strict=True)))
+    assert ha.telemetry["inner_route"] == "shard_map"
+    assert _max_param_diff(hs.final_params, ha.final_params) < 1e-5
+    for rs, ra in zip(hs.records, ha.records):
+        assert abs(rs.mean_local_loss - ra.mean_local_loss) < 1e-5
+
+
 # --- round-level teacher precompute (the PR-2 tentpole) ---------------------
 
 @pytest.mark.parametrize("name", ["fedgkd", "fedgkd-vote", "feddistill+"])
@@ -257,6 +315,19 @@ def test_get_executor_resolution():
     assert ex.get_executor(inst, avg, 4) is inst
     with pytest.raises(ValueError):
         ex.get_executor("nope", avg, 4)
+    # the async executor resolves by name; its READY-COHORT inner executor
+    # resolves through the same rules
+    a = ex.get_executor("async", avg, 4)
+    assert isinstance(a, ex.AsyncExecutor)
+    assert "async" in ex.available()
+    assert a.resolve_inner(avg, 4).name == "vmap"
+    assert a.resolve_inner(avg, 1).name == "sequential"
+    with pytest.raises(NotImplementedError):
+        a.run_round(None, None, None, [], [], np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        ex.AsyncExecutor(inner="async")
+    with pytest.raises(ValueError):
+        ex.AsyncExecutor(staleness="nope")
 
 
 def test_zero_rounds_fast_path(tiny_setup):
