@@ -7,9 +7,13 @@ both artifacts with the shared ``cases`` schema:
   * ``BENCH_executor.json`` — ``speedup_vs_sequential`` /
     ``speedup_vs_no_precompute`` (executor pipeline vs references);
   * ``BENCH_async.json`` — ``sim_speedup_vs_sync`` (simulated wall-clock
-    to target accuracy, async vs the synchronous straggler barrier).
+    to target accuracy, async vs the synchronous straggler barrier);
+  * ``BENCH_conv.json`` — ``speedup_vs_naive_vmap`` (client-batched
+    grouped-conv round body vs the historical vmapped-conv body on the
+    resnet8 cohort).
 
-A case is keyed by ``(algo, executor, epochs, precompute, buffer_size)``;
+A case is keyed by ``(algo, executor, epochs, precompute, buffer_size,
+model, conv_route)`` (the last two ``None`` for pre-conv artifacts);
 only keys present in BOTH files are compared (the baseline may predate
 newer cases), and a metric regresses when
 
@@ -27,12 +31,13 @@ import argparse
 import json
 
 METRICS = ("speedup_vs_sequential", "speedup_vs_no_precompute",
-           "sim_speedup_vs_sync")
+           "sim_speedup_vs_sync", "speedup_vs_naive_vmap")
 
 
 def case_key(row: dict) -> tuple:
     return (row["algo"], row["executor"], row["epochs"],
-            bool(row.get("precompute")), row.get("buffer_size"))
+            bool(row.get("precompute")), row.get("buffer_size"),
+            row.get("model"), row.get("conv_route"))
 
 
 def index_cases(payload: dict) -> dict:

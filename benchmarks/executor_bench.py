@@ -17,6 +17,17 @@ nightly CI job on it):
     # the forced-multi-device case: shard_map on an 8-device host mesh
     PYTHONPATH=src python benchmarks/executor_bench.py \
         --host-devices 8 --with-shard-map
+
+``--conv`` switches to the CLIENT-BATCHED CONV case (resnet8 on toy-CIFAR
+shapes, the paper's CIFAR backbone): the vmap executor runs the cohort
+twice per timed round — once through the client-batched grouped-conv body
+(``kernels.grouped_conv`` + unrolled steps) and once through the naive
+vmapped-conv body (``client_batched=False``, the historical round fn) —
+interleaved, so the paired ``speedup_vs_naive_vmap`` ratio is drift-robust.
+Writes ``BENCH_conv.json``; the nightly ``conv-bench`` job gates it via
+``compare_bench.py``:
+
+    PYTHONPATH=src python benchmarks/executor_bench.py --conv
 """
 from __future__ import annotations
 
@@ -157,15 +168,116 @@ def bench_algo(algo_name: str, task, data, args) -> list[dict]:
     return rows
 
 
+def bench_conv(args) -> int:
+    """The client-batched grouped-conv case: resnet8, 8-client cohort.
+
+    Rows: sequential reference, vmap with the NAIVE vmapped-conv round
+    body, vmap with the CLIENT-BATCHED body (grouped-conv kernels).  The
+    acceptance metric is ``speedup_vs_naive_vmap`` — median per-round
+    paired ratio of interleaved naive/batched rounds (same executor, same
+    cohort, same batch draws).
+    """
+    from repro.core.modelzoo import make_model
+
+    # toy-CIFAR sizing: full CIFAR is pointless for a round-time measure —
+    # ~2 local steps per client at the paper's 32x32x3 shapes is the
+    # executor-bound regime the comparison targets (main() defaults
+    # --scale to 0.01 under --conv)
+    task = scaled(PAPER_TASKS["cifar10"], scale=args.scale, rounds=1,
+                  local_epochs=1)
+    task = dataclasses.replace(
+        task, n_clients=max(task.n_clients, args.clients),
+        participation=args.clients / max(task.n_clients, args.clients),
+        batch_size=args.conv_batch)
+    data = fl_loop.make_federated_data(task, alpha=args.alpha, seed=0,
+                                       n_test=32)
+
+    all_rows = []
+    for algo_name in args.conv_algos:
+        algo = algorithms.make(algo_name)
+        model = make_model(task, width=args.conv_width)
+        global_params = model.init(jax.random.PRNGKey(1))
+        server = algo.init_server(global_params, model, task.num_classes)
+        payloads = [algo.round_payload(server, jax.random.PRNGKey(2 + t))
+                    for t in range(args.rounds + 1)]
+        opt = sgd(momentum=task.momentum, weight_decay=task.weight_decay)
+        states = {k: algo.init_client_state(k, global_params)
+                  for k in range(data.n_clients)}
+
+        def mk_ctx(client_batched):
+            return executor_lib.RoundContext(
+                algo=algo, model=model, opt=opt, lr=task.lr,
+                batch_size=task.batch_size, epochs=1,
+                max_batches=args.conv_steps, client_batched=client_batched)
+
+        rows = bench_executor("sequential", [mk_ctx("auto")], data,
+                              args.clients, 0, global_params, payloads,
+                              states, rounds=args.rounds)
+        # interleaved pair: [client-batched body, naive vmapped-conv body]
+        pair = bench_executor("vmap", [mk_ctx("auto"), mk_ctx(False)], data,
+                              args.clients, 0, global_params, payloads,
+                              states, rounds=args.rounds)
+        batched_row, naive_row = pair
+        batched_row["conv_route"] = "client_batched"
+        naive_row["conv_route"] = "naive"
+        ratio = np.asarray(naive_row["times_s"]) / np.asarray(
+            batched_row["times_s"])
+        batched_row["speedup_vs_naive_vmap"] = float(np.median(ratio))
+        rows.extend(pair)
+        seq_min = rows[0]["min_s"]
+        for r in rows:
+            r.update(algo=algo_name, epochs=1, precompute=False,
+                     model="resnet8")
+            r["speedup_vs_sequential"] = seq_min / r["min_s"]
+        all_rows.extend(rows)
+
+        print(f"\n{algo_name} resnet8 conv case: {args.clients} clients, "
+              f"width={args.conv_width}, batch={args.conv_batch}, "
+              f"steps={args.conv_steps}")
+        for r in rows:
+            route = r.get("conv_route", "-")
+            print(f"  {r['executor']:<10} {route:<15} "
+                  f"{r['median_s']:>9.3f} s/round  "
+                  f"vs naive-vmap "
+                  f"{r.get('speedup_vs_naive_vmap', float('nan')):>6.2f}x")
+
+    payload = {
+        "bench": "conv", "task": "cifar10", "model": "resnet8",
+        "clients": args.clients, "width": args.conv_width,
+        "batch_size": args.conv_batch, "steps": args.conv_steps,
+        "alpha": args.alpha, "timing_rounds": args.rounds,
+        "backend": jax.default_backend(), "devices": len(jax.devices()),
+        "notes": (
+            "speedup_vs_naive_vmap = median per-round paired ratio "
+            "(interleaved rounds, same vmap executor) of the historical "
+            "vmapped-conv round body over the client-batched grouped-conv "
+            "body (kernels/grouped_conv custom-VJP formulas + unrolled "
+            "step loop).  The acceptance floor from the issue is 1.3x; "
+            "the gate in nightly.yml fails on a >20% regression of the "
+            "committed ratio."),
+        "cases": all_rows,
+    }
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"\nwrote {out}")
+    floor = min(r["speedup_vs_naive_vmap"] for r in all_rows
+                if "speedup_vs_naive_vmap" in r)
+    print(f"minimum speedup_vs_naive_vmap across cases: {floor:.2f}x")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--task", default="toy", choices=sorted(PAPER_TASKS),
                     help="'toy' (MLP, the fast preset) or a paper task")
     ap.add_argument("--clients", type=int, default=8,
                     help="sampled clients per round (>=8 for the criterion)")
-    ap.add_argument("--rounds", type=int, default=8)
-    ap.add_argument("--scale", type=float, default=1.0,
-                    help="dataset scale (paper tasks need ~0.02)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="timed rounds per case (default 8; 3 under --conv "
+                         "— the naive vmapped-conv rounds are slow)")
+    ap.add_argument("--scale", type=float, default=None,
+                    help="dataset scale (default 1.0; paper tasks need "
+                         "~0.02, --conv defaults to 0.01)")
     ap.add_argument("--epochs-list", type=int, nargs="+", default=[2],
                     dest="epochs_list", help="local-epoch settings to sweep")
     ap.add_argument("--max-batches", type=int, default=None)
@@ -184,8 +296,25 @@ def main(argv=None) -> int:
                     help="force this many XLA host-platform devices (the "
                          "multi-device shard_map case on a CPU box); must "
                          "run before jax initializes a backend")
-    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_executor.json"))
+    ap.add_argument("--conv", action="store_true",
+                    help="run the client-batched conv case (resnet8 on "
+                         "toy-CIFAR shapes) and write BENCH_conv.json")
+    ap.add_argument("--conv-width", type=int, default=16,
+                    help="resnet8 width for --conv (16 = the paper's scale)")
+    ap.add_argument("--conv-batch", type=int, default=16, dest="conv_batch")
+    ap.add_argument("--conv-steps", type=int, default=2, dest="conv_steps",
+                    help="local steps per client per round for --conv")
+    ap.add_argument("--conv-algos", nargs="+", default=["fedavg"],
+                    dest="conv_algos")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    if args.rounds is None:
+        args.rounds = 3 if args.conv else 8
+    if args.scale is None:
+        args.scale = 0.01 if args.conv else 1.0
+    if args.out is None:
+        args.out = str(REPO_ROOT / ("BENCH_conv.json" if args.conv
+                                    else "BENCH_executor.json"))
 
     if args.host_devices:
         # XLA reads the flag at first backend init, which nothing in this
@@ -202,6 +331,8 @@ def main(argv=None) -> int:
         sys.exit("--with-shard-map on a single device would only measure "
                  "the vmap fallback under a shard_map label; pass "
                  "--host-devices N (or set XLA_FLAGS) for a real mesh")
+    if args.conv:
+        return bench_conv(args)
 
     task = scaled(PAPER_TASKS[args.task], scale=args.scale, rounds=1,
                   local_epochs=max(args.epochs_list))

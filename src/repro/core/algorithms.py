@@ -121,6 +121,31 @@ class Algorithm:
 
         return loss
 
+    def batched_loss_fn(self, model: ModelBundle):
+        """Client-STACKED form of ``loss_fn`` for client-batched models.
+
+        Returns ``loss(params, payload, client_states, x, y, mask, aux) ->
+        (total, per_client)`` where every leaf carries a leading cohort
+        axis — params ``(K, ...)``, x ``(K, B, ...)`` — and ``per_client[k]``
+        equals ``loss_fn``'s scalar for client k.  ``total`` is their sum:
+        client parameters are disjoint, so one ``value_and_grad`` of the
+        sum yields exactly the per-client gradients WITHOUT vmapping the
+        model — the model's apply consumes the stacked pytree natively
+        (conv backbones route through ``kernels.grouped_conv``).  Used by
+        the batched executors when ``ModelBundle.client_batched`` is set;
+        ``None`` (returned whenever a subclass overrides ``loss_fn``
+        without providing a stacked form) falls back to the vmapped path.
+        """
+        if type(self).loss_fn is not Algorithm.loss_fn:
+            return None
+
+        def loss(params, payload, client_states, x, y, mask, aux=None):
+            per = D.cross_entropy_per_client(model.apply(params, x), y,
+                                             mask=mask)
+            return jnp.sum(per), per
+
+        return loss
+
     def absorb_stale(self, server: dict, uploads: list[dict],
                      staleness: list[float], weights: list[float],
                      model: ModelBundle | None = None,
@@ -177,6 +202,20 @@ class FedProx(Algorithm):
 
         return loss
 
+    def batched_loss_fn(self, model):
+        if type(self).loss_fn is not FedProx.loss_fn:
+            return None          # subclass changed the objective
+        mu = self.mu
+
+        def loss(params, payload, client_states, x, y, mask, aux=None):
+            per = D.cross_entropy_per_client(model.apply(params, x), y,
+                                             mask=mask)
+            per = per + 0.5 * mu * D.param_sq_dist_per_client(
+                params, payload["anchor"])
+            return jnp.sum(per), per
+
+        return loss
+
 
 # ---------------------------------------------------------------------------
 
@@ -225,6 +264,38 @@ class FedGKD(Algorithm):
             else:
                 kd = D.kd_loss_kl(t_logits, logits, gamma, temp, mask=mask)
             return ce + kd, {"kd": kd}
+
+        return loss
+
+    def batched_loss_fn(self, model):
+        if type(self).loss_fn is not FedGKD.loss_fn:
+            return None          # subclass changed the objective
+        gamma, ltype, temp = self.gamma, self.loss_type, self.temperature
+
+        def loss(params, payload, client_states, x, y, mask, aux=None):
+            logits = model.apply(params, x)                   # (K, B, C)
+            if aux is not None:
+                t_logits = aux["t_logits"]
+            else:
+                # the teacher is ONE shared model: fold the cohort into the
+                # batch axis for a plain single-model forward (no stacked
+                # weights, no vmap) and unfold the logits
+                k, b = x.shape[0], x.shape[1]
+                t_logits = model.apply(
+                    payload["teacher"],
+                    x.reshape((k * b,) + x.shape[2:])).reshape(k, b, -1)
+            t_logits = jax.lax.stop_gradient(t_logits)
+            per = D.cross_entropy_per_client(logits, y, mask=mask)
+            if ltype == "mse":
+                d = (t_logits.astype(jnp.float32)
+                     - logits.astype(jnp.float32))
+                kd = 0.5 * gamma * D.masked_mean_per_client(
+                    jnp.sum(jnp.square(d), axis=-1), mask)
+            else:
+                kd = 0.5 * gamma * D.masked_mean_per_client(
+                    D.kl_divergence(t_logits, logits, temp), mask)
+            per = per + kd
+            return jnp.sum(per), per
 
         return loss
 
@@ -357,6 +428,36 @@ class FedGKDVote(FedGKD):
                 kls = jax.lax.map(one, payload["teachers"])   # (M,)
                 kd = 0.5 * jnp.sum(payload["gammas"] * kls)   # Σ (γ_m/2)·KL_m
             return ce + kd, {"kd": kd}
+
+        return loss
+
+    def batched_loss_fn(self, model):
+        if type(self).loss_fn is not FedGKDVote.loss_fn:
+            return None          # subclass changed the objective
+        temp = self.temperature
+
+        def loss(params, payload, client_states, x, y, mask, aux=None):
+            logits = model.apply(params, x)                   # (K, B, C)
+            per = D.cross_entropy_per_client(logits, y, mask=mask)
+            if aux is not None:
+                logp_s = jax.nn.log_softmax(
+                    logits.astype(jnp.float32) / temp, axis=-1)
+                kls = (aux["tent"] - jnp.sum(aux["tbar"] * logp_s, axis=-1)
+                       ) * (temp * temp)                      # (K, B)
+                kd = 0.5 * D.masked_mean_per_client(kls, mask)
+            else:
+                k, b = x.shape[0], x.shape[1]
+                xf = x.reshape((k * b,) + x.shape[2:])
+
+                def one(teacher):                             # shared model:
+                    t = model.apply(teacher, xf).reshape(k, b, -1)
+                    return D.masked_mean_per_client(
+                        D.kl_divergence(t, logits, temp), mask)
+
+                kls = jax.lax.map(one, payload["teachers"])   # (M, K)
+                kd = 0.5 * jnp.sum(payload["gammas"][:, None] * kls, axis=0)
+            per = per + kd
+            return jnp.sum(per), per
 
         return loss
 

@@ -90,3 +90,81 @@ def make_local_update(loss_fn: Callable, opt: Optimizer) -> Callable:
         return params, jnp.sum(losses) / denom
 
     return local_update
+
+
+def make_batched_local_update(batched_loss_fn: Callable, opt: Optimizer,
+                              unroll_limit: int = 8) -> Callable:
+    """The whole-cohort client pass for CLIENT-BATCHED models.
+
+    Same call signature and outputs as ``vmap(make_local_update(...))`` —
+    ``(global_params, payload, states_stacked, xs (K, S, B, ...), ys,
+    ex_mask, aux, step_mask (K, S), lr) -> (params (K, ...), mean_loss
+    (K,))`` — but instead of vmapping the per-client scan it broadcasts the
+    global params to a stacked ``(K, ...)`` pytree and drives
+    ``batched_loss_fn`` (one fused forward+backward over the cohort; conv
+    backbones route through ``kernels.grouped_conv``).  Per-client masking
+    semantics are identical: a client's padded step leaves ITS params and
+    opt state untouched; padded examples are zero-weighted in the loss.
+
+    Rounds with at most ``unroll_limit`` steps run as an unrolled step
+    loop: on CPU, XLA executes a ``lax.scan`` over bodies this size
+    drastically slower than the identical unrolled program (measured ~19x
+    on resnet8 — the while-loop body misses the fusion/threading the
+    straight-line program gets), and the benchmark round counts sit well
+    under the limit.  Longer rounds fall back to ``lax.scan`` to bound
+    compile time.
+    """
+
+    def step(params, opt_state, payload, states, x, y, m, aux_b, lr):
+        (_, per), grads = jax.value_and_grad(
+            batched_loss_fn, has_aux=True)(params, payload, states, x, y, m,
+                                           _aux_or_none(aux_b))
+        # the optimizer update IS vmapped (cheap elementwise pytree math, no
+        # model ops): scalar state leaves — Adam's step count — stay
+        # per-client (K,) exactly as in the vmapped round body, so the
+        # per-client keep-mask below can gate every leaf
+        updates, opt_state = jax.vmap(
+            lambda g, o, p: opt.update(g, o, p, lr))(grads, opt_state,
+                                                     params)
+        return apply_updates(params, updates), opt_state, per
+
+    def local_update(global_params: Any, payload: Any, states: Any,
+                     xs: jax.Array, ys: jax.Array, ex_mask: jax.Array,
+                     aux: Any, step_mask: jax.Array, lr):
+        k, s = xs.shape[0], xs.shape[1]
+        params = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (k,) + l.shape), global_params)
+        opt_state = jax.vmap(opt.init)(params)
+
+        def body(carry, batch):
+            p, o = carry
+            x, y, m, aux_b, live = batch
+            p2, o2, per = step(p, o, payload, states, x, y, m, aux_b, lr)
+            keep = lambda new, old: jnp.where(
+                live.reshape((k,) + (1,) * (new.ndim - 1)), new, old)
+            p = jax.tree_util.tree_map(keep, p2, p)
+            o = jax.tree_util.tree_map(keep, o2, o)
+            return (p, o), jnp.where(live, per, 0.0)
+
+        # step-major views: leaves (K, S, ...) -> (S, K, ...)
+        swap = lambda l: jnp.swapaxes(l, 0, 1)
+        xs_t, ys_t, m_t = swap(xs), swap(ys), swap(ex_mask)
+        aux_t = jax.tree_util.tree_map(swap, aux)
+        live_t = swap(step_mask)
+        carry = (params, opt_state)
+        if s <= unroll_limit:
+            losses = []
+            for i in range(s):
+                aux_i = jax.tree_util.tree_map(lambda l: l[i], aux_t)
+                carry, per = body(carry, (xs_t[i], ys_t[i], m_t[i], aux_i,
+                                          live_t[i]))
+                losses.append(per)
+            losses = jnp.stack(losses)                      # (S, K)
+        else:
+            carry, losses = jax.lax.scan(
+                body, carry, (xs_t, ys_t, m_t, aux_t, live_t))
+        params = carry[0]
+        denom = jnp.maximum(1.0, jnp.sum(step_mask.astype(jnp.float32), 1))
+        return params, jnp.sum(losses, 0) / denom
+
+    return local_update

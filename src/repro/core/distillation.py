@@ -43,6 +43,46 @@ def masked_mean(values: jax.Array, mask: jax.Array | None) -> jax.Array:
     return jnp.sum(values * w) / jnp.maximum(1.0, jnp.sum(w))
 
 
+def masked_mean_per_client(values: jax.Array, mask: jax.Array | None) -> jax.Array:
+    """Row of ``masked_mean``s over a stacked cohort: values ``(K, B)`` ->
+    ``(K,)``.  Client k's entry equals ``masked_mean(values[k], mask[k])``
+    exactly, so a sum over the K axis is the batched executors' total loss
+    whose gradient w.r.t. client-stacked params is the per-client
+    gradients (parameters are disjoint across clients)."""
+    if mask is None:
+        return jnp.mean(values, axis=-1)
+    w = mask.astype(jnp.float32)
+    return jnp.sum(values * w, axis=-1) / jnp.maximum(1.0, jnp.sum(w, axis=-1))
+
+
+def cross_entropy_per_client(logits: jax.Array, labels: jax.Array,
+                             ignore_index: int = -1,
+                             mask: jax.Array | None = None) -> jax.Array:
+    """Per-client masked-mean CE: logits ``(K, B, C)`` -> ``(K,)``; each
+    entry matches ``cross_entropy(logits[k], labels[k], mask=mask[k])``
+    to the op (same log-softmax, same masked sum, negated last)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    valid = (labels != ignore_index).astype(jnp.float32)
+    if mask is not None:
+        valid = valid * mask.astype(jnp.float32)
+    safe = jnp.where(labels != ignore_index, labels, 0)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * valid, axis=-1) / jnp.maximum(
+        1.0, jnp.sum(valid, axis=-1))
+
+
+def param_sq_dist_per_client(stacked, anchor) -> jax.Array:
+    """‖w_k − anchor‖² per client: leaves ``(K, ...)`` against the shared
+    anchor ``(...)`` -> ``(K,)`` (FedProx/FedDyn proximal terms on the
+    client-stacked route)."""
+    total = 0.0
+    for s, a in zip(jax.tree_util.tree_leaves(stacked),
+                    jax.tree_util.tree_leaves(anchor)):
+        d = s.astype(jnp.float32) - a.astype(jnp.float32)[None]
+        total = total + jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+    return total
+
+
 def kd_loss_kl(teacher_logits, student_logits, gamma: float,
                temperature: float = 1.0, mask=None,
                use_pallas: bool | None = None) -> jax.Array:

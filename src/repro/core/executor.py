@@ -70,6 +70,27 @@ steady-state teacher inference is ~1 shard forward per round instead of M.
 Requires the caller to pass stable ``client_ids`` to ``run_round``; cached
 values must be bit-reproducible from (part payload, shard) alone.
 
+The client-batched conv route
+-----------------------------
+On the paper's CV backbones, vmapping ``local_update`` over clients turns
+every convolution into a batched-WEIGHT convolution that XLA lowers poorly
+(the long-standing ROADMAP item).  Models that declare
+``ModelBundle.client_batched`` consume client-STACKED params natively —
+``models/resnet.py`` detects 5-D conv weights and routes through the fused
+``kernels.grouped_conv.client_batched_conv`` (one feature-grouped conv with
+a custom VJP) — so for algorithms that provide ``Algorithm.batched_loss_fn``
+the batched executors swap the vmapped round body for
+``client_lib.make_batched_local_update``: the global params broadcast to a
+``(K, ...)`` stack, one fused ``value_and_grad`` of the summed per-client
+losses trains the whole cohort (client params are disjoint, so the sum's
+gradient IS the per-client gradients), and short rounds run as an unrolled
+step loop (``lax.scan`` over resnet-sized bodies is ~19x slower on CPU).
+``RoundContext(client_batched=False)`` forces the historical vmapped body —
+the ``benchmarks/executor_bench.py --conv`` naive baseline — and
+``ctx.telemetry["round_body"]`` records which body ran.  The ShardMap
+executor reuses the same body per mesh shard (each shard trains its g
+resident clients as one stacked program).
+
 The multi-device path (ShardMapExecutor)
 ----------------------------------------
 ``ShardMapExecutor`` maps the cohort onto a 1-D ``("clients",)`` mesh over
@@ -135,11 +156,33 @@ class RoundContext:
     # past the cap).  None = unbounded — right for full participation, but
     # long partial-participation runs on real accelerators should bound it
     placement_max_resident: Optional[int] = None
+    # the CLIENT-BATCHED round body (see "The client-batched conv route" in
+    # the module docstring): "auto" uses it whenever the model declares
+    # ``client_batched`` AND the algorithm provides ``batched_loss_fn``;
+    # False forces the historical vmapped body (the benchmarks' naive
+    # baseline); True additionally raises if the pair cannot support it
+    client_batched: "bool | str" = "auto"
 
     def __post_init__(self):
         loss_fn = self.algo.loss_fn(self.model)
         # scan-based whole-client pass (vmap/shard_map paths)
         self.local_update = client_lib.make_local_update(loss_fn, self.opt)
+        # client-batched whole-cohort pass: the model consumes stacked
+        # params natively (conv -> kernels.grouped_conv), so the batched
+        # executors can skip vmapping the round body entirely
+        self.batched_local_update = None
+        if self.client_batched in ("auto", True):
+            bloss = (self.algo.batched_loss_fn(self.model)
+                     if getattr(self.model, "client_batched", False) else None)
+            if bloss is not None:
+                self.batched_local_update = client_lib.make_batched_local_update(
+                    bloss, self.opt)
+            elif self.client_batched is True:
+                raise ValueError(
+                    f"client_batched=True but model "
+                    f"{getattr(self.model, 'name', self.model)!r} / algorithm "
+                    f"{self.algo.name!r} has no client-batched form "
+                    f"(ModelBundle.client_batched + Algorithm.batched_loss_fn)")
         # per-batch step (sequential path: compiles once per batch SHAPE
         # rather than once per (steps, batch) pair like the scan would)
         self.step = client_lib.make_step(loss_fn, self.opt, jit=True)
@@ -415,9 +458,15 @@ class VmapExecutor:
     def _round_fn(self, ctx: RoundContext) -> Callable:
         fn = ctx.jit_cache.get("round")
         if fn is None:
-            fn = jax.jit(jax.vmap(ctx.local_update,
-                                  in_axes=(None, None, 0, 0, 0, 0, 0, 0,
-                                           None)))
+            if ctx.batched_local_update is not None:
+                # client-batched body: one fused cohort program (stacked
+                # params through the model, grouped-conv kernels) instead
+                # of vmapping the per-client scan — same signature
+                fn = jax.jit(ctx.batched_local_update)
+            else:
+                fn = jax.jit(jax.vmap(ctx.local_update,
+                                      in_axes=(None, None, 0, 0, 0, 0, 0, 0,
+                                               None)))
             ctx.jit_cache["round"] = fn
         return fn
 
@@ -548,6 +597,9 @@ class VmapExecutor:
     def run_round(self, ctx, global_params, payload, client_states,
                   client_data, rng, client_ids=None) -> RoundResult:
         ctx.telemetry["route"] = "vmap"
+        ctx.telemetry["round_body"] = (
+            "client_batched" if ctx.batched_local_update is not None
+            else "vmap")
         k = len(client_data)
         full = None
         aux_full = None
@@ -636,10 +688,24 @@ class ShardMapExecutor(VmapExecutor):
 
             def per_shard(gp, pl, st, fx, fy, picks, ex_mask, step_mask,
                           aux_full):
+                # batch rows gathered from the resident slab ON the device
+                # that owns the client — the host never ships (S, B, ...)
+                # batch tensors for this path
+                if ctx.batched_local_update is not None:
+                    # client-batched body on this shard's g resident
+                    # clients: gather every client's batches, then run the
+                    # fused stacked round (grouped-conv route) — no vmap
+                    gather = jax.vmap(lambda f, p: f[p])
+                    xs = gather(fx, picks)
+                    ys = gather(fy, picks)
+                    aux_rows = jax.tree_util.tree_map(
+                        lambda l: jax.vmap(lambda a, p: a[p])(l, picks),
+                        aux_full)
+                    return ctx.batched_local_update(
+                        gp, pl, st, xs, ys, ex_mask, aux_rows, step_mask,
+                        ctx.lr)
+
                 def one(st_i, fx_i, fy_i, p_i, em_i, sm_i, aux_i):
-                    # batch rows gathered from the resident slab ON the
-                    # device that owns the client — the host never ships
-                    # (S, B, ...) batch tensors for this path
                     xs = fx_i[p_i]
                     ys = fy_i[p_i]
                     aux_rows = jax.tree_util.tree_map(lambda l: l[p_i],
@@ -944,6 +1010,9 @@ class ShardMapExecutor(VmapExecutor):
                       if ctx.has_state_update else list(client_states))
         ctx.telemetry.update(route="shard_map", n_devices=ndev, cohort=k,
                              padded_to=k_pad,
+                             round_body=("client_batched"
+                                         if ctx.batched_local_update
+                                         is not None else "vmap"),
                              placement=ctx.placement.stats())
         _LOG.debug("shard_map round: K=%d padded to %d on %d devices", k,
                    k_pad, ndev)
@@ -1052,15 +1121,21 @@ def get_executor(spec: "str | ClientExecutor", algo: Algorithm,
 
     ``"auto"`` picks the batched vmap path when the algorithm declares
     ``supports_vmap``, more than one client is sampled per round, AND the
-    model's ops lower well under stacked-weight vmap (``vmap_friendly`` —
-    dense models yes, conv backbones on CPU no); otherwise the sequential
-    reference.  Instances pass through unchanged.
+    model batches well — either its ops lower well under stacked-weight
+    vmap (``vmap_friendly``: dense models) or it has the client-batched
+    route (``client_batched`` models whose algorithm provides
+    ``batched_loss_fn``, e.g. the resnet backbones through
+    ``kernels.grouped_conv``); otherwise the sequential reference.
+    Instances pass through unchanged.
     """
     if not isinstance(spec, str):
         return spec
     if spec == "auto":
+        model_ok = (model is None or model.vmap_friendly
+                    or (getattr(model, "client_batched", False)
+                        and algo.batched_loss_fn(model) is not None))
         batched_ok = (getattr(algo, "supports_vmap", False) and n_sample > 1
-                      and (model is None or model.vmap_friendly))
+                      and model_ok)
         spec = "vmap" if batched_ok else "sequential"
     try:
         return _EXECUTORS[spec]()

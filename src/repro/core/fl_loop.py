@@ -108,7 +108,8 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
                   verbose: bool = False, width: int = 16,
                   round_callback=None, dp=None,
                   executor: "str | executor_lib.ClientExecutor" = "auto",
-                  precompute: "bool | str" = "auto") -> History:
+                  precompute: "bool | str" = "auto",
+                  client_batched: "bool | str" = "auto") -> History:
     """Run T communication rounds of ``algo`` on the partitioned data.
 
     ``executor`` selects the client-execution strategy: ``"sequential"``,
@@ -124,7 +125,10 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
     and host round-trips cost more than the hoisted teacher forward saves
     (see BENCH_executor.json) — while ``True``/``False`` force it; False
     is the inline no-aux pre-pipeline path, kept for equivalence tests
-    and benchmarking.
+    and benchmarking.  ``client_batched`` gates the batched executors'
+    client-batched round body on conv backbones (``"auto"`` uses it when
+    the model + algorithm support it; ``False`` forces the historical
+    vmapped body — the conv benchmarks' naive baseline).
     """
     rounds = rounds if rounds is not None else task.rounds
     model = make_model(task, projection_head=algo.needs_projection_head,
@@ -159,7 +163,8 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
     ctx = executor_lib.RoundContext(
         algo=algo, model=model, opt=opt, lr=task.lr,
         batch_size=task.batch_size, epochs=task.local_epochs,
-        max_batches=max_batches_per_client, precompute=bool(precompute))
+        max_batches=max_batches_per_client, precompute=bool(precompute),
+        client_batched=client_batched)
 
     client_states = {k: algo.init_client_state(k, global_params)
                      for k in range(data.n_clients)}

@@ -27,6 +27,11 @@ class ModelBundle:
     # (dense stacks become batched GEMMs; batched-weight convs lower poorly
     # on CPU backends) — consulted by executor="auto"
     vmap_friendly: bool = True
+    # whether apply/features consume CLIENT-STACKED params natively
+    # (leading cohort axis; convs route through kernels.grouped_conv) —
+    # with an algorithm that provides ``batched_loss_fn`` this unlocks the
+    # batched executors' fused client-batched round body
+    client_batched: bool = False
 
 
 def _text_classifier(task: PaperTask, projection_head: bool) -> ModelBundle:
@@ -68,14 +73,14 @@ def make_model(task: PaperTask, projection_head: bool = False,
             lambda rng: resnet.resnet8_init(rng, task.num_classes, width=width,
                                             projection_head=projection_head),
             resnet.resnet8_apply, resnet.resnet8_features, projection_head,
-            vmap_friendly=False)
+            vmap_friendly=False, client_batched=True)
     if task.model == "resnet50":
         return ModelBundle(
             "resnet50",
             lambda rng: resnet.resnet50_init(rng, task.num_classes,
                                              projection_head=projection_head),
             resnet.resnet50_apply, resnet.resnet50_features, projection_head,
-            vmap_friendly=False)
+            vmap_friendly=False, client_batched=True)
     if task.model == "mlp":
         h = 4 * width                    # width=16 default -> [64, 64]
         return ModelBundle(

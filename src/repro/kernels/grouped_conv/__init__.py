@@ -1,0 +1,4 @@
+from repro.kernels.grouped_conv.ops import client_batched_conv  # noqa: F401
+from repro.kernels.grouped_conv.ref import (  # noqa: F401
+    grouped_pack_conv, naive_vmap_conv,
+)

@@ -1,0 +1,78 @@
+"""Client-batched convolution forward — Pallas TPU kernel.
+
+One grid step computes one (client, example) output plane as an im2col
+blocked matmul: the kh*kw filter taps are accumulated as
+
+    acc (OH*OW, Cin) @ w[k, i, j] (Cin, Cout)
+
+on the MXU, with the shifted input patch sliced from the (pre-padded) VMEM
+block — the patch matrix is never materialized in HBM (implicit im2col).
+Grid: ``(K, N)`` — each client's weights are loaded once per example block
+and every client convolves with ITS OWN filters, which is exactly the
+computation the batched executors need and the thing a vmapped
+``conv_general_dilated`` lowers badly.
+
+Layout notes (see the Pallas guide's tiling constraints): channel axes are
+padded to 128 lanes by ``ops.py`` before the call, so the dot shapes are
+lane-aligned; spatial padding (SAME) also happens outside — the kernel
+always computes a VALID conv over the padded block.  Strided taps use a
+strided ``lax.slice``; validated in interpret mode (CI runs every kernel
+test there), real-TPU Mosaic validation is a listed follow-up since this
+tree has no TPU attached.
+
+The backward runs through the pure-JAX formulas in ``ref.py`` (grouped
+transposed conv for dx, shift-GEMM for dw) via the custom VJP in
+``ops.py``; a fused backward kernel is a follow-up.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(x_ref, w_ref, out_ref, *, stride: int, kh: int, kw: int,
+                oh: int, ow: int):
+    """One (client, example): VALID conv of the padded plane with one
+    client's filters, accumulated tap by tap on the MXU."""
+    xv = x_ref[0, 0]                                   # (Hp, Wp, Cin)
+    cin = xv.shape[-1]
+    cout = w_ref.shape[-1]
+    acc = jnp.zeros((oh * ow, cout), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xv, (i, j, 0),
+                (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, cin),
+                (stride, stride, 1))                   # (OH, OW, Cin)
+            acc = acc + jnp.dot(patch.reshape(oh * ow, cin), w_ref[0, i, j],
+                                preferred_element_type=jnp.float32)
+    out_ref[0, 0] = acc.reshape(oh, ow, cout).astype(out_ref.dtype)
+
+
+def grouped_conv_fwd(x_padded: jax.Array, w: jax.Array, *, stride: int,
+                     oh: int, ow: int, interpret: bool = False) -> jax.Array:
+    """(K, N, Hp, Wp, Cin) ⊛ (K, kh, kw, Cin, Cout) -> (K, N, OH, OW, Cout).
+
+    ``x_padded`` already carries the SAME/VALID spatial padding; channel
+    axes should be lane-padded by the caller (``ops.py`` does both).
+    """
+    k, n, hp, wp, cin = x_padded.shape
+    kh, kw, cout = w.shape[1], w.shape[2], w.shape[4]
+    kernel = functools.partial(_fwd_kernel, stride=stride, kh=kh, kw=kw,
+                               oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(k, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, hp, wp, cin), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, kh, kw, cin, cout),
+                         lambda i, j: (i, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, oh, ow, cout),
+                               lambda i, j: (i, j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, n, oh, ow, cout), x_padded.dtype),
+        interpret=interpret,
+    )(x_padded, w)

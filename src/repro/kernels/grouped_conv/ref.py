@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for the client-batched convolution.
+
+The problem: a cohort of K clients holds K *different* conv weights, and the
+batched executors want one program that convolves every client's batch with
+its own kernel,
+
+    x (K, N, H, W, Cin) ⊛ w (K, kh, kw, Cin, Cout) -> (K, N, OH, OW, Cout).
+
+``naive_vmap_conv`` is what ``jax.vmap`` over clients produces today — a
+batched-weight convolution XLA lowers poorly on CPU (and that the executor
+benchmarks use as the baseline).  ``grouped_pack_conv`` rewrites it as ONE
+``lax.conv_general_dilated`` with ``feature_group_count=K``: the K client
+channel blocks are packed side by side (block-diagonal in channel space), so
+group g of the big conv sees exactly client g's channels and client g's
+filters.  Forward cost is identical FLOPs with none of the batching-rule
+overhead.
+
+Only the FORWARD rewrite lives here.  Differentiating ``grouped_pack_conv``
+directly is a trap: XLA expresses the rhs-gradient of a feature-grouped conv
+as a ``batch_group_count`` convolution, which is catastrophically slow on
+CPU (measured ~65x slower than the formulas in ``ops.py``) — which is why
+``ops.client_batched_conv`` wraps this oracle in a custom VJP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DIMS = ("NHWC", "HWIO", "NHWC")
+
+
+def conv_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+             padding: str = "SAME") -> jax.Array:
+    """Single-client reference: (N, H, W, Cin) ⊛ (kh, kw, Cin, Cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=DIMS)
+
+
+def naive_vmap_conv(x: jax.Array, w: jax.Array, stride: int = 1,
+                    padding: str = "SAME") -> jax.Array:
+    """The executor's historical path: vmap the per-client conv over K.
+
+    Lowers to batched-weight convolutions (the ROADMAP's "vmap over
+    per-client conv weights lowers poorly" item); kept as the benchmark
+    baseline and the semantics oracle for tests.
+    """
+    return jax.vmap(lambda x1, w1: conv_ref(x1, w1, stride, padding))(x, w)
+
+
+def same_pads(size: int, k: int, stride: int) -> tuple[int, int, int]:
+    """(out_size, pad_lo, pad_hi) of a SAME conv along one spatial axis."""
+    out = -(-size // stride)
+    pad = max((out - 1) * stride + k - size, 0)
+    lo = pad // 2
+    return out, lo, pad - lo
+
+
+def valid_pads(size: int, k: int, stride: int) -> tuple[int, int, int]:
+    return (size - k) // stride + 1, 0, 0
+
+
+def resolve_pads(size: int, k: int, stride: int, padding: str):
+    if padding == "SAME":
+        return same_pads(size, k, stride)
+    if padding == "VALID":
+        return valid_pads(size, k, stride)
+    raise ValueError(f"padding must be 'SAME' or 'VALID', got {padding!r}")
+
+
+def grouped_pack_conv(x: jax.Array, w: jax.Array, stride: int = 1,
+                      padding: str = "SAME") -> jax.Array:
+    """The K-vmapped conv as ONE feature-grouped convolution.
+
+    Channel packing: x (K, N, H, W, Cin) -> (N, H, W, K*Cin) with client k's
+    channels occupying block k; w -> (kh, kw, Cin, K*Cout) with client k's
+    filters producing output block k.  ``feature_group_count=K`` makes the
+    big conv block-diagonal over clients — no cross-client mixing.
+    """
+    k, n, h, wd, cin = x.shape
+    kh, kw, cout = w.shape[1], w.shape[2], w.shape[4]
+    xg = jnp.transpose(x, (1, 2, 3, 0, 4)).reshape(n, h, wd, k * cin)
+    wg = jnp.transpose(w, (1, 2, 3, 0, 4)).reshape(kh, kw, cin, k * cout)
+    out = jax.lax.conv_general_dilated(
+        xg, wg, (stride, stride), padding, dimension_numbers=DIMS,
+        feature_group_count=k)
+    oh, ow = out.shape[1], out.shape[2]
+    return out.reshape(n, oh, ow, k, cout).transpose(3, 0, 1, 2, 4)
+
+
+def grouped_conv_dx(dy: jax.Array, w: jax.Array, stride: int, h: int,
+                    wd: int, padding: str = "SAME") -> jax.Array:
+    """Input gradient as ONE feature-grouped transposed convolution.
+
+    dx = conv(dy dilated by the stride, w rotated 180° with Cin/Cout
+    swapped), still block-diagonal over clients.  Crucially this is a
+    *feature*-grouped conv again (the lhs-transpose of a feature-grouped
+    conv stays feature-grouped), so it avoids the batch-grouped lowering
+    that makes autodiff of ``grouped_pack_conv`` pathological on CPU.
+    """
+    k, n, oh, ow, cout = dy.shape
+    kh, kw, cin = w.shape[1], w.shape[2], w.shape[3]
+    _, lo_h, _ = resolve_pads(h, kh, stride, padding)
+    _, lo_w, _ = resolve_pads(wd, kw, stride, padding)
+    wr = jnp.flip(w, axis=(1, 2)).transpose(0, 1, 2, 4, 3)
+    dyg = jnp.transpose(dy, (1, 2, 3, 0, 4)).reshape(n, oh, ow, k * cout)
+    wg = jnp.transpose(wr, (1, 2, 3, 0, 4)).reshape(kh, kw, cout, k * cin)
+    out = jax.lax.conv_general_dilated(
+        dyg, wg, (1, 1),
+        [(kh - 1 - lo_h, h - ((oh - 1) * stride + 1) + lo_h),
+         (kw - 1 - lo_w, wd - ((ow - 1) * stride + 1) + lo_w)],
+        lhs_dilation=(stride, stride), dimension_numbers=DIMS,
+        feature_group_count=k)
+    return out.reshape(n, h, wd, k, cin).transpose(3, 0, 1, 2, 4)
+
+
+def shift_gemm_dw(x: jax.Array, dy: jax.Array, stride: int,
+                  kh: int, kw: int, padding: str = "SAME") -> jax.Array:
+    """Weight gradient as kh*kw K-batched GEMMs (implicit im2col).
+
+    dw[k, i, j] = x_shifted(i, j)ᵀ · dy — each (i, j) tap is one
+    ``dot_general`` with the client axis as the GEMM batch dimension, which
+    CPUs and TPUs both lower as clean batched matmuls.  This replaces the
+    ``batch_group_count`` convolution XLA would emit for the rhs-gradient
+    (measured up to ~10x faster on strided and 1x1 layers, ~parity on
+    stride-1 3x3 — see ROADMAP).
+    """
+    k, n, h, wd, cin = x.shape
+    oh, ow, cout = dy.shape[2], dy.shape[3], dy.shape[4]
+    _, lo_h, hi_h = resolve_pads(h, kh, stride, padding)
+    _, lo_w, hi_w = resolve_pads(wd, kw, stride, padding)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    dyf = dy.reshape(k, n * oh * ow, cout)
+    taps = []
+    for i in range(kh):
+        for j in range(kw):
+            xs = jax.lax.slice(
+                xp, (0, 0, i, j, 0),
+                (k, n, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1,
+                 cin),
+                (1, 1, stride, stride, 1)).reshape(k, n * oh * ow, cin)
+            taps.append(jax.lax.dot_general(
+                xs, dyf, (((1,), (1,)), ((0,), (0,)))))
+    return jnp.stack(taps, 1).reshape(k, kh, kw, cin, cout)

@@ -46,9 +46,18 @@ def dense_bias_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32) ->
 
 
 def dense(params: Params, x: jax.Array) -> jax.Array:
+    """``x @ w (+ b)``; client-stacked params ride the same line.
+
+    With ``w`` (K, in, out) against ``x`` (K, B, in) — the batched
+    executors' client-stacked route — the matmul broadcasts to a K-batched
+    GEMM; only the bias needs an explicit broadcast axis.
+    """
     y = x @ params["w"].astype(x.dtype)
     if "b" in params:
-        y = y + params["b"].astype(x.dtype)
+        b = params["b"].astype(x.dtype)
+        if b.ndim == 2:          # stacked (K, out): broadcast over the
+            b = b.reshape((b.shape[0],) + (1,) * (y.ndim - 2) + (-1,))
+        y = y + b                # activation axes between K and out
     return y
 
 
@@ -87,15 +96,25 @@ def groupnorm_init(channels: int, dtype=jnp.float32) -> Params:
 
 
 def groupnorm(params: Params, x: jax.Array, num_groups: int, eps: float = 1e-5) -> jax.Array:
-    """GroupNorm over NHWC inputs (the paper swaps BatchNorm→GroupNorm for FL)."""
-    n, h, w, c = x.shape
+    """GroupNorm over NHWC inputs (the paper swaps BatchNorm→GroupNorm for FL).
+
+    Shape-agnostic over leading axes: ``(..., H, W, C)`` normalizes per
+    (leading..., group) over (H, W, channels-in-group), so the batched
+    executors' client-stacked activations ``(K, B, H, W, C)`` — with
+    stacked ``(K, C)`` scale/bias — reuse the exact single-client math.
+    """
+    *lead, h, w, c = x.shape
     dtype = x.dtype
-    x = x.astype(jnp.float32).reshape(n, h, w, num_groups, c // num_groups)
-    mean = jnp.mean(x, axis=(1, 2, 4), keepdims=True)
-    var = jnp.var(x, axis=(1, 2, 4), keepdims=True)
+    x = x.astype(jnp.float32).reshape(*lead, h, w, num_groups, c // num_groups)
+    mean = jnp.mean(x, axis=(-4, -3, -1), keepdims=True)
+    var = jnp.var(x, axis=(-4, -3, -1), keepdims=True)
     x = (x - mean) * jax.lax.rsqrt(var + eps)
-    x = x.reshape(n, h, w, c)
-    return (x * params["scale"] + params["bias"]).astype(dtype)
+    x = x.reshape(*lead, h, w, c)
+    scale, bias = params["scale"], params["bias"]
+    if scale.ndim == 2:          # client-stacked (K, C) against (K, B, H, W, C)
+        scale = scale[:, None, None, None, :]
+        bias = bias[:, None, None, None, :]
+    return (x * scale + bias).astype(dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,16 @@ do the same.  NHWC layout, pure JAX.
 
 ``resnet8``  : 3 stages × 1 basic block (16/32/64 ch) — the paper's CIFAR net.
 ``resnet50`` : standard bottleneck [3,4,6,3] — the paper's Tiny-ImageNet net.
+
+Client-stacked route: every apply/features function here is pytree-pure
+over a LEADING CLIENT AXIS — called with per-client stacked params (conv
+weights ``(K, kh, kw, Cin, Cout)``, norms ``(K, C)``) and stacked inputs
+``(K, B, H, W, C)``, ``conv`` detects the 5-D weights and dispatches to the
+fused ``kernels.grouped_conv.client_batched_conv`` (one feature-grouped
+conv + custom VJP) instead of K separate convolutions.  That is what lets
+the batched executors run a whole cohort's forward+backward as one clean
+program rather than vmapping conv weights (which XLA lowers poorly — see
+ROADMAP).  Single-client calls are bit-for-bit unchanged.
 """
 from __future__ import annotations
 
@@ -28,8 +38,13 @@ def conv_init(key: jax.Array, kh: int, kw: int, cin: int, cout: int,
 
 def conv(params: Params, x: jax.Array, stride: int = 1,
          padding: str = "SAME") -> jax.Array:
+    w = params["w"].astype(x.dtype)
+    if w.ndim == 5:              # client-stacked (K, kh, kw, Cin, Cout)
+        from repro.kernels.grouped_conv import ops as grouped_ops
+        return grouped_ops.client_batched_conv(x, w, stride=stride,
+                                               padding=padding)
     return jax.lax.conv_general_dilated(
-        x, params["w"].astype(x.dtype), (stride, stride), padding,
+        x, w, (stride, stride), padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
@@ -51,7 +66,7 @@ def basic_block_init(key: jax.Array, cin: int, cout: int, dtype=jnp.float32) -> 
 
 
 def basic_block(params: Params, x: jax.Array, stride: int) -> jax.Array:
-    g = _gn_groups(params["gn1"]["scale"].shape[0])
+    g = _gn_groups(params["gn1"]["scale"].shape[-1])
     y = conv(params["conv1"], x, stride)
     y = jax.nn.relu(layers.groupnorm(params["gn1"], y, g))
     y = conv(params["conv2"], y, 1)
@@ -59,7 +74,7 @@ def basic_block(params: Params, x: jax.Array, stride: int) -> jax.Array:
     if "proj" in params:
         x = conv(params["proj"], x, stride)
     elif stride != 1:
-        x = x[:, ::stride, ::stride, :]
+        x = x[..., ::stride, ::stride, :]
     return jax.nn.relu(x + y)
 
 
@@ -80,8 +95,8 @@ def bottleneck_init(key: jax.Array, cin: int, cmid: int, dtype=jnp.float32) -> P
 
 
 def bottleneck(params: Params, x: jax.Array, stride: int) -> jax.Array:
-    c1 = params["gn1"]["scale"].shape[0]
-    c3 = params["gn3"]["scale"].shape[0]
+    c1 = params["gn1"]["scale"].shape[-1]
+    c3 = params["gn3"]["scale"].shape[-1]
     y = jax.nn.relu(layers.groupnorm(params["gn1"], conv(params["conv1"], x, 1),
                                      _gn_groups(c1)))
     y = jax.nn.relu(layers.groupnorm(params["gn2"], conv(params["conv2"], y, stride),
@@ -119,13 +134,13 @@ def resnet8_init(key: jax.Array, num_classes: int, width: int = 16,
 
 def resnet8_features(params: Params, x: jax.Array) -> jax.Array:
     """Penultimate features (the paper's t-SNE layer). x: (N, H, W, 3)."""
-    w = params["gn0"]["scale"].shape[0]
+    w = params["gn0"]["scale"].shape[-1]
     h = jax.nn.relu(layers.groupnorm(params["gn0"], conv(params["stem"], x, 1),
                                      _gn_groups(w)))
     h = basic_block(params["block1"], h, 1)
     h = basic_block(params["block2"], h, 2)
     h = basic_block(params["block3"], h, 2)
-    h = jnp.mean(h, axis=(1, 2))
+    h = jnp.mean(h, axis=(-3, -2))
     if "proj_head" in params:
         h = jax.nn.relu(layers.dense(params["proj_head"]["fc1"], h))
         h = layers.dense(params["proj_head"]["fc2"], h)
@@ -166,13 +181,14 @@ def resnet50_init(key: jax.Array, num_classes: int, dtype=jnp.float32,
 def resnet50_features(params: Params, x: jax.Array) -> jax.Array:
     h = jax.nn.relu(layers.groupnorm(params["gn0"], conv(params["stem"], x, 2),
                                      _gn_groups(64)))
-    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
-                              (1, 2, 2, 1), "SAME")
+    lead = (1,) * (h.ndim - 3)     # (N,) or client-stacked (K, B)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, lead + (3, 3, 1),
+                              lead + (2, 2, 1), "SAME")
     for si, (cmid, blocks) in enumerate(_R50_STAGES):
         for bi in range(blocks):
             stride = 2 if (bi == 0 and si > 0) else 1
             h = bottleneck(params[f"s{si}b{bi}"], h, stride)
-    h = jnp.mean(h, axis=(1, 2))
+    h = jnp.mean(h, axis=(-3, -2))
     if "proj_head" in params:
         h = jax.nn.relu(layers.dense(params["proj_head"]["fc1"], h))
         h = layers.dense(params["proj_head"]["fc2"], h)

@@ -686,3 +686,154 @@ def test_shard_map_multidevice_subprocess_smoke():
                          capture_output=True, text=True, env=env, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "SMOKE_OK" in out.stdout
+
+
+# --- the client-batched conv route (resnet8, kernels/grouped_conv) ----------
+#
+# The paper's CV backbone: stacked per-client conv weights route through
+# kernels.grouped_conv instead of vmapping the round body.  Tiny shapes
+# (16x16 images, width 8) keep compiles CI-sized; lr is small so fp32
+# reassociation across the grouped rewrite stays far inside 1e-5.
+
+RESNET_SIZES = (5, 9, 12, 20, 8, 16)        # ragged, 6 clients (mesh-padded)
+
+
+@pytest.fixture(scope="module")
+def resnet_setup():
+    from repro.configs.paper import CIFAR10
+    from repro.data.synthetic import SyntheticImageTask
+    task = dataclasses.replace(CIFAR10, n_clients=len(RESNET_SIZES),
+                               participation=1.0, batch_size=8, rounds=2,
+                               local_epochs=1, image_hw=16, lr=0.01)
+    gen = SyntheticImageTask(task.num_classes, hw=task.image_hw, seed=0)
+    clients = [ClientData(*gen.generate(n, seed=100 + i))
+               for i, n in enumerate(RESNET_SIZES)]
+    tx, ty = gen.generate(64, seed=999)
+    return task, FederatedData(clients, tx, ty,
+                               np.zeros((len(RESNET_SIZES),
+                                         task.num_classes)))
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fedgkd"])
+def test_resnet8_vmap_matches_sequential(resnet_setup, name):
+    """seq vs vmap on the conv backbone: the vmap executor must pick the
+    client-batched body (telemetry) and reproduce the reference < 1e-5."""
+    task, data = resnet_setup
+    hs = fl_loop.run_federated(task, algorithms.make(name), data, seed=0,
+                               width=8, executor="sequential")
+    hv = fl_loop.run_federated(task, algorithms.make(name), data, seed=0,
+                               width=8, executor="vmap")
+    assert hv.telemetry["round_body"] == "client_batched"
+    assert _max_param_diff(hs.final_params, hv.final_params) < 1e-5
+    for rs, rv in zip(hs.records, hv.records):
+        assert abs(rs.mean_local_loss - rv.mean_local_loss) < 1e-5
+        assert abs(rs.test_acc - rv.test_acc) < 1e-5
+
+
+def test_resnet8_naive_body_still_available(resnet_setup):
+    """client_batched=False forces the historical vmapped-conv body (the
+    conv benchmark's baseline) and still matches the batched body."""
+    task, data = resnet_setup
+    hn = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                               width=8, executor="vmap",
+                               client_batched=False)
+    hb = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                               width=8, executor="vmap")
+    assert hn.telemetry["round_body"] == "vmap"
+    assert hb.telemetry["round_body"] == "client_batched"
+    assert _max_param_diff(hn.final_params, hb.final_params) < 1e-5
+
+
+def test_resnet8_async_inner_matches_sequential(resnet_setup):
+    """Async degenerate regime with the vmap (client-batched) inner."""
+    task, data = resnet_setup
+    hs = fl_loop.run_federated(task, algorithms.make("fedgkd"), data, seed=0,
+                               width=8, rounds=2, executor="sequential")
+    ha = fl_loop.run_federated(
+        task, algorithms.make("fedgkd"), data, seed=0, width=8, rounds=2,
+        executor=ex.AsyncExecutor(staleness="constant", inner="vmap"))
+    assert _max_param_diff(hs.final_params, ha.final_params) < 1e-5
+
+
+def test_resnet8_auto_resolution():
+    """'auto' now selects the batched route for conv backbones (closing
+    the ROADMAP caveat) — but only when the algorithm has a stacked loss."""
+    from repro.configs.paper import CIFAR10
+    from repro.core.modelzoo import make_model
+    model = make_model(CIFAR10)
+    assert model.client_batched and not model.vmap_friendly
+    assert ex.get_executor("auto", algorithms.make("fedavg"), 4,
+                           model).name == "vmap"
+    # moon overrides loss_fn without a stacked form -> sequential
+    moon_model = make_model(CIFAR10, projection_head=True)
+    assert ex.get_executor("auto", algorithms.make("moon"), 4,
+                           moon_model).name == "sequential"
+
+
+def test_round_context_client_batched_flag():
+    from repro.configs.paper import CIFAR10, TOY
+    from repro.core.modelzoo import make_model
+    from repro.optim import sgd
+    mk = lambda task, algo, cb: ex.RoundContext(
+        algo=algorithms.make(algo), model=make_model(task), opt=sgd(),
+        lr=0.1, batch_size=8, epochs=1, client_batched=cb)
+    assert mk(CIFAR10, "fedavg", "auto").batched_local_update is not None
+    assert mk(CIFAR10, "fedavg", False).batched_local_update is None
+    assert mk(TOY, "fedavg", "auto").batched_local_update is None  # mlp
+    assert mk(CIFAR10, "moon", "auto").batched_local_update is None
+    with pytest.raises(ValueError, match="client_batched=True"):
+        mk(TOY, "fedavg", True)
+
+
+@multidevice
+def test_resnet8_shard_map_strict_matches_sequential(resnet_setup):
+    """K=6 ragged resnet8 cohort on the 8-device mesh, strict (no
+    fallback): each shard trains its resident clients through the
+    client-batched grouped-conv body; < 1e-5 vs sequential."""
+    task, data = resnet_setup
+    hs = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                               width=8, executor="sequential")
+    hm = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                               width=8,
+                               executor=ex.ShardMapExecutor(strict=True))
+    assert hm.telemetry["route"] == "shard_map"
+    assert hm.telemetry["round_body"] == "client_batched"
+    assert _max_param_diff(hs.final_params, hm.final_params) < 1e-5
+
+
+def test_resnet8_adam_matches_sequential(resnet_setup):
+    """Adam's scalar step-count state leaf must stay per-client on the
+    batched route (the opt init/update are vmapped) — regression for the
+    keep-mask breaking on scalar optimizer state."""
+    task, data = resnet_setup
+    task = dataclasses.replace(task, optimizer="adam", lr=1e-3,
+                               weight_decay=0.0)
+    hs = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                               width=8, rounds=1, executor="sequential")
+    hv = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                               width=8, rounds=1, executor="vmap")
+    assert hv.telemetry["round_body"] == "client_batched"
+    assert _max_param_diff(hs.final_params, hv.final_params) < 1e-5
+
+
+def test_batched_loss_guard_on_loss_override():
+    """A subclass overriding loss_fn WITHOUT a stacked form must not
+    inherit the parent's batched loss (it would silently train the wrong
+    objective on the batched route)."""
+    from repro.configs.paper import CIFAR10
+    from repro.core.modelzoo import make_model
+    model = make_model(CIFAR10)
+
+    class CustomGKD(algorithms.FedGKD):
+        def loss_fn(self, m):
+            return super().loss_fn(m)
+
+    class CustomProx(algorithms.FedProx):
+        def loss_fn(self, m):
+            return super().loss_fn(m)
+
+    assert CustomGKD().batched_loss_fn(model) is None
+    assert CustomProx().batched_loss_fn(model) is None
+    # inheriting BOTH unchanged keeps the batched form (fedgkd+)
+    ph = make_model(CIFAR10, projection_head=True)
+    assert algorithms.FedGKDPlus().batched_loss_fn(ph) is not None
