@@ -10,14 +10,19 @@ both artifacts with the shared ``cases`` schema:
     to target accuracy, async vs the synchronous straggler barrier);
   * ``BENCH_conv.json`` — ``speedup_vs_naive_vmap`` (client-batched
     grouped-conv round body vs the historical vmapped-conv body on the
-    resnet8 cohort).
+    resnet8 cohort);
+  * ``BENCH_population.json`` — LOWER-is-better resource metrics from the
+    million-client population-tier run: ``peak_host_rss_mb`` (the warm-cap
+    memory bound held) and ``sample_latency_ms`` (the O(cohort) draw), plus
+    the population-independence ratio ``sample_ratio_1m_vs_10k``.
 
 A case is keyed by ``(algo, executor, epochs, precompute, buffer_size,
-model, conv_route)`` (the last two ``None`` for pre-conv artifacts);
-only keys present in BOTH files are compared (the baseline may predate
-newer cases), and a metric regresses when
+model, conv_route, population)`` (trailing fields ``None`` for artifacts
+predating them); only keys present in BOTH files are compared (the
+baseline may predate newer cases), and a metric regresses when
 
-    new_speedup < baseline_speedup * (1 - tolerance)
+    new_speedup < baseline_speedup * (1 - tolerance)      # higher-better
+    new_cost    > baseline_cost    * (1 + tolerance)      # lower-better
 
 Exit code 1 on any regression — the nightly CI jobs fail on it.
 
@@ -32,12 +37,16 @@ import json
 
 METRICS = ("speedup_vs_sequential", "speedup_vs_no_precompute",
            "sim_speedup_vs_sync", "speedup_vs_naive_vmap")
+# resource costs: regression direction is inverted (new may not EXCEED
+# baseline * (1 + tolerance)) — an RSS or latency DROP is never a failure
+METRICS_LOWER = ("peak_host_rss_mb", "sample_latency_ms",
+                 "sample_ratio_1m_vs_10k")
 
 
 def case_key(row: dict) -> tuple:
     return (row["algo"], row["executor"], row["epochs"],
             bool(row.get("precompute")), row.get("buffer_size"),
-            row.get("model"), row.get("conv_route"))
+            row.get("model"), row.get("conv_route"), row.get("population"))
 
 
 def index_cases(payload: dict) -> dict:
@@ -49,14 +58,17 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[dict]:
     base_idx, new_idx = index_cases(baseline), index_cases(fresh)
     rows = []
     for key in sorted(set(base_idx) & set(new_idx), key=str):
-        for metric in METRICS:
+        for metric in METRICS + METRICS_LOWER:
             b = base_idx[key].get(metric)
             n = new_idx[key].get(metric)
             if b is None or n is None:
                 continue
+            if metric in METRICS_LOWER:
+                ok = float(n) <= float(b) * (1.0 + tolerance)
+            else:
+                ok = float(n) >= float(b) * (1.0 - tolerance)
             rows.append({"key": key, "metric": metric, "base": float(b),
-                         "new": float(n),
-                         "ok": float(n) >= float(b) * (1.0 - tolerance)})
+                         "new": float(n), "ok": ok})
     return rows
 
 
@@ -94,10 +106,10 @@ def main(argv=None) -> int:
               f"{r['base']:>7.3f} {r['new']:>7.3f}  "
               f"{'ok' if r['ok'] else 'REGRESSED'}")
     if bad:
-        print(f"\n{len(bad)} speedup(s) regressed by more than "
+        print(f"\n{len(bad)} metric(s) regressed by more than "
               f"{args.tolerance:.0%} vs {args.baseline}")
         return 1
-    print(f"\nall {len(rows)} shared speedups within {args.tolerance:.0%} "
+    print(f"\nall {len(rows)} shared metrics within {args.tolerance:.0%} "
           f"of baseline")
     return 0
 

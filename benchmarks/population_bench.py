@@ -1,0 +1,193 @@
+"""Population-tier benchmark: million-client cohorts with bounded host RSS.
+
+Two measurements, written to ``BENCH_population.json`` at the repo root (the
+nightly ``population-bench`` job gates it via ``compare_bench.py``):
+
+  * SAMPLING — mean wall-clock of one hierarchical K-cohort draw at the
+    full population vs a 10k control.  The draw is O(n_shards + cohort);
+    the recorded ``sample_ratio_1m_vs_10k`` pins "cost independent of
+    population" (the run itself fails if the ratio exceeds 2x, before any
+    baseline comparison).  A flat ``rng.choice`` over the million ids is
+    timed alongside as the O(population) reference the tier replaced.
+
+  * END-TO-END — ``run_federated(population=...)`` over the full synthetic
+    population for a few rounds with a ``--warm-cap`` working set, on the
+    shard_map route when the host has multiple devices (force them with
+    ``--host-devices 8``).  Records ``peak_host_rss_mb`` (VmHWM — the
+    memory bound the warm cap holds) plus the tier counters; the run fails
+    in-place if ``peak_warm`` ever exceeded the cap.
+
+    PYTHONPATH=src python benchmarks/population_bench.py --host-devices 8
+    PYTHONPATH=src python benchmarks/population_bench.py \
+        --population 100000 --rounds 2            # faster local smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.paper import TOY
+from repro.core import algorithms, fl_loop
+from repro.population import HierarchicalSampler, Population, even_shard_sizes
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def peak_rss_mb() -> float:
+    """Process high-water RSS in MB (VmHWM; ru_maxrss fallback)."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return float(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def time_sampling(n_clients: int, shard_size: int, k: int, reps: int,
+                  seed: int = 0) -> float:
+    """Mean milliseconds per K-cohort hierarchical draw at ``n_clients``."""
+    sampler = HierarchicalSampler(even_shard_sizes(n_clients, shard_size))
+    rng = np.random.default_rng(seed)
+    sampler.sample(rng, k)                       # warm any lazy state
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        sampler.sample(rng, k)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def time_flat_choice(n_clients: int, k: int, reps: int,
+                     seed: int = 0) -> float:
+    """The historical O(population) draw, for the comparison table."""
+    rng = np.random.default_rng(seed)
+    rng.choice(n_clients, size=k, replace=False)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        rng.choice(n_clients, size=k, replace=False)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--population", type=int, default=1_000_000)
+    ap.add_argument("--control-population", type=int, default=10_000,
+                    help="the small population the sampling ratio compares "
+                         "against (cost must be within 2x of it)")
+    ap.add_argument("--cohort", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--warm-cap", type=int, default=256,
+                    help="warm-tier client cap == the host memory bound")
+    ap.add_argument("--shard-size", type=int, default=4096)
+    ap.add_argument("--sample-reps", type=int, default=200)
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force this many XLA host-platform devices (the "
+                         "multi-device shard_map case on a CPU box); must "
+                         "run before jax initializes a backend")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_population.json"))
+    args = ap.parse_args(argv)
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}"
+        ).strip()
+        if len(jax.devices()) != args.host_devices:
+            sys.exit(f"--host-devices {args.host_devices} requested but jax "
+                     f"already initialized {len(jax.devices())} device(s); "
+                     f"set XLA_FLAGS in the environment instead")
+
+    n, k = args.population, args.cohort
+
+    # -- sampling: O(cohort) draw must not scale with the population -------
+    big_ms = time_sampling(n, args.shard_size, k, args.sample_reps)
+    small_ms = time_sampling(args.control_population, args.shard_size, k,
+                             args.sample_reps)
+    flat_ms = time_flat_choice(n, k, max(args.sample_reps // 10, 5))
+    ratio = big_ms / small_ms
+    print(f"sampling K={k}: {n:,} clients {big_ms:.4f} ms | "
+          f"{args.control_population:,} clients {small_ms:.4f} ms | "
+          f"ratio {ratio:.2f}x | flat rng.choice({n:,}) {flat_ms:.3f} ms")
+    if ratio > 2.0:
+        print(f"FAIL: hierarchical draw at {n:,} clients is {ratio:.2f}x "
+              f"the {args.control_population:,}-client cost (limit 2x) — "
+              f"sampling is no longer population-independent")
+        return 1
+
+    # -- end-to-end: bounded-RSS training over the full population ---------
+    population = Population.synthetic(n, warm_cap=args.warm_cap,
+                                      shard_size=args.shard_size,
+                                      min_n=8, max_n=24, seed=0, n_test=128)
+    task = dataclasses.replace(TOY, n_clients=n, participation=k / n,
+                               rounds=args.rounds, local_epochs=1,
+                               batch_size=16)
+    route = "shard_map" if len(jax.devices()) > 1 else "vmap"
+    rss_before = peak_rss_mb()
+    t0 = time.perf_counter()
+    hist = fl_loop.run_federated(task, algorithms.make("fedavg"),
+                                 population=population, seed=0,
+                                 executor=route, width=args.width,
+                                 eval_every=max(args.rounds, 1))
+    wall = time.perf_counter() - t0
+    stats = hist.telemetry["population"]
+    rss = peak_rss_mb()
+    print(f"e2e [{route}] {args.rounds} rounds x K={k} over {n:,} clients: "
+          f"{wall:.1f} s wall, peak RSS {rss:.0f} MB "
+          f"(before run: {rss_before:.0f} MB)")
+    print(f"    tiers: cold_loads={stats['cold_loads']} "
+          f"warm_hits={stats['warm_hits']} peak_warm={stats['peak_warm']} "
+          f"warm_evictions={stats['warm_evictions']} "
+          f"n_shards={stats['n_shards']}")
+    if stats["peak_warm"] > args.warm_cap:
+        print(f"FAIL: peak_warm {stats['peak_warm']} exceeded the warm cap "
+              f"{args.warm_cap} — the memory bound did not hold")
+        return 1
+
+    payload = {
+        "task": "toy",
+        "devices": len(jax.devices()),
+        "backend": jax.default_backend(),
+        "clients": k,
+        "width": args.width,
+        "population": n,
+        "warm_cap": args.warm_cap,
+        "shard_size": args.shard_size,
+        "cases": [
+            {"algo": "sampler", "executor": "host", "epochs": 0,
+             "precompute": False, "population": n,
+             "sample_latency_ms": round(big_ms, 5),
+             "sample_latency_small_ms": round(small_ms, 5),
+             "sample_ratio_1m_vs_10k": round(ratio, 4),
+             "flat_choice_ms": round(flat_ms, 4),
+             "control_population": args.control_population,
+             "cohort": k, "n_shards": int(population.n_shards)},
+            {"algo": "fedavg", "executor": route, "epochs": 1,
+             "precompute": False, "population": n,
+             "peak_host_rss_mb": round(rss, 1),
+             "rss_before_run_mb": round(rss_before, 1),
+             "wall_s": round(wall, 2), "rounds": args.rounds,
+             "cohort": k, "warm_cap": args.warm_cap,
+             "final_acc": hist.records[-1].test_acc,
+             **{f"tier_{key}": val for key, val in stats.items()
+                if isinstance(val, (int, float))}},
+        ],
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

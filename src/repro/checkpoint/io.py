@@ -7,14 +7,18 @@ persist its global-model buffer.
 """
 from __future__ import annotations
 
+import logging
 import os
 import re
+import zipfile
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+_LOG = logging.getLogger("repro.checkpoint")
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -44,10 +48,19 @@ def save_pytree(path: str, tree: Any, meta: dict | None = None) -> None:
         if v.dtype.kind == "V" or str(v.dtype) == "bfloat16":
             flat[k] = v.view(np.uint16) if v.dtype.itemsize == 2 else v
     flat["__dtypes__"] = np.frombuffer(msgpack.packb(dtypes), np.uint8)
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    final = path if path.endswith(".npz") else path + ".npz"
+    # write-to-temp + atomic replace: a crash mid-save leaves a .tmp file
+    # (ignored by load_latest's round pattern), never a truncated .npz
+    # that a later restart would trip over
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, final)
     if meta is not None:
-        with open(re.sub(r"\.npz$", "", path) + ".meta", "wb") as f:
+        mtmp = re.sub(r"\.npz$", "", path) + ".meta.tmp"
+        with open(mtmp, "wb") as f:
             f.write(msgpack.packb(meta))
+        os.replace(mtmp, mtmp[:-4])
 
 
 def load_pytree(path: str, like: Any) -> Any:
@@ -84,7 +97,26 @@ def save_round(ckpt_dir: str, rnd: int, tree: Any, meta: dict | None = None) -> 
     return path
 
 
+# what a partial / corrupt round file raises out of np.load + unpack:
+# truncated zip central directory (BadZipFile), zero-byte file (EOF/OSError
+# variants), a member cut mid-stream (zlib -> OSError subclass), a file
+# missing keys or the dtype sidecar (KeyError), or garbage msgpack
+_CORRUPT_ERRORS = (zipfile.BadZipFile, EOFError, OSError, KeyError,
+                   ValueError, msgpack.exceptions.UnpackException)
+
+
 def load_latest(ckpt_dir: str, like: Any) -> tuple[Any, int] | None:
+    """Resume from the newest LOADABLE round file.
+
+    A crash mid-``save_pytree`` historically left a truncated ``.npz``
+    that surfaced as an opaque ``BadZipFile``/``EOFError`` deep inside
+    ``np.load`` on the next restart.  New saves are atomic (temp +
+    replace), but checkpoints written by older code — or torn by the
+    filesystem — still exist; this walks rounds newest-first, skips any
+    file that fails to load (with a warning naming it), and raises a
+    clear ``RuntimeError`` only when EVERY round file is unreadable
+    (silently restarting from scratch would discard training history).
+    """
     if not os.path.isdir(ckpt_dir):
         return None
     rounds = sorted(
@@ -92,6 +124,16 @@ def load_latest(ckpt_dir: str, like: Any) -> tuple[Any, int] | None:
         if (m := re.match(r"round_(\d+)\.npz$", f)))
     if not rounds:
         return None
-    rnd = rounds[-1]
-    tree = load_pytree(os.path.join(ckpt_dir, f"round_{rnd:06d}.npz"), like)
-    return tree, rnd
+    failures: list[str] = []
+    for rnd in reversed(rounds):
+        path = os.path.join(ckpt_dir, f"round_{rnd:06d}.npz")
+        try:
+            return load_pytree(path, like), rnd
+        except _CORRUPT_ERRORS as e:
+            failures.append(f"{path}: {type(e).__name__}: {e}")
+            _LOG.warning("skipping unreadable checkpoint %s (%s: %s)",
+                         path, type(e).__name__, e)
+    raise RuntimeError(
+        "load_latest: every round file in %r is partial or corrupt "
+        "(crash mid-save?). Remove the directory to restart from scratch.\n  "
+        % ckpt_dir + "\n  ".join(failures))

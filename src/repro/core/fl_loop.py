@@ -102,7 +102,9 @@ def evaluate(model: ModelBundle, params: Any, x: np.ndarray, y: np.ndarray,
     return sum(accs) / n, sum(losses) / n
 
 
-def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
+def run_federated(task: PaperTask, algo: Algorithm,
+                  data: Optional[FederatedData] = None, *,
+                  population=None,
                   rounds: Optional[int] = None, seed: int = 0,
                   eval_every: int = 1, max_batches_per_client: int | None = None,
                   verbose: bool = False, width: int = 16,
@@ -111,6 +113,15 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
                   precompute: "bool | str" = "auto",
                   client_batched: "bool | str" = "auto") -> History:
     """Run T communication rounds of ``algo`` on the partitioned data.
+
+    ``data`` is the eager in-memory dataset (``FederatedData``); for
+    large populations pass ``population=`` (a ``repro.population.
+    Population``) instead — clients then materialize lazily through the
+    cold/warm/hot tiers, cohorts come from the hierarchical O(cohort)
+    sampler (``n_shards=1`` reproduces the flat ``rng.choice`` sequence
+    bit-identically), per-client algorithm state moves into the same
+    tiers, and tier hit/miss/eviction counters surface on
+    ``History.telemetry["population"]``.
 
     ``executor`` selects the client-execution strategy: ``"sequential"``,
     ``"vmap"``, ``"shard_map"``, ``"async"`` (buffered straggler-aware
@@ -130,6 +141,12 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
     the model + algorithm support it; ``False`` forces the historical
     vmapped body — the conv benchmarks' naive baseline).
     """
+    if (data is None) == (population is None):
+        raise ValueError("pass exactly one of data= (eager FederatedData) "
+                         "or population= (repro.population.Population)")
+    pop = population
+    if pop is not None:
+        data = pop      # duck-typed: clients[cid] / test_x / sample_cohort
     rounds = rounds if rounds is not None else task.rounds
     model = make_model(task, projection_head=algo.needs_projection_head,
                        width=width)
@@ -166,8 +183,17 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
         max_batches=max_batches_per_client, precompute=bool(precompute),
         client_batched=client_batched)
 
-    client_states = {k: algo.init_client_state(k, global_params)
-                     for k in range(data.n_clients)}
+    if pop is not None:
+        # hot tier coherence: warm evictions drop device slabs, slab-store
+        # evictions feed population telemetry, pinned set shared
+        pop.attach_hot(ctx.placement)
+        # lazy per-client state, same tiers (the eager dict below is
+        # O(population) host memory — a model copy per client for
+        # moon-style states)
+        client_states = pop.make_client_states(algo, global_params)
+    else:
+        client_states = {k: algo.init_client_state(k, global_params)
+                         for k in range(data.n_clients)}
     # small server-side validation split for FedGKD-VOTE coefficients
     n_val = min(256, len(data.test_y) // 4)
     val_batch = (jnp.asarray(data.test_x[:n_val]), jnp.asarray(data.test_y[:n_val]))
@@ -178,7 +204,7 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
                           eval_every=eval_every, verbose=verbose,
                           round_callback=round_callback, dp=dp,
                           n_sample=n_sample, client_states=client_states,
-                          val_batch=val_batch)
+                          val_batch=val_batch, pop=pop)
 
     records: list[RoundRecord] = []
     local_acc = 0.0
@@ -187,14 +213,19 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
     for t in range(rounds):
         t0 = time.time()
         jrng, krng = jax.random.split(jrng)
-        sampled = rng.choice(data.n_clients, size=n_sample, replace=False)
+        sampled = data.sample_cohort(rng, n_sample)
         payload = algo.round_payload(server, krng)
 
+        cids = [int(k) for k in sampled]
+        if pop is not None:
+            # the cohort must not thrash the warm tier against itself
+            # while the round materializes / trains it
+            pop.pin(cids)
         result = exec_.run_round(
             ctx, server["global"], payload,
-            [client_states[int(k)] for k in sampled],
-            [data.clients[int(k)] for k in sampled], rng,
-            client_ids=[int(k) for k in sampled])
+            [client_states[k] for k in cids],
+            [data.clients[k] for k in cids], rng,
+            client_ids=cids)
         if verbose and t == 0:
             # which route actually ran (the shard_map executor may degrade
             # to vmap on a single device — see RoundContext.telemetry)
@@ -206,8 +237,11 @@ def run_federated(task: PaperTask, algo: Algorithm, data: FederatedData, *,
                      if "padded_to" in tele else ""))
         uploads, weights = result.uploads, result.weights
         local_losses = result.local_losses
-        for k, new_state in zip(sampled, result.client_states):
-            client_states[int(k)] = new_state
+        for k, new_state in zip(cids, result.client_states):
+            client_states[k] = new_state
+        if pop is not None:
+            pop.unpin(cids)
+            ctx.telemetry["population"] = pop.stats()
 
         if dp is not None:
             from repro.core import privacy
@@ -249,7 +283,8 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
                inner: "executor_lib.ClientExecutor",
                rng: np.random.Generator, jrng, *, seed: int, rounds: int,
                eval_every: int, verbose: bool, round_callback, dp,
-               n_sample: int, client_states: dict, val_batch) -> History:
+               n_sample: int, client_states: dict, val_batch,
+               pop=None) -> History:
     """Buffered-asynchronous rounds on a simulated heterogeneous system.
 
     Event structure (one History record per AGGREGATION, i.e. per global
@@ -298,8 +333,22 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
             steps = min(steps, ctx.max_batches)
         return steps
 
-    work = [client_work(c.n) for c in data.clients]
-    idle = set(range(data.n_clients))
+    # local work priced lazily from client SIZES (``client_n`` never
+    # materializes arrays), memoized per sampled client — the eager
+    # per-client list this replaces was O(population) host work
+    work_memo: dict[int, int] = {}
+
+    def work_of(k: int) -> int:
+        w = work_memo.get(k)
+        if w is None:
+            w = work_memo[k] = client_work(data.client_n(k))
+        return w
+
+    # in-flight ids are the SMALL set (≤ n_sample); sampling excludes them
+    # instead of enumerating the O(population) idle complement — for flat
+    # data ``sample_cohort(exclude=...)`` reproduces the historical
+    # sorted-idle-array draw bit for bit
+    in_flight: set[int] = set()
     version = 0
     stale_absorbed = 0
     max_stale = 0.0
@@ -311,14 +360,17 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         if k_count == 0:
             return
         jrng, krng = jax.random.split(jrng)
-        # with a FULL idle fleet the sorted array is arange(n_clients), so
-        # this is the synchronous loop's exact rng.choice call — a seed
-        # draws the same cohorts here as in the sync loop
-        idle_arr = np.sort(np.fromiter(idle, dtype=np.int64))
-        sampled = idle_arr[rng.choice(len(idle_arr), size=k_count,
-                                      replace=False)]
+        # with an EMPTY in-flight set this is the synchronous loop's exact
+        # rng.choice call — a seed draws the same cohorts here as in the
+        # sync loop; with clients in flight the excluded draw reproduces
+        # the historical sorted-idle-array indexing bit for bit
+        sampled = data.sample_cohort(rng, k_count, exclude=in_flight)
         payload = algo.round_payload(server, krng)
         cids = [int(k) for k in sampled]
+        if pop is not None:
+            # in-flight clients keep their warm shard / device slab /
+            # state-tier entries until their completions aggregate
+            pop.pin(cids)
         result = inner.run_round(
             ctx, server["global"], payload,
             [client_states[k] for k in cids],
@@ -326,8 +378,8 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         for k, new_state in zip(cids, result.client_states):
             client_states[k] = new_state
         for i, k in enumerate(cids):
-            idle.discard(k)
-            sim.dispatch(k, work[k], tag={
+            in_flight.add(k)
+            sim.dispatch(k, work_of(k), tag={
                 "upload": result.uploads[i], "weight": result.weights[i],
                 "loss": result.local_losses[i], "version": version})
 
@@ -372,7 +424,10 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
                                            val_batch=val_batch)
         version += 1
         for c in completions:
-            idle.add(c.client)
+            in_flight.discard(c.client)
+        if pop is not None:
+            pop.unpin([c.client for c in completions])
+            ctx.telemetry["population"] = pop.stats()
 
         if (t + 1) % eval_every == 0 or t == rounds - 1:
             acc, loss = evaluate(model, server["global"], data.test_x,
@@ -395,6 +450,11 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         if t < rounds - 1:
             dispatch_wave(b)
 
+    if pop is not None and in_flight:
+        # clients still in flight when the run ends would stay pinned —
+        # a reused Population would then exempt them from eviction forever
+        pop.unpin(in_flight)
+        ctx.telemetry["population"] = pop.stats()
     ctx.telemetry.update(
         route="async", inner_route=ctx.telemetry.get("route", inner.name),
         buffer_size=b, staleness_scheme=exec_.staleness,

@@ -63,6 +63,23 @@ class FederatedData:
         clients = [ClientData(x[idx], y[idx]) for idx in parts]
         return cls(clients, test_x, test_y, partition_stats(y, parts))
 
+    def client_n(self, cid: int) -> int:
+        return self.clients[int(cid)].n
+
+    def sample_cohort(self, rng: np.random.Generator, k: int,
+                      exclude=None) -> np.ndarray:
+        """Flat uniform-without-replacement cohort draw (the historical
+        sampling): one ``rng.choice`` over the whole population, or over
+        the sorted non-``exclude`` ids for the async loop's refills.  The
+        population tier (``repro.population``) overrides this with the
+        hierarchical O(cohort) draw; at ``n_shards=1`` that draw consumes
+        the generator identically to THESE calls — keep them in sync."""
+        if not exclude:
+            return rng.choice(self.n_clients, size=k, replace=False)
+        idle = np.setdiff1d(np.arange(self.n_clients, dtype=np.int64),
+                            np.fromiter(exclude, np.int64))
+        return idle[rng.choice(len(idle), size=k, replace=False)]
+
 
 def batch_iterator(rng: np.random.Generator, data: ClientData, batch_size: int,
                    epochs: int = 1, drop_remainder: bool = False):
@@ -123,15 +140,29 @@ class ClientSlabStore:
     client re-uploads from the host on its next sample); ``None`` means
     unbounded, the right default for full-participation runs and the
     equivalence suites.
+
+    The population tier (``repro.population``) couples to the store three
+    ways: ``drop(cid)`` invalidates a slab when the client leaves the
+    warm host tier (counted separately from cap evictions), ``on_evict``
+    observes cap evictions so cross-tier telemetry stays truthful, and
+    ids in ``pinned`` (shared by reference with the population store) are
+    never cap-evicted — the async loop's in-flight clients keep their
+    slabs however many waves dispatch before their completions aggregate.
+    With more pinned clients than ``max_resident`` the store temporarily
+    exceeds the cap rather than evict pinned work.
     """
 
-    def __init__(self, max_resident: Optional[int] = None):
+    def __init__(self, max_resident: Optional[int] = None,
+                 on_evict=None):
         self.slabs: "collections.OrderedDict" = collections.OrderedDict()
         self.max_resident = max_resident
+        self.on_evict = on_evict        # called (cid, entry) on cap eviction
+        self.pinned: set = set()        # exempt from cap eviction
         self.host_transfers = 0
         self.device_moves = 0
         self.hits = 0
         self.evictions = 0
+        self.drops = 0                  # explicit drop(cid) invalidations
         # high-water mark of resident slabs: under churning async cohorts
         # this is the device-memory bound the cap actually enforced
         self.peak_resident = 0
@@ -160,15 +191,32 @@ class ClientSlabStore:
             self.slabs.move_to_end(cid)
             while (self.max_resident is not None
                    and len(self.slabs) > self.max_resident):
-                self.slabs.popitem(last=False)
+                victim = next((k for k in self.slabs
+                               if k not in self.pinned), None)
+                if victim is None:      # everything pinned: exceed the cap
+                    break
+                evicted = self.slabs.pop(victim)
                 self.evictions += 1
+                if self.on_evict is not None:
+                    self.on_evict(victim, evicted)
             self.peak_resident = max(self.peak_resident, len(self.slabs))
         self.host_transfers += 1
         return entry
+
+    def drop(self, cid) -> bool:
+        """Invalidate ``cid``'s slab (the client left the warm host tier,
+        or its shard was rewritten).  Not an LRU eviction: counted in
+        ``drops``, never in ``evictions``, and ``on_evict`` does not fire
+        — the caller initiated it and needs no write-back signal.  The
+        client re-uploads from the host on its next sample."""
+        if self.slabs.pop(cid, None) is None:
+            return False
+        self.drops += 1
+        return True
 
     def stats(self) -> dict:
         return {"resident_clients": len(self.slabs),
                 "host_transfers": self.host_transfers,
                 "device_moves": self.device_moves, "hits": self.hits,
-                "evictions": self.evictions,
+                "evictions": self.evictions, "drops": self.drops,
                 "peak_resident": self.peak_resident}

@@ -1,0 +1,23 @@
+"""Population tier: out-of-core client store + O(cohort) sampling.
+
+The cross-device regime the paper evaluates under (Table 5: large
+populations, small sampled cohorts) at the scale the ROADMAP targets:
+millions of registered clients, with host memory bounded by a warm-tier
+cap instead of the population size.  See ``population.py`` for the facade
+the FL loop consumes, ``sources.py`` for the cold tier, ``store.py`` for
+the warm/state tiers, and ``sampling.py`` for the two-stage cohort draw.
+"""
+from repro.population.population import Population
+from repro.population.sampling import HierarchicalSampler, shift_positions
+from repro.population.sources import (ClientSource, DiskShardSource,
+                                      InMemorySource, SyntheticClientSource,
+                                      even_shard_sizes,
+                                      write_population_shards)
+from repro.population.store import ClientStateStore, PopulationStore
+
+__all__ = [
+    "Population", "HierarchicalSampler", "shift_positions", "ClientSource",
+    "DiskShardSource", "InMemorySource", "SyntheticClientSource",
+    "even_shard_sizes", "write_population_shards", "ClientStateStore",
+    "PopulationStore",
+]

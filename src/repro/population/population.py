@@ -1,0 +1,130 @@
+"""The ``Population`` facade: what ``run_federated(population=...)`` takes.
+
+Duck-types the slice of ``FederatedData`` the FL loop actually touches —
+``n_clients`` / ``clients[cid]`` / ``test_x`` / ``test_y`` /
+``sample_cohort`` / ``client_n`` — but backed by the three-tier store and
+the hierarchical sampler, so the loop's per-round cost and the process's
+peak host memory are O(cohort) and O(warm cap) whatever the population
+size.  ``Population.from_federated(data, n_shards=1)`` wraps an eager
+dataset for the equivalence suites: with one shard the cohort sequence is
+bit-identical to the flat loop's.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional
+
+import numpy as np
+
+from repro.core.algorithms import Algorithm
+from repro.population.sampling import HierarchicalSampler
+from repro.population.sources import (ClientSource, InMemorySource,
+                                      SyntheticClientSource)
+from repro.population.store import ClientStateStore, PopulationStore
+
+
+class _ClientsView:
+    """``population.clients[cid]`` — the lazy stand-in for the eager
+    ``FederatedData.clients`` list (indexing materializes through the
+    warm tier; no other list behavior is supported on purpose)."""
+
+    def __init__(self, store: PopulationStore):
+        self._store = store
+
+    def __getitem__(self, cid: int):
+        return self._store.get(int(cid))
+
+    def __len__(self) -> int:
+        return self._store.n_clients
+
+
+class Population:
+    """A client population the FL loop can sample and materialize lazily.
+
+    Args:
+      source: the cold tier (``repro.population.sources``).
+      test_x/test_y: the server-side eval split (always eager — it is one
+        array, not a population).
+      warm_cap: max materialized clients host-side (None = unbounded; the
+        1M bench and any real cross-device run should set it).
+      state_warm_cap: same cap for MUTABLE per-client algorithm states
+        (defaults to ``warm_cap``); evicted states spill to
+        ``state_dir`` (a temp dir when unset) and reload on re-sample.
+    """
+
+    def __init__(self, source: ClientSource, test_x, test_y, *,
+                 warm_cap: Optional[int] = None,
+                 state_warm_cap: Optional[int] = None,
+                 state_dir: Optional[str] = None):
+        self.store = PopulationStore(source, warm_cap=warm_cap)
+        self.sampler = HierarchicalSampler(source.shard_sizes)
+        self.clients = _ClientsView(self.store)
+        self.test_x = np.asarray(test_x)
+        self.test_y = np.asarray(test_y)
+        self.state_warm_cap = (state_warm_cap if state_warm_cap is not None
+                               else warm_cap)
+        self.state_dir = state_dir
+        self.state_store: Optional[ClientStateStore] = None
+
+    # -- FederatedData surface -------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return self.store.n_clients
+
+    @property
+    def n_shards(self) -> int:
+        return self.sampler.n_shards
+
+    def client_n(self, cid: int) -> int:
+        return self.store.client_n(cid)
+
+    def sample_cohort(self, rng: np.random.Generator, k: int,
+                      exclude: Optional[Iterable[int]] = None) -> np.ndarray:
+        return self.sampler.sample(rng, k, exclude)
+
+    # -- loop wiring ------------------------------------------------------
+    def make_client_states(self, algo: Algorithm,
+                           global_params: Any) -> ClientStateStore:
+        """The lazy replacement for the eager per-client state dict.
+
+        Captures the INITIAL global params (exactly what the eager dict
+        was built from); stateless algorithms re-init on read and store
+        nothing, stateful ones get the warm-LRU + disk-spill tiers."""
+        mutable = (type(algo).update_client_state
+                   is not Algorithm.update_client_state)
+        self.state_store = ClientStateStore(
+            lambda cid: algo.init_client_state(cid, global_params),
+            mutable=mutable, warm_cap=self.state_warm_cap,
+            spill_dir=self.state_dir, pinned=self.store.pinned)
+        return self.state_store
+
+    def attach_hot(self, slab_store) -> None:
+        self.store.attach_hot(slab_store)
+
+    def pin(self, cids: Iterable[int]) -> None:
+        self.store.pin(cids)
+
+    def unpin(self, cids: Iterable[int]) -> None:
+        self.store.unpin(cids)
+
+    def stats(self) -> dict:
+        out = dict(self.store.stats(), n_shards=self.sampler.n_shards)
+        if self.state_store is not None:
+            out.update(self.state_store.stats())
+        return out
+
+    # -- constructors -----------------------------------------------------
+    @classmethod
+    def from_federated(cls, data, n_shards: int = 1, **kw) -> "Population":
+        """Wrap an eager ``FederatedData`` (equivalence-suite bridge)."""
+        return cls(InMemorySource(data.clients, n_shards=n_shards),
+                   data.test_x, data.test_y, **kw)
+
+    @classmethod
+    def synthetic(cls, n_clients: int, *, n_test: int = 256, seed: int = 0,
+                  shard_size: int = 4096, warm_cap: Optional[int] = 256,
+                  **source_kw) -> "Population":
+        """A seeded synthetic population (the million-client bench)."""
+        src = SyntheticClientSource(n_clients, seed=seed,
+                                    shard_size=shard_size, **source_kw)
+        test_x, test_y = src.test_set(n_test)
+        return cls(src, test_x, test_y, warm_cap=warm_cap)

@@ -1,0 +1,270 @@
+"""Cold-tier client sources: where a client's shard comes from.
+
+A ``ClientSource`` materializes one client on demand — the population tier
+(``repro.population.store``) keeps a bounded warm/hot working set on top,
+so peak host memory is O(warm cap), never O(population).  Three sources:
+
+    InMemorySource        wraps an eager ``list[ClientData]`` (the historical
+                          ``FederatedData`` layout) — the equivalence-suite
+                          bridge, not a scaling route
+    SyntheticClientSource seeded per-client generation: client ``cid`` is a
+                          pure function of (seed, cid), nothing is stored —
+                          the million-client bench's population
+    DiskShardSource       per-shard ``.npy`` files opened ``mmap_mode="r"``
+                          (written by ``write_population_shards`` with the
+                          ``checkpoint.io`` atomic-replace idiom + msgpack
+                          meta sidecar) — the out-of-core production layout
+
+Every source exposes ``shard_sizes`` (contiguous client-id ranges — the
+geometry ``HierarchicalSampler`` draws over) and ``client_n(cid)`` (the
+client's example count WITHOUT materializing its arrays: the async loop
+prices local work for 1M clients from sizes alone).
+"""
+from __future__ import annotations
+
+import collections
+import os
+from typing import Iterator, Protocol, runtime_checkable
+
+import msgpack
+import numpy as np
+
+from repro.data.pipeline import ClientData
+
+_META_NAME = "population.meta"
+
+
+def even_shard_sizes(n_clients: int, shard_size: int) -> np.ndarray:
+    """Contiguous shards of ``shard_size`` clients (last one partial)."""
+    if n_clients <= 0 or shard_size <= 0:
+        raise ValueError(f"need positive n_clients/shard_size, got "
+                         f"{n_clients}/{shard_size}")
+    n_shards = -(-n_clients // shard_size)
+    sizes = np.full(n_shards, shard_size, np.int64)
+    sizes[-1] = n_clients - shard_size * (n_shards - 1)
+    return sizes
+
+
+@runtime_checkable
+class ClientSource(Protocol):
+    """Lazy per-client data: the population store's cold tier."""
+
+    n_clients: int
+    shard_sizes: np.ndarray     # contiguous client-id ranges
+
+    def client(self, cid: int) -> ClientData:
+        """Materialize client ``cid``'s full shard (fresh host arrays)."""
+        ...
+
+    def client_n(self, cid: int) -> int:
+        """``client(cid).n`` without materializing the arrays."""
+        ...
+
+
+class InMemorySource:
+    """Adapter over an eager client list (``FederatedData.clients``)."""
+
+    def __init__(self, clients: list[ClientData], n_shards: int = 1):
+        if not clients:
+            raise ValueError("InMemorySource needs at least one client")
+        self.clients = clients
+        self.n_clients = len(clients)
+        n_shards = min(n_shards, self.n_clients)
+        self.shard_sizes = even_shard_sizes(
+            self.n_clients, -(-self.n_clients // n_shards))
+
+    def client(self, cid: int) -> ClientData:
+        return self.clients[cid]
+
+    def client_n(self, cid: int) -> int:
+        return self.clients[cid].n
+
+
+class SyntheticClientSource:
+    """Million-client populations from a seed: client ``cid`` is generated
+    on demand from an independent child stream ``(seed, cid)`` of numpy's
+    SeedSequence tree, so any client is reproducible in isolation and the
+    source holds nothing but the (num_classes, dim) class-mean matrix.
+
+    The task is the executor benchmarks' rotated-Gaussian-blob tabular
+    task (``repro.data.synthetic.SyntheticTabularTask``) with per-client
+    example counts drawn uniformly from ``[min_n, max_n]`` — ragged, like
+    a real cross-device population.
+    """
+
+    def __init__(self, n_clients: int, *, num_classes: int = 10,
+                 dim: int = 16, min_n: int = 16, max_n: int = 48,
+                 noise: float = 1.0, seed: int = 0, shard_size: int = 4096):
+        if not (1 <= min_n <= max_n):
+            raise ValueError(f"need 1 <= min_n <= max_n, got "
+                             f"{min_n}/{max_n}")
+        self.n_clients = n_clients
+        self.num_classes = num_classes
+        self.dim = dim
+        self.min_n, self.max_n = min_n, max_n
+        self.noise = noise
+        self.seed = seed
+        self.shard_sizes = even_shard_sizes(n_clients, shard_size)
+        # shared class geometry (fixed by the task seed, like
+        # SyntheticTabularTask: train/test/clients all see the same means)
+        mrng = np.random.default_rng(seed + 77)
+        means = mrng.normal(0, 1, size=(num_classes, dim))
+        means *= 2.0 / (np.linalg.norm(means, axis=1, keepdims=True) + 1e-9)
+        rot, _ = np.linalg.qr(mrng.normal(0, 1, (dim, dim)))
+        self._means, self._rot = means, rot
+
+    def _rng(self, cid: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence(entropy=self.seed, spawn_key=(cid,)))
+
+    def client_n(self, cid: int) -> int:
+        # the size is the client stream's FIRST draw, so it is knowable
+        # without generating the feature arrays
+        return int(self._rng(cid).integers(self.min_n, self.max_n + 1))
+
+    def client(self, cid: int) -> ClientData:
+        rng = self._rng(cid)
+        n = int(rng.integers(self.min_n, self.max_n + 1))
+        labels = rng.integers(0, self.num_classes, size=n)
+        x = self._means[labels] + rng.normal(0, self.noise, (n, self.dim))
+        return ClientData((x @ self._rot).astype(np.float32),
+                          labels.astype(np.int64))
+
+    def test_set(self, n_test: int) -> tuple[np.ndarray, np.ndarray]:
+        """A held-out eval split from the same class geometry."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=self.seed,
+                                   spawn_key=(0x7E57,)))
+        labels = rng.integers(0, self.num_classes, size=n_test)
+        x = self._means[labels] + rng.normal(0, self.noise,
+                                             (n_test, self.dim))
+        return ((x @ self._rot).astype(np.float32),
+                labels.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# on-disk shards
+# ---------------------------------------------------------------------------
+
+def _shard_paths(root: str, s: int) -> tuple[str, str, str]:
+    return (os.path.join(root, f"shard_{s:05d}_x.npy"),
+            os.path.join(root, f"shard_{s:05d}_y.npy"),
+            os.path.join(root, f"shard_{s:05d}_off.npy"))
+
+
+def write_population_shards(root: str, clients: Iterator[ClientData], *,
+                            shard_size: int = 1024) -> dict:
+    """Write a client stream as per-shard memmap-able ``.npy`` triples.
+
+    Shard ``s`` holds its clients' examples row-concatenated
+    (``shard_s_x.npy`` / ``shard_s_y.npy``) plus an int64 offsets vector
+    (``shard_s_off.npy``, length ``clients_in_shard + 1``); a msgpack
+    ``population.meta`` sidecar records the shard sizes.  Files land via
+    write-to-temp + ``os.replace`` (the ``checkpoint.io`` idiom), so a
+    crash mid-write never leaves a plausible-looking partial shard.
+    Returns the meta dict.
+    """
+    os.makedirs(root, exist_ok=True)
+
+    def _atomic_save(path: str, arr: np.ndarray) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:       # file object: np.save appends no
+            np.save(f, arr)              # suffix, so the replace target is
+        os.replace(tmp, path)            # exactly what _shard() will open
+
+    shard_sizes: list[int] = []
+    s = 0
+    pending_x: list[np.ndarray] = []
+    pending_y: list[np.ndarray] = []
+
+    def _flush() -> None:
+        nonlocal s, pending_x, pending_y
+        if not pending_x:
+            return
+        px, py, poff = _shard_paths(root, s)
+        off = np.concatenate(
+            [np.zeros(1, np.int64),
+             np.cumsum([len(y) for y in pending_y], dtype=np.int64)])
+        _atomic_save(px, np.concatenate(pending_x))
+        _atomic_save(py, np.concatenate(pending_y).astype(np.int64))
+        _atomic_save(poff, off)
+        shard_sizes.append(len(pending_x))
+        s += 1
+        pending_x, pending_y = [], []
+
+    for c in clients:
+        pending_x.append(np.asarray(c.x))
+        pending_y.append(np.asarray(c.y))
+        if len(pending_x) == shard_size:
+            _flush()
+    _flush()
+    if not shard_sizes:
+        raise ValueError("write_population_shards: empty client stream")
+    meta = {"n_clients": int(sum(shard_sizes)),
+            "shard_sizes": [int(z) for z in shard_sizes]}
+    tmp = os.path.join(root, _META_NAME + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(meta))
+    os.replace(tmp, os.path.join(root, _META_NAME))
+    return meta
+
+
+class DiskShardSource:
+    """Out-of-core population: clients sliced from memmapped shard files.
+
+    ``np.load(mmap_mode="r")`` keeps shard bytes on disk until a client's
+    rows are actually touched; an LRU of ``max_open`` open shard handles
+    bounds file descriptors however the sampler hops between shards.
+    ``client()`` copies the client's rows out of the map, so returned
+    ``ClientData`` never pins a shard file open.
+    """
+
+    def __init__(self, root: str, max_open: int = 8):
+        meta_path = os.path.join(root, _META_NAME)
+        if not os.path.exists(meta_path):
+            raise FileNotFoundError(
+                f"no {_META_NAME} under {root!r} — write the population "
+                f"with repro.population.write_population_shards first")
+        with open(meta_path, "rb") as f:
+            meta = msgpack.unpackb(f.read())
+        self.root = root
+        self.n_clients = int(meta["n_clients"])
+        self.shard_sizes = np.asarray(meta["shard_sizes"], np.int64)
+        self.starts = np.concatenate(
+            [np.zeros(1, np.int64), np.cumsum(self.shard_sizes)])
+        self.max_open = max_open
+        self._open: "collections.OrderedDict[int, tuple]" = \
+            collections.OrderedDict()
+        self.shard_opens = 0        # cold-tier file opens (telemetry)
+
+    def _shard(self, s: int) -> tuple:
+        handle = self._open.get(s)
+        if handle is not None:
+            self._open.move_to_end(s)
+            return handle
+        px, py, poff = _shard_paths(self.root, s)
+        handle = (np.load(px, mmap_mode="r"), np.load(py, mmap_mode="r"),
+                  np.load(poff))
+        self.shard_opens += 1
+        self._open[s] = handle
+        while len(self._open) > self.max_open:
+            self._open.popitem(last=False)
+        return handle
+
+    def _locate(self, cid: int) -> tuple[int, int]:
+        if not (0 <= cid < self.n_clients):
+            raise IndexError(f"client id {cid} out of range "
+                             f"[0, {self.n_clients})")
+        s = int(np.searchsorted(self.starts, cid, side="right") - 1)
+        return s, cid - int(self.starts[s])
+
+    def client_n(self, cid: int) -> int:
+        s, i = self._locate(cid)
+        off = self._shard(s)[2]
+        return int(off[i + 1] - off[i])
+
+    def client(self, cid: int) -> ClientData:
+        s, i = self._locate(cid)
+        x, y, off = self._shard(s)
+        lo, hi = int(off[i]), int(off[i + 1])
+        return ClientData(np.array(x[lo:hi]), np.array(y[lo:hi]))

@@ -1,0 +1,200 @@
+"""The warm host-RAM tier + per-client algorithm-state tiers.
+
+``PopulationStore`` sits between a cold ``ClientSource`` (disk shards or a
+seeded generator — see ``repro.population.sources``) and the hot
+device-resident ``ClientSlabStore`` (``repro.data.pipeline``):
+
+    cold   the source: O(population) capacity, O(1) host memory
+    warm   an LRU of materialized ``ClientData`` capped at ``warm_cap``
+           entries — the bound on peak host memory
+    hot    the executor's device slab store; the population tier attaches
+           to it so a client dropped from warm is also ``drop()``-ed from
+           the device (tiers stay coherent top-down) and hot LRU evictions
+           feed back into the population counters
+
+Pinning: the async loop keeps a fleet of in-flight clients whose slabs and
+states must survive however many waves dispatch before their completions
+aggregate — ``pin(cids)`` exempts them from warm, hot AND state-tier
+eviction until ``unpin``.  With more pinned clients than the cap the tier
+temporarily exceeds it (correctness over the bound; ``peak_warm`` records
+the excursion).
+
+``ClientStateStore`` gives the per-client algorithm state dict the same
+treatment.  Two regimes, chosen from the algorithm class:
+
+  * STATELESS (``update_client_state`` not overridden — fedavg, fedprox,
+    the KD family): states never change after init, so the store holds
+    NOTHING and re-inits on every read from the captured initial global
+    params — exactly what the eager O(population) dict held;
+  * STATEFUL (moon-style ``prev``-model states): a warm LRU capped at
+    ``warm_cap`` with evicted states spilled to per-client ``.npz`` files
+    (``repro.checkpoint.io``) and reloaded on the client's next sample —
+    write-back, never loss.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import tempfile
+from typing import Any, Callable, Iterable, Optional
+
+from repro.data.pipeline import ClientData
+from repro.population.sources import ClientSource
+
+
+def _evict_lru(od: "collections.OrderedDict", pinned: set):
+    """Pop the least-recently-used non-pinned entry (None if all pinned)."""
+    for key in od:
+        if key not in pinned:
+            return key, od.pop(key)
+    return None
+
+
+class PopulationStore:
+    """Cold→warm client materialization with a bounded working set."""
+
+    def __init__(self, source: ClientSource,
+                 warm_cap: Optional[int] = None):
+        self.source = source
+        self.warm: "collections.OrderedDict[int, ClientData]" = \
+            collections.OrderedDict()
+        self.warm_cap = warm_cap
+        self.pinned: set[int] = set()
+        self.hot = None                 # attached ClientSlabStore (or None)
+        self.cold_loads = 0
+        self.warm_hits = 0
+        self.warm_evictions = 0
+        self.hot_evictions = 0          # fed back by the slab store
+        self.peak_warm = 0
+
+    @property
+    def n_clients(self) -> int:
+        return self.source.n_clients
+
+    def attach_hot(self, slab_store) -> None:
+        """Couple the device tier: warm evictions drop the client's slab,
+        slab-store LRU evictions count into this store's telemetry, and
+        the pinned set is shared by reference."""
+        self.hot = slab_store
+        slab_store.pinned = self.pinned
+
+        def on_evict(cid, entry):
+            self.hot_evictions += 1
+
+        slab_store.on_evict = on_evict
+
+    def get(self, cid: int) -> ClientData:
+        cid = int(cid)
+        data = self.warm.get(cid)
+        if data is not None:
+            self.warm.move_to_end(cid)
+            self.warm_hits += 1
+            return data
+        data = self.source.client(cid)
+        self.cold_loads += 1
+        self.warm[cid] = data
+        while self.warm_cap is not None and len(self.warm) > self.warm_cap:
+            victim = _evict_lru(self.warm, self.pinned)
+            if victim is None:          # everything pinned: exceed the cap
+                break
+            self.warm_evictions += 1
+            if self.hot is not None:    # keep tiers coherent top-down
+                self.hot.drop(victim[0])
+        # high-water AFTER eviction: peak_warm > warm_cap if and only if a
+        # pinned excursion forced it, which is what tests bound against
+        self.peak_warm = max(self.peak_warm, len(self.warm))
+        return data
+
+    def client_n(self, cid: int) -> int:
+        data = self.warm.get(int(cid))
+        return data.n if data is not None else self.source.client_n(int(cid))
+
+    def pin(self, cids: Iterable[int]) -> None:
+        self.pinned.update(int(c) for c in cids)
+
+    def unpin(self, cids: Iterable[int]) -> None:
+        self.pinned.difference_update(int(c) for c in cids)
+
+    def stats(self) -> dict:
+        return {"warm_resident": len(self.warm), "warm_cap": self.warm_cap,
+                "warm_hits": self.warm_hits, "cold_loads": self.cold_loads,
+                "warm_evictions": self.warm_evictions,
+                "hot_evictions": self.hot_evictions,
+                "peak_warm": self.peak_warm, "pinned": len(self.pinned)}
+
+
+class ClientStateStore:
+    """Per-client algorithm state with the same cold/warm discipline.
+
+    Mapping-shaped (``states[cid]`` / ``states[cid] = new``) so the FL loop
+    reads and writes it exactly like the historical eager dict.
+    """
+
+    def __init__(self, init_fn: Callable[[int], Any], *, mutable: bool,
+                 warm_cap: Optional[int] = None,
+                 spill_dir: Optional[str] = None,
+                 pinned: Optional[set] = None):
+        self.init_fn = init_fn
+        self.mutable = mutable
+        self.warm: "collections.OrderedDict[int, Any]" = \
+            collections.OrderedDict()
+        self.warm_cap = warm_cap
+        self.spill_dir = spill_dir
+        self.pinned = pinned if pinned is not None else set()
+        self.spilled: set[int] = set()
+        self.state_inits = 0
+        self.state_hits = 0
+        self.state_spills = 0
+        self.state_loads = 0
+        self.peak_warm = 0
+
+    def _spill_path(self, cid: int) -> str:
+        if self.spill_dir is None:
+            self.spill_dir = tempfile.mkdtemp(prefix="repro_client_states_")
+        return os.path.join(self.spill_dir, f"state_{cid:09d}.npz")
+
+    def __getitem__(self, cid: int) -> Any:
+        cid = int(cid)
+        if not self.mutable:
+            self.state_inits += 1
+            return self.init_fn(cid)
+        if cid in self.warm:
+            self.warm.move_to_end(cid)
+            self.state_hits += 1
+            return self.warm[cid]
+        if cid in self.spilled:
+            from repro.checkpoint.io import load_pytree
+            state = load_pytree(self._spill_path(cid), like=self.init_fn(cid))
+            self.state_loads += 1
+        else:
+            state = self.init_fn(cid)
+            self.state_inits += 1
+        self._put(cid, state)
+        return state
+
+    def __setitem__(self, cid: int, state: Any) -> None:
+        if not self.mutable:
+            return                      # states are init-constant: nothing
+        self._put(int(cid), state)      # to write back, ever
+
+    def _put(self, cid: int, state: Any) -> None:
+        self.warm[cid] = state
+        self.warm.move_to_end(cid)
+        while self.warm_cap is not None and len(self.warm) > self.warm_cap:
+            victim = _evict_lru(self.warm, self.pinned)
+            if victim is None:
+                break
+            vcid, vstate = victim
+            from repro.checkpoint.io import save_pytree
+            save_pytree(self._spill_path(vcid), vstate)
+            self.spilled.add(vcid)
+            self.state_spills += 1
+        self.peak_warm = max(self.peak_warm, len(self.warm))
+
+    def stats(self) -> dict:
+        return {"state_mutable": self.mutable,
+                "state_warm": len(self.warm), "state_spilled": len(self.spilled),
+                "state_inits": self.state_inits, "state_hits": self.state_hits,
+                "state_spills": self.state_spills,
+                "state_loads": self.state_loads,
+                "state_peak_warm": self.peak_warm}

@@ -84,3 +84,69 @@ def test_load_latest_round(tmp_path):
 
 def test_load_latest_empty(tmp_path):
     assert load_latest(str(tmp_path / "nope"), {}) is None
+
+
+def test_checkpoint_roundtrip_mixed_dtypes(tmp_path):
+    """The tiers spill real FL payloads: int32 labels next to bf16/fp16
+    model leaves must all survive the npz round-trip bit-exactly."""
+    tree = {"labels": jnp.asarray([0, 3, 9, 2], jnp.int32),
+            "model": {"w16": jnp.asarray([1.5, -0.25, 3.0], jnp.float16),
+                      "wbf": jnp.asarray([1.0, 2.0, -0.5], jnp.bfloat16),
+                      "w32": jnp.linspace(0, 1, 5, dtype=jnp.float32)},
+            "count": jnp.asarray(7, jnp.int32)}
+    path = os.path.join(tmp_path, "mixed.npz")
+    save_pytree(path, tree)
+    loaded = load_pytree(path, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(loaded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_save_pytree_is_atomic(tmp_path):
+    """No .tmp debris after a save, and a stale .tmp from a crashed writer
+    is invisible to load_latest's round pattern."""
+    save_round(str(tmp_path), 1, {"w": jnp.ones((2,))})
+    with open(os.path.join(tmp_path, "round_000002.npz.tmp"), "wb") as f:
+        f.write(b"torn mid-write")
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == [
+        "round_000002.npz.tmp"]
+    loaded, rnd = load_latest(str(tmp_path), {"w": jnp.zeros((2,))})
+    assert rnd == 1
+
+
+def test_load_latest_skips_corrupt_newest(tmp_path):
+    """A truncated newest round (crash mid-save under pre-atomic writers)
+    must fall back to the newest LOADABLE round, not explode."""
+    tree = {"w": jnp.zeros((2,))}
+    for r in (1, 2):
+        save_round(str(tmp_path), r, {"w": jnp.full((2,), float(r))})
+    full = os.path.join(tmp_path, "round_000003.npz")
+    save_round(str(tmp_path), 3, {"w": jnp.full((2,), 3.0)})
+    blob = open(full, "rb").read()
+    with open(full, "wb") as f:
+        f.write(blob[: len(blob) // 2])      # torn zip: BadZipFile territory
+    loaded, rnd = load_latest(str(tmp_path), tree)
+    assert rnd == 2
+    np.testing.assert_allclose(np.asarray(loaded["w"]), 2.0)
+
+
+def test_load_latest_skips_zero_byte_file(tmp_path):
+    tree = {"w": jnp.zeros((2,))}
+    save_round(str(tmp_path), 4, {"w": jnp.full((2,), 4.0)})
+    open(os.path.join(tmp_path, "round_000009.npz"), "wb").close()
+    loaded, rnd = load_latest(str(tmp_path), tree)
+    assert rnd == 4
+
+
+def test_load_latest_raises_when_all_corrupt(tmp_path):
+    """Every round unreadable is NOT a silent fresh start: the caller must
+    see a RuntimeError naming the files so history is not discarded."""
+    import pytest
+
+    for r in (1, 2):
+        with open(os.path.join(tmp_path, f"round_{r:06d}.npz"), "wb") as f:
+            f.write(b"not a zip at all")
+    with pytest.raises(RuntimeError, match="partial or corrupt"):
+        load_latest(str(tmp_path), {"w": jnp.zeros((2,))})

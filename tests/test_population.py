@@ -1,0 +1,574 @@
+"""Population tier: three-level client store, hierarchical O(cohort)
+sampling, lazy client-state tiers, and the ``run_federated(population=)``
+wiring.
+
+The load-bearing guarantees, each pinned here:
+
+  * ``n_shards=1`` reproduces the flat ``rng.choice`` cohort sequence BIT
+    for bit — sync loop and ``_run_async`` wave refills — over 50+ rounds;
+  * with ``population=`` enabled the equivalence suites' numbers do not
+    move (< 1e-5 vs the eager-data run on every executor);
+  * peak host residency is bounded by the warm cap, never the population
+    (the ``--runslow`` million-client run asserts it via the counters);
+  * pinned (in-flight) clients survive warm/hot/state eviction pressure;
+  * ``ClientSlabStore.drop`` keeps the eviction counters truthful.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import sweep
+from repro.configs.paper import TOY
+from repro.core import algorithms, executor as ex, fl_loop
+from repro.core.systemsim import SpeedProfile
+from repro.data.pipeline import ClientData, ClientSlabStore, FederatedData
+from repro.data.synthetic import SyntheticTabularTask
+from repro.population import (DiskShardSource, HierarchicalSampler,
+                              InMemorySource, Population,
+                              SyntheticClientSource, even_shard_sizes,
+                              shift_positions, write_population_shards)
+from repro.population.store import ClientStateStore, PopulationStore
+
+RAGGED_SIZES = (20, 45, 64, 100, 130, 150)
+
+
+def _ragged_data(task, sizes=RAGGED_SIZES):
+    gen = SyntheticTabularTask(task.num_classes, dim=task.feat_dim, seed=0)
+    clients = [ClientData(*gen.generate(n, seed=100 + i))
+               for i, n in enumerate(sizes)]
+    test_x, test_y = gen.generate(200, seed=999)
+    return FederatedData(clients, test_x, test_y,
+                         np.zeros((len(sizes), task.num_classes)))
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    task = dataclasses.replace(TOY, n_clients=len(RAGGED_SIZES),
+                               participation=0.5, batch_size=64, rounds=3,
+                               local_epochs=2)
+    return task, _ragged_data(task)
+
+
+def _max_param_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(
+        jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >1 device: run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+# --------------------------------------------------------------------------
+# hierarchical sampling
+# --------------------------------------------------------------------------
+
+def test_even_shard_sizes():
+    assert even_shard_sizes(10, 4).tolist() == [4, 4, 2]
+    assert even_shard_sizes(8, 4).tolist() == [4, 4]
+    assert even_shard_sizes(3, 100).tolist() == [3]
+    with pytest.raises(ValueError):
+        even_shard_sizes(0, 4)
+
+
+def test_shift_positions_matches_setdiff_indexing():
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        n = int(rng.integers(5, 80))
+        exc = np.sort(rng.choice(n, size=int(rng.integers(0, 6)),
+                                 replace=False))
+        survivors = np.setdiff1d(np.arange(n), exc)
+        pos = rng.choice(len(survivors),
+                         size=min(5, len(survivors)), replace=False)
+        np.testing.assert_array_equal(shift_positions(pos, exc),
+                                      survivors[pos])
+
+
+@sweep(n=8)
+def test_sampler_draws_distinct_in_range(rng):
+    n_shards = int(rng.integers(1, 7))
+    sizes = rng.integers(3, 40, size=n_shards)
+    s = HierarchicalSampler(sizes)
+    k = int(rng.integers(1, min(12, s.n_clients) + 1))
+    cohort = s.sample(np.random.default_rng(int(rng.integers(1 << 30))), k)
+    assert len(cohort) == k == len(np.unique(cohort))
+    assert cohort.min() >= 0 and cohort.max() < s.n_clients
+
+
+def test_sampler_marginal_is_uniform():
+    """Size-weighted shard stage + uniform within-shard stage must give an
+    exactly uniform marginal over clients (ragged shards on purpose)."""
+    s = HierarchicalSampler([7, 13, 5, 25])
+    rng = np.random.default_rng(0)
+    counts = np.zeros(s.n_clients)
+    draws = 8000
+    for _ in range(draws):
+        counts[s.sample(rng, 8)] += 1
+    p = counts / counts.sum()
+    assert np.abs(p - 1.0 / s.n_clients).max() < 0.004
+
+
+def test_sampler_exclusion_never_leaks_and_stays_uniform():
+    s = HierarchicalSampler([7, 13, 5, 25])
+    exc = [0, 6, 7, 19, 20, 24, 25, 49]        # shard edges included
+    rng = np.random.default_rng(1)
+    counts = np.zeros(s.n_clients)
+    for _ in range(6000):
+        c = s.sample(rng, 8, exclude=exc)
+        assert not set(int(i) for i in c) & set(exc)
+        counts[c] += 1
+    assert (counts[exc] == 0).all()
+    p = counts / counts.sum()
+    live = np.setdiff1d(np.arange(s.n_clients), exc)
+    assert np.abs(p[live] - 1.0 / len(live)).max() < 0.005
+
+
+def test_sampler_rejection_fast_path_uniform():
+    """cohort ≪ population takes the vectorized-rejection path (no
+    hypergeometric stage); its marginal must still be exactly uniform."""
+    s = HierarchicalSampler([100, 156, 200, 56])          # n = 512
+    rng = np.random.default_rng(2)
+    counts = np.zeros(s.n_clients)
+    for _ in range(20000):
+        counts[s.sample(rng, 4)] += 1                     # 4*64 <= 512
+    p = counts / counts.sum()
+    assert np.abs(p - 1.0 / s.n_clients).max() < 1e-3
+
+
+def test_sampler_rejection_fast_path_exclusion():
+    s = HierarchicalSampler([100, 156, 200, 56])
+    exc = [0, 99, 100, 511]
+    rng = np.random.default_rng(3)
+    counts = np.zeros(s.n_clients)
+    for _ in range(15000):
+        c = s.sample(rng, 4, exclude=exc)                 # (4+4)*64 == 512
+        counts[c] += 1
+    assert (counts[exc] == 0).all()
+    live = np.setdiff1d(np.arange(s.n_clients), exc)
+    p = counts / counts.sum()
+    assert np.abs(p[live] - 1.0 / len(live)).max() < 1.2e-3
+
+
+def test_sampler_single_shard_is_bit_identical_to_flat_choice():
+    """The degenerate n_shards=1 draw must consume the generator exactly
+    like the historical flat calls — fresh cohorts AND excluded refills."""
+    s = HierarchicalSampler([97])
+    exc = [5, 50, 96]
+    for seed in range(10):
+        a, b = np.random.default_rng(seed), np.random.default_rng(seed)
+        np.testing.assert_array_equal(
+            s.sample(a, 12), b.choice(97, size=12, replace=False))
+        idle = np.setdiff1d(np.arange(97), np.asarray(exc))
+        np.testing.assert_array_equal(
+            s.sample(a, 12, exclude=exc),
+            idle[b.choice(len(idle), size=12, replace=False)])
+
+
+def test_sampler_rejects_oversized_cohort():
+    s = HierarchicalSampler([4, 4])
+    with pytest.raises(ValueError):
+        s.sample(np.random.default_rng(0), 9)
+    with pytest.raises(ValueError):
+        s.sample(np.random.default_rng(0), 8, exclude=[0])
+
+
+# --------------------------------------------------------------------------
+# sources
+# --------------------------------------------------------------------------
+
+def test_synthetic_source_deterministic_and_size_consistent():
+    src = SyntheticClientSource(500, seed=3, shard_size=64, min_n=5, max_n=20)
+    assert int(src.shard_sizes.sum()) == 500
+    for cid in (0, 63, 64, 499):
+        c1, c2 = src.client(cid), src.client(cid)
+        np.testing.assert_array_equal(c1.x, c2.x)
+        np.testing.assert_array_equal(c1.y, c2.y)
+        assert src.client_n(cid) == c1.n     # size knowable without arrays
+        assert 5 <= c1.n <= 20
+    a, b = src.client(7), src.client(8)
+    assert not (a.n == b.n and np.array_equal(a.x[:1], b.x[:1]))
+
+
+def test_disk_shard_source_roundtrip(tmp_path):
+    src = SyntheticClientSource(50, seed=1, shard_size=8, min_n=3, max_n=9)
+    meta = write_population_shards(
+        str(tmp_path), (src.client(i) for i in range(50)), shard_size=16)
+    assert meta["n_clients"] == 50
+    assert meta["shard_sizes"] == [16, 16, 16, 2]
+    disk = DiskShardSource(str(tmp_path), max_open=2)
+    rng = np.random.default_rng(0)
+    for cid in rng.choice(50, size=20, replace=False):
+        want, got = src.client(int(cid)), disk.client(int(cid))
+        np.testing.assert_array_equal(want.x, got.x)
+        np.testing.assert_array_equal(want.y, got.y)
+        assert disk.client_n(int(cid)) == want.n
+    assert len(disk._open) <= 2              # handle LRU bounded
+    assert disk.shard_opens >= 4             # ...so shards re-opened
+
+
+def test_disk_shard_source_requires_meta(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        DiskShardSource(str(tmp_path / "nowhere"))
+
+
+# --------------------------------------------------------------------------
+# warm tier + pinning
+# --------------------------------------------------------------------------
+
+def test_population_store_warm_lru_bound_and_counters():
+    src = SyntheticClientSource(40, seed=0, shard_size=8, min_n=3, max_n=6)
+    store = PopulationStore(src, warm_cap=4)
+    for cid in range(10):
+        store.get(cid)
+    assert len(store.warm) == 4 and store.peak_warm == 4
+    assert store.cold_loads == 10 and store.warm_evictions == 6
+    store.get(9)                             # most recent: a hit
+    assert store.warm_hits == 1
+    store.get(0)                             # evicted long ago: a reload
+    assert store.cold_loads == 11
+
+
+def test_population_store_pinned_survive_eviction_pressure():
+    src = SyntheticClientSource(40, seed=0, shard_size=8, min_n=3, max_n=6)
+    store = PopulationStore(src, warm_cap=3)
+    store.get(0)
+    store.get(1)
+    store.pin([0, 1])
+    for cid in range(2, 12):
+        store.get(cid)
+    assert 0 in store.warm and 1 in store.warm     # never evicted
+    assert len(store.warm) <= 3
+    store.unpin([0, 1])
+    for cid in range(12, 16):
+        store.get(cid)
+    assert 0 not in store.warm and 1 not in store.warm
+
+
+def test_population_store_all_pinned_exceeds_cap_not_corrupts():
+    src = SyntheticClientSource(10, seed=0, shard_size=4, min_n=3, max_n=6)
+    store = PopulationStore(src, warm_cap=2)
+    store.pin(range(5))
+    for cid in range(5):
+        store.get(cid)
+    assert len(store.warm) == 5              # bound traded for correctness
+    assert store.peak_warm == 5 and store.warm_evictions == 0
+
+
+def test_warm_eviction_drops_hot_slab():
+    """Tier coherence: a client leaving the warm host tier must lose its
+    device slab too (drop, not LRU eviction), and hot LRU evictions must
+    feed back into population telemetry."""
+    src = SyntheticClientSource(20, seed=0, shard_size=8, min_n=3, max_n=6)
+    store = PopulationStore(src, warm_cap=2)
+    hot = ClientSlabStore(max_resident=8)
+    store.attach_hot(hot)
+    dev = jax.devices()[0]
+    for cid in range(4):
+        hot.get(cid, store.get(cid), dev)
+    # warm cap 2 ⇒ clients 0/1 were warm-evicted ⇒ hot dropped them
+    assert set(hot.slabs) == {2, 3}
+    assert hot.drops == 2 and hot.evictions == 0
+    assert store.warm_evictions == 2
+    # hot pinned set is shared by reference with the population store
+    store.pin([2])
+    assert 2 in hot.pinned
+
+
+# --------------------------------------------------------------------------
+# ClientSlabStore: drop / on_evict / pinning (satellite regression)
+# --------------------------------------------------------------------------
+
+def test_slab_store_drop_and_resample_counters():
+    """Dropping a resident client then re-sampling it must read as ONE
+    drop + a fresh host transfer — evictions and peak_resident untouched."""
+    store = ClientSlabStore(max_resident=4)
+    dev = jax.devices()[0]
+    datas = {cid: ClientData(np.ones((5, 2), np.float32),
+                             np.zeros(5, np.int64)) for cid in range(3)}
+    for cid in range(3):
+        store.get(cid, datas[cid], dev)
+    assert store.host_transfers == 3 and store.peak_resident == 3
+    assert store.drop(1)
+    assert not store.drop(1)                 # idempotent: already gone
+    assert store.stats()["resident_clients"] == 2
+    assert store.evictions == 0 and store.drops == 1
+    assert store.peak_resident == 3          # high-water is historical
+    store.get(1, datas[1], dev)              # re-sample: fresh upload
+    assert store.host_transfers == 4 and store.hits == 0
+    store.get(1, datas[1], dev)
+    assert store.hits == 1
+    assert store.stats()["drops"] == 1
+
+
+def test_slab_store_on_evict_fires_only_for_cap_evictions():
+    seen = []
+    store = ClientSlabStore(max_resident=2,
+                            on_evict=lambda cid, entry: seen.append(cid))
+    dev = jax.devices()[0]
+    data = ClientData(np.ones((4, 2), np.float32), np.zeros(4, np.int64))
+    for cid in range(4):
+        store.get(cid, data, dev)
+    assert seen == [0, 1] and store.evictions == 2
+    store.drop(2)
+    assert seen == [0, 1]                    # drop is caller-initiated
+
+
+def test_slab_store_pinned_never_cap_evicted():
+    store = ClientSlabStore(max_resident=2)
+    dev = jax.devices()[0]
+    data = ClientData(np.ones((4, 2), np.float32), np.zeros(4, np.int64))
+    store.get(0, data, dev)
+    store.pinned.add(0)
+    for cid in range(1, 5):
+        store.get(cid, data, dev)
+    assert 0 in store.slabs
+    assert store.stats()["resident_clients"] == 2
+
+
+# --------------------------------------------------------------------------
+# client-state tiers
+# --------------------------------------------------------------------------
+
+def test_state_store_stateless_holds_nothing():
+    calls = []
+
+    def init(cid):
+        calls.append(cid)
+        return ()
+
+    states = ClientStateStore(init, mutable=False)
+    assert states[3] == ()
+    states[3] = ("ignored",)                 # write-back is a no-op
+    assert states[3] == ()
+    assert len(states.warm) == 0 and calls == [3, 3]
+
+
+def test_state_store_stateful_spills_and_reloads(tmp_path):
+    def init(cid):
+        return {"prev": {"w": jnp.zeros((3,), jnp.float32)}}
+
+    states = ClientStateStore(init, mutable=True, warm_cap=2,
+                              spill_dir=str(tmp_path))
+    for cid in range(4):
+        states[cid] = {"prev": {"w": jnp.full((3,), float(cid))}}
+    assert len(states.warm) == 2 and states.state_spills == 2
+    assert states.spilled == {0, 1}
+    assert os.path.exists(os.path.join(str(tmp_path), "state_000000000.npz"))
+    got = states[0]                          # round-trips through disk
+    assert float(got["prev"]["w"][0]) == 0.0
+    got = states[1]
+    assert float(got["prev"]["w"][0]) == 1.0
+    assert states.state_loads == 2
+    # never-seen client: plain init, no disk touch
+    fresh = states[9]
+    assert float(fresh["prev"]["w"][0]) == 0.0 and states.state_inits == 1
+
+
+def test_state_store_pinned_states_not_evicted(tmp_path):
+    pinned = {0}
+    states = ClientStateStore(lambda cid: {"v": jnp.zeros(())}, mutable=True,
+                              warm_cap=2, spill_dir=str(tmp_path),
+                              pinned=pinned)
+    for cid in range(5):
+        states[cid] = {"v": jnp.full((), float(cid))}
+    assert 0 in states.warm and len(states.warm) == 2
+
+
+# --------------------------------------------------------------------------
+# run_federated(population=): equivalence + seed sequences
+# --------------------------------------------------------------------------
+
+def test_run_federated_requires_exactly_one_source(tiny_setup):
+    task, data = tiny_setup
+    algo = algorithms.make("fedavg")
+    with pytest.raises(ValueError):
+        fl_loop.run_federated(task, algo)
+    with pytest.raises(ValueError):
+        fl_loop.run_federated(task, algo, data,
+                              population=Population.from_federated(data))
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fedgkd", "moon"])
+@pytest.mark.parametrize("spec", ["sequential", "vmap"])
+def test_population_matches_eager_data(tiny_setup, name, spec):
+    """The acceptance criterion: population= at n_shards=1 leaves every
+    executor's numbers unchanged (stateless AND moon's stateful path)."""
+    task, data = tiny_setup
+    h0 = fl_loop.run_federated(task, algorithms.make(name), data, seed=0,
+                               executor=spec)
+    h1 = fl_loop.run_federated(task, algorithms.make(name),
+                               population=Population.from_federated(data),
+                               seed=0, executor=spec)
+    assert _max_param_diff(h0.final_params, h1.final_params) < 1e-5
+    for r0, r1 in zip(h0.records, h1.records):
+        assert r0.sampled == r1.sampled
+        assert abs(r0.mean_local_loss - r1.mean_local_loss) < 1e-5
+        assert abs(r0.test_acc - r1.test_acc) < 1e-5
+    assert "population" in h1.telemetry
+    assert "population" not in h0.telemetry
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fedgkd-vote"])
+def test_population_matches_eager_data_async(tiny_setup, name):
+    task, data = tiny_setup
+    kw = dict(seed=0, rounds=4)
+    h0 = fl_loop.run_federated(task, algorithms.make(name), data,
+                               executor=ex.AsyncExecutor(
+                                   staleness="constant", buffer_size=2), **kw)
+    h1 = fl_loop.run_federated(task, algorithms.make(name),
+                               population=Population.from_federated(data),
+                               executor=ex.AsyncExecutor(
+                                   staleness="constant", buffer_size=2), **kw)
+    assert _max_param_diff(h0.final_params, h1.final_params) < 1e-5
+    for r0, r1 in zip(h0.records, h1.records):
+        assert r0.sampled == r1.sampled
+
+
+@multidevice
+def test_population_matches_eager_data_shard_map(tiny_setup):
+    task, data = tiny_setup
+    h0 = fl_loop.run_federated(task, algorithms.make("fedgkd"), data, seed=0,
+                               executor=ex.ShardMapExecutor(strict=True))
+    h1 = fl_loop.run_federated(task, algorithms.make("fedgkd"),
+                               population=Population.from_federated(data),
+                               seed=0,
+                               executor=ex.ShardMapExecutor(strict=True))
+    assert _max_param_diff(h0.final_params, h1.final_params) < 1e-5
+    assert h1.telemetry["route"] == "shard_map"
+    assert h1.telemetry["population"]["cold_loads"] >= 1
+
+
+def _cohort_task(rounds):
+    return dataclasses.replace(TOY, n_clients=30, participation=0.2,
+                               rounds=rounds, local_epochs=1, batch_size=16)
+
+
+def test_seed_equivalence_sync_cohorts_50_rounds():
+    """Satellite: hierarchical sampling at n_shards=1 reproduces the flat
+    rng.choice cohort SEQUENCE bit-identically over 50 sync rounds."""
+    task = _cohort_task(50)
+    gen = SyntheticTabularTask(task.num_classes, dim=task.feat_dim, seed=0)
+    clients = [ClientData(*gen.generate(int(n), seed=200 + i))
+               for i, n in enumerate(
+                   np.random.default_rng(5).integers(8, 30, 30))]
+    tx, ty = gen.generate(64, seed=999)
+    data = FederatedData(clients, tx, ty, np.zeros((30, task.num_classes)))
+    kw = dict(seed=7, executor="sequential", max_batches_per_client=1,
+              eval_every=1000, width=4)
+    h0 = fl_loop.run_federated(task, algorithms.make("fedavg"), data, **kw)
+    h1 = fl_loop.run_federated(task, algorithms.make("fedavg"),
+                               population=Population.from_federated(data),
+                               **kw)
+    assert len(h0.records) == 50
+    assert [r.sampled for r in h0.records] == [r.sampled for r in h1.records]
+
+
+def test_seed_equivalence_async_wave_refills_50_rounds():
+    """Satellite: same guarantee for the async loop's excluded-idle wave
+    refills (in-flight clients change the draw geometry every wave)."""
+    task = _cohort_task(50)
+    gen = SyntheticTabularTask(task.num_classes, dim=task.feat_dim, seed=0)
+    clients = [ClientData(*gen.generate(int(n), seed=300 + i))
+               for i, n in enumerate(
+                   np.random.default_rng(6).integers(8, 30, 30))]
+    tx, ty = gen.generate(64, seed=999)
+    data = FederatedData(clients, tx, ty, np.zeros((30, task.num_classes)))
+    kw = dict(seed=7, max_batches_per_client=1, eval_every=1000, width=4,
+              executor=ex.AsyncExecutor(staleness="constant", buffer_size=3,
+                                        profile=SpeedProfile(
+                                            kind="lognormal")))
+    h0 = fl_loop.run_federated(task, algorithms.make("fedavg"), data, **kw)
+    h1 = fl_loop.run_federated(task, algorithms.make("fedavg"),
+                               population=Population.from_federated(data),
+                               **kw)
+    assert len(h0.records) == 50
+    assert [r.sampled for r in h0.records] == [r.sampled for r in h1.records]
+    # in-flight-at-termination clients must not stay pinned (a reused
+    # Population would exempt them from eviction forever)
+    assert h1.telemetry["population"]["pinned"] == 0
+
+
+def test_multi_shard_population_trains_with_bounded_warm_tier(tiny_setup):
+    """More shards than one: no bit-equivalence claim, but the run must
+    train, respect the warm cap, and keep the cohort marginal sane."""
+    task, data = tiny_setup
+    population = Population.from_federated(data, n_shards=3, warm_cap=3)
+    h = fl_loop.run_federated(task, algorithms.make("moon"),
+                              population=population, seed=0, rounds=4,
+                              executor="vmap")
+    stats = h.telemetry["population"]
+    assert stats["n_shards"] == 3
+    assert stats["peak_warm"] <= 3
+    assert stats["warm_evictions"] > 0
+    assert len(h.records) == 4
+    cohorts = {c for r in h.records for c in r.sampled}
+    assert cohorts <= set(range(task.n_clients))
+
+
+def test_population_pins_cohort_during_round(tiny_setup):
+    """warm_cap == cohort size: the round's own clients must not evict one
+    another mid-materialization (pinning), and must all unpin after."""
+    task, data = tiny_setup            # participation 0.5 of 6 ⇒ cohort 3
+    population = Population.from_federated(data, warm_cap=3)
+    h = fl_loop.run_federated(task, algorithms.make("fedavg"),
+                              population=population, seed=0, rounds=3,
+                              executor="sequential")
+    stats = h.telemetry["population"]
+    assert stats["pinned"] == 0                       # all released
+    assert stats["peak_warm"] <= 3 + 1                # cap + probe client
+    # every round's cohort was materialized exactly once or hit warm
+    assert stats["cold_loads"] + stats["warm_hits"] >= 3 * 3
+
+
+def test_population_from_disk_shards(tmp_path, tiny_setup):
+    """End-to-end out-of-core: write the eager dataset to disk shards,
+    train from the DiskShardSource, match the eager run bit-for-bit."""
+    task, data = tiny_setup
+    write_population_shards(str(tmp_path),
+                            (c for c in data.clients), shard_size=4)
+    src = DiskShardSource(str(tmp_path))
+    # one logical shard for the sampler: geometry stays bit-compatible
+    sampler_compat = Population(
+        InMemorySource(data.clients, n_shards=1), data.test_x, data.test_y)
+    population = Population(src, data.test_x, data.test_y, warm_cap=4)
+    population.sampler = sampler_compat.sampler
+    h0 = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                               executor="sequential")
+    h1 = fl_loop.run_federated(task, algorithms.make("fedavg"),
+                               population=population, seed=0,
+                               executor="sequential")
+    assert _max_param_diff(h0.final_params, h1.final_params) < 1e-5
+
+
+# --------------------------------------------------------------------------
+# the million-client bound (--runslow)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_million_client_run_is_warm_cap_bounded():
+    """1M registered clients, K=64 cohorts: the run completes with the
+    store never holding more than the warm cap (+ pinned cohort), and the
+    work done scales with SAMPLED clients, not the population."""
+    population = Population.synthetic(1_000_000, warm_cap=128,
+                                     shard_size=4096, min_n=8, max_n=24,
+                                     seed=0, n_test=128)
+    task = dataclasses.replace(TOY, n_clients=1_000_000,
+                               participation=64 / 1_000_000, rounds=2,
+                               local_epochs=1, batch_size=16)
+    h = fl_loop.run_federated(task, algorithms.make("fedavg"),
+                              population=population, seed=0,
+                              executor="vmap", max_batches_per_client=1,
+                              eval_every=1000, width=4)
+    stats = h.telemetry["population"]
+    assert population.n_shards == 245
+    assert all(len(r.sampled) == 64 for r in h.records)
+    assert stats["peak_warm"] <= 128
+    # cold loads = sampled cohorts + the probe client, NOT O(population)
+    assert stats["cold_loads"] <= 2 * 64 + 1
+    assert stats["state_peak_warm"] == 0          # fedavg: stateless tier
+    assert len(population.store.warm) <= 128
