@@ -14,11 +14,15 @@ both artifacts with the shared ``cases`` schema:
   * ``BENCH_population.json`` — LOWER-is-better resource metrics from the
     million-client population-tier run: ``peak_host_rss_mb`` (the warm-cap
     memory bound held) and ``sample_latency_ms`` (the O(cohort) draw), plus
-    the population-independence ratio ``sample_ratio_1m_vs_10k``.
+    the population-independence ratio ``sample_ratio_1m_vs_10k``;
+  * ``BENCH_faults.json`` — LOWER-is-better fault-tolerance metrics:
+    ``acc_drop_at_20pct_crash`` (accuracy lost at the heaviest fault cell
+    vs fault-free) and ``overhead_ratio`` (retry re-dispatches per
+    completed round; deterministic under the seeded injector).
 
 A case is keyed by ``(algo, executor, epochs, precompute, buffer_size,
-model, conv_route, population)`` (trailing fields ``None`` for artifacts
-predating them); only keys present in BOTH files are compared (the
+model, conv_route, population, faults)`` (trailing fields ``None`` for
+artifacts predating them); only keys present in BOTH files are compared (the
 baseline may predate newer cases), and a metric regresses when
 
     new_speedup < baseline_speedup * (1 - tolerance)      # higher-better
@@ -40,13 +44,15 @@ METRICS = ("speedup_vs_sequential", "speedup_vs_no_precompute",
 # resource costs: regression direction is inverted (new may not EXCEED
 # baseline * (1 + tolerance)) — an RSS or latency DROP is never a failure
 METRICS_LOWER = ("peak_host_rss_mb", "sample_latency_ms",
-                 "sample_ratio_1m_vs_10k")
+                 "sample_ratio_1m_vs_10k", "acc_drop_at_20pct_crash",
+                 "overhead_ratio")
 
 
 def case_key(row: dict) -> tuple:
     return (row["algo"], row["executor"], row["epochs"],
             bool(row.get("precompute")), row.get("buffer_size"),
-            row.get("model"), row.get("conv_route"), row.get("population"))
+            row.get("model"), row.get("conv_route"), row.get("population"),
+            row.get("faults"))
 
 
 def index_cases(payload: dict) -> dict:

@@ -1,0 +1,149 @@
+"""Accuracy-vs-fault-rate and round-completion-overhead benchmark.
+
+Sweeps the deterministic fault injector (``repro.core.systemsim``) over a
+grid of crash rates (default 0 / 10 / 20%, each with 5% update corruption)
+on the ``toy`` preset and measures, per algorithm:
+
+  * ``acc_drop_at_20pct_crash`` — final-round accuracy lost at the
+    heaviest cell versus the fault-free run (LOWER is better; the
+    PR-7 acceptance criterion caps it at 0.02);
+  * ``overhead_ratio`` — client trainings dispatched per completed round
+    under faults, relative to the fault-free cohort (LOWER is better).
+    Retries re-dispatch failed clients, so this is
+    ``1 + redispatches / (rounds * cohort)`` — a DETERMINISTIC function
+    of the seed, immune to CI runner speed, unlike wall-clock (which is
+    still recorded informationally as ``wall_ratio``).
+
+Writes ``BENCH_faults.json`` at the repo root — the artifact
+``benchmarks/compare_bench.py`` gates the nightly ``faults-bench`` job on
+(both metrics lower-is-better).  The in-run acceptance gate mirrors
+``tests/test_faults.py``:
+
+    PYTHONPATH=src python benchmarks/faults_bench.py               # default
+    PYTHONPATH=src python benchmarks/faults_bench.py --algos fedgkd \
+        --rounds 12 --crash-grid 0 0.1 0.2 0.3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs.paper import PAPER_TASKS
+from repro.core import algorithms, fl_loop
+from repro.core.systemsim import FaultProfile
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run(algo_name, task, data, args, crash):
+    mk = algorithms.make(algo_name, **(
+        {"buffer_m": args.buffer_m} if algo_name.startswith("fedgkd") else {}))
+    faults = None
+    if crash is not None:
+        faults = FaultProfile(crash_prob=crash, corrupt_prob=args.corrupt)
+    t0 = time.perf_counter()
+    h = fl_loop.run_federated(task, mk, data, rounds=args.rounds,
+                              seed=args.seed, executor="vmap", faults=faults)
+    return h, time.perf_counter() - t0
+
+
+def bench_algo(algo_name: str, task, data, n_sample: int, args) -> dict:
+    # fault-free reference (also warms the jit caches the sweep reuses)
+    clean, wall_clean = _run(algo_name, task, data, args, None)
+    clean_acc = clean.records[-1].test_acc
+
+    cells = []
+    for crash in args.crash_grid:
+        h, wall = _run(algo_name, task, data, args, crash)
+        ftel = h.telemetry["faults"]
+        dispatches = args.rounds * n_sample + ftel["redispatches"]
+        cells.append({
+            "crash_prob": crash, "corrupt_prob": args.corrupt,
+            "final_acc": round(h.records[-1].test_acc, 4),
+            "acc_drop": round(clean_acc - h.records[-1].test_acc, 4),
+            "rounds_completed": len(h.records),
+            "skipped_rounds": ftel["skipped_rounds"],
+            "crashes": ftel["crashes"],
+            "corrupt_injected": ftel["corrupt_injected"],
+            "rejected": (ftel["rejected_nonfinite"] + ftel["rejected_norm"]),
+            "retries": ftel["retries"],
+            "redispatches": ftel["redispatches"],
+            "overhead_ratio": round(dispatches / (args.rounds * n_sample), 4),
+            "wall_ratio": round(wall / wall_clean, 3),
+        })
+
+    heavy = max(cells, key=lambda c: c["crash_prob"])
+    return {"algo": algo_name, "executor": "vmap",
+            "epochs": task.local_epochs, "precompute": True,
+            "faults": f"crash{int(100 * heavy['crash_prob'])}"
+                      f"+corrupt{int(100 * args.corrupt)}",
+            "clean_acc": round(clean_acc, 4),
+            "acc_drop_at_20pct_crash": heavy["acc_drop"],
+            "overhead_ratio": heavy["overhead_ratio"],
+            "wall_ratio": heavy["wall_ratio"],
+            "sweep": cells}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="toy", choices=sorted(PAPER_TASKS))
+    ap.add_argument("--algos", nargs="+", default=["fedavg", "fedgkd"])
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--crash-grid", nargs="+", type=float,
+                    default=[0.0, 0.1, 0.2], dest="crash_grid")
+    ap.add_argument("--corrupt", type=float, default=0.05)
+    ap.add_argument("--buffer-m", type=int, default=3)
+    ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--max-acc-drop", type=float, default=0.02,
+                    dest="max_acc_drop",
+                    help="fail if the heaviest cell loses more than this "
+                         "much accuracy vs fault-free (the acceptance "
+                         "criterion); negative disables the gate")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_faults.json"))
+    args = ap.parse_args(argv)
+
+    task = PAPER_TASKS[args.task]
+    data = fl_loop.make_federated_data(task, alpha=args.alpha, seed=0,
+                                       n_test=400)
+    n_sample = max(1, int(round(task.participation * data.n_clients)))
+
+    cases = []
+    for algo_name in args.algos:
+        row = bench_algo(algo_name, task, data, n_sample, args)
+        cases.append(row)
+        print(f"{algo_name:>12}: clean acc {row['clean_acc']:.4f}; at "
+              f"{row['faults']}: drop {row['acc_drop_at_20pct_crash']:+.4f}, "
+              f"dispatch overhead {row['overhead_ratio']:.3f}x "
+              f"(wall {row['wall_ratio']:.2f}x)")
+
+    payload = {"task": args.task, "devices": len(jax.devices()),
+               "backend": jax.default_backend(), "clients": n_sample,
+               "width": 16, "corrupt": args.corrupt,
+               "crash_grid": args.crash_grid, "cases": cases}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out}")
+
+    if args.max_acc_drop >= 0:
+        bad = [c for c in cases
+               if c["acc_drop_at_20pct_crash"] > args.max_acc_drop
+               or any(cell["skipped_rounds"] > 0
+                      or cell["rounds_completed"] != args.rounds
+                      for cell in c["sweep"])]
+        if bad:
+            print(f"FAIL: {len(bad)} case(s) violated the <= "
+                  f"{args.max_acc_drop:.2f} accuracy-drop / full-completion "
+                  f"criterion: {[c['algo'] for c in bad]}")
+            return 1
+        print(f"all cases completed every round within "
+              f"{args.max_acc_drop:.2f} of fault-free accuracy")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -41,6 +41,14 @@ def _key_str(p) -> str:
 def save_pytree(path: str, tree: Any, meta: dict | None = None) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     flat = _flatten(tree)
+    # refuse to persist NaN/Inf: a poisoned run must never leave behind a
+    # structurally-valid checkpoint that a later resume would trust —
+    # load_latest can skip a TORN file, but not a well-formed toxic one
+    for key, arr in flat.items():
+        if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+            raise ValueError(
+                f"save_pytree({path!r}): non-finite values at leaf "
+                f"{key!r} — refusing to write a corrupt checkpoint")
     # npz can't round-trip ml_dtypes (bf16 etc.): store the raw bits and a
     # dtype map so load can reinterpret them
     dtypes = {k: str(v.dtype) for k, v in flat.items()}
@@ -63,25 +71,41 @@ def save_pytree(path: str, tree: Any, meta: dict | None = None) -> None:
         os.replace(mtmp, mtmp[:-4])
 
 
-def load_pytree(path: str, like: Any) -> Any:
-    """Load into the structure of ``like`` (dtypes/shapes must match)."""
+def load_flat(path: str) -> dict[str, np.ndarray]:
+    """Raw flattened view of a checkpoint: '/'-joined key -> array, with
+    the ``__dtypes__`` sidecar already re-applied (bf16 bits
+    reinterpreted).  The self-describing half of ``load_pytree`` — used
+    directly by consumers (``checkpoint.recovery``) whose structure is
+    recorded in metadata rather than supplied as a ``like`` template."""
     if not path.endswith(".npz"):
         path += ".npz"
     with np.load(path) as data:
         dtypes = {}
         if "__dtypes__" in data:
             dtypes = msgpack.unpackb(data["__dtypes__"].tobytes())
-        flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
-        leaves = []
-        for kpath, leaf in flat_like:
-            key = "/".join(_key_str(p) for p in kpath)
+        out = {}
+        for key in data.files:
+            if key == "__dtypes__":
+                continue
             arr = data[key]
             saved_dt = dtypes.get(key, str(arr.dtype))
             if saved_dt == "bfloat16" and arr.dtype == np.uint16:
                 import ml_dtypes
                 arr = arr.view(ml_dtypes.bfloat16)
-            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
-            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+            out[key] = arr
+    return out
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load into the structure of ``like`` (dtypes/shapes must match)."""
+    flat = load_flat(path)
+    flat_like, _ = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kpath, leaf in flat_like:
+        key = "/".join(_key_str(p) for p in kpath)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
 
@@ -101,39 +125,52 @@ def save_round(ckpt_dir: str, rnd: int, tree: Any, meta: dict | None = None) -> 
 # truncated zip central directory (BadZipFile), zero-byte file (EOF/OSError
 # variants), a member cut mid-stream (zlib -> OSError subclass), a file
 # missing keys or the dtype sidecar (KeyError), or garbage msgpack
-_CORRUPT_ERRORS = (zipfile.BadZipFile, EOFError, OSError, KeyError,
-                   ValueError, msgpack.exceptions.UnpackException)
+CORRUPT_ERRORS = (zipfile.BadZipFile, EOFError, OSError, KeyError,
+                  ValueError, msgpack.exceptions.UnpackException)
+_CORRUPT_ERRORS = CORRUPT_ERRORS    # historical alias
 
 
-def load_latest(ckpt_dir: str, like: Any) -> tuple[Any, int] | None:
-    """Resume from the newest LOADABLE round file.
+def latest_loadable(ckpt_dir: str, prefix: str, loader) -> \
+        "tuple[Any, int] | None":
+    """Walk ``<ckpt_dir>/<prefix>_NNNNNN.npz`` newest-first and return
+    ``(loader(path), round)`` for the first file that loads.
 
     A crash mid-``save_pytree`` historically left a truncated ``.npz``
     that surfaced as an opaque ``BadZipFile``/``EOFError`` deep inside
     ``np.load`` on the next restart.  New saves are atomic (temp +
     replace), but checkpoints written by older code — or torn by the
-    filesystem — still exist; this walks rounds newest-first, skips any
-    file that fails to load (with a warning naming it), and raises a
-    clear ``RuntimeError`` only when EVERY round file is unreadable
-    (silently restarting from scratch would discard training history).
+    filesystem — still exist; any file that fails to load is skipped
+    (with a warning naming it), and a clear ``RuntimeError`` is raised
+    only when EVERY file is unreadable (silently restarting from scratch
+    would discard training history).  Returns ``None`` when no matching
+    file exists at all.  This is the shared foundation of both
+    ``load_latest`` (plain param trees) and ``checkpoint.recovery``'s
+    full run-state resume.
     """
     if not os.path.isdir(ckpt_dir):
         return None
-    rounds = sorted(
-        int(m.group(1)) for f in os.listdir(ckpt_dir)
-        if (m := re.match(r"round_(\d+)\.npz$", f)))
+    pat = re.compile(re.escape(prefix) + r"_(\d+)\.npz$")
+    rounds = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                    if (m := pat.match(f)))
     if not rounds:
         return None
     failures: list[str] = []
     for rnd in reversed(rounds):
-        path = os.path.join(ckpt_dir, f"round_{rnd:06d}.npz")
+        path = os.path.join(ckpt_dir, f"{prefix}_{rnd:06d}.npz")
         try:
-            return load_pytree(path, like), rnd
-        except _CORRUPT_ERRORS as e:
+            return loader(path), rnd
+        except CORRUPT_ERRORS as e:
             failures.append(f"{path}: {type(e).__name__}: {e}")
             _LOG.warning("skipping unreadable checkpoint %s (%s: %s)",
                          path, type(e).__name__, e)
     raise RuntimeError(
-        "load_latest: every round file in %r is partial or corrupt "
+        "latest_loadable: every %s file in %r is partial or corrupt "
         "(crash mid-save?). Remove the directory to restart from scratch.\n  "
-        % ckpt_dir + "\n  ".join(failures))
+        % (prefix, ckpt_dir) + "\n  ".join(failures))
+
+
+def load_latest(ckpt_dir: str, like: Any) -> tuple[Any, int] | None:
+    """Resume from the newest LOADABLE ``round_*.npz`` (see
+    ``latest_loadable`` for the corrupt-skip semantics)."""
+    return latest_loadable(ckpt_dir, "round",
+                           lambda path: load_pytree(path, like))

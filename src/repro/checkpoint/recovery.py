@@ -1,0 +1,131 @@
+"""Mid-run crash recovery: the FULL federated run state <-> disk.
+
+``checkpoint.io`` persists parameter pytrees; resuming a killed run
+bit-identically needs strictly more — the numpy sampler state, the jax
+PRNG key, the FedGKD ``ModelBuffer`` (models + version counter), the
+fault-injector stream, per-client algorithm state and the round records
+accumulated so far.  Those pieces are not a fixed-structure pytree (the
+teacher buffer grows over early rounds, ``val_losses`` tracks it, rng
+states carry 128-bit integers), so a ``like``-template load cannot
+reconstruct them.
+
+Instead each ``state_NNNNNN.npz`` is SELF-DESCRIBING: every array leaf is
+stored flat under a generated key while a msgpack "spec" in the ``.meta``
+sidecar records the container structure (dict/list/tuple), python scalars,
+big integers (as decimal strings — msgpack tops out at 64 bits) and
+``ModelBuffer`` internals.  ``load_run_state`` folds the two back together
+with no template.  Writes go through ``io.save_pytree`` — atomic
+temp+replace, bf16-safe, and REFUSING non-finite leaves, so a poisoned run
+can never leave a structurally-valid toxic state file behind — and resume
+goes through ``io.latest_loadable``, the same newest-first corrupt-file
+skipping that ``load_latest`` uses: a file torn by a crash mid-save is
+skipped with a warning and the previous round's state restores instead.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io
+from repro.core.server import ModelBuffer
+
+_I64_MAX = 2 ** 63 - 1
+
+
+def _encode(obj: Any, arrays: dict) -> Any:
+    """Recursively split ``obj`` into a msgpack-safe spec + flat arrays."""
+    if isinstance(obj, ModelBuffer):
+        return {"k": "modelbuffer", "size": obj.size,
+                "versions": list(obj._versions),
+                "next_version": obj._next_version,
+                "models": [_encode(m, arrays) for m in obj._buf]}
+    if isinstance(obj, dict):
+        return {"k": "dict", "keys": [_encode(k, arrays) for k in obj],
+                "vals": [_encode(v, arrays) for v in obj.values()]}
+    if isinstance(obj, (list, tuple)):
+        return {"k": "list" if isinstance(obj, list) else "tuple",
+                "items": [_encode(v, arrays) for v in obj]}
+    if hasattr(obj, "shape") and hasattr(obj, "dtype"):
+        key = f"a{len(arrays)}"
+        arrays[key] = np.asarray(obj)
+        return {"k": "arr", "ref": key}
+    if isinstance(obj, bool) or obj is None or isinstance(obj, (float, str)):
+        return {"k": "py", "v": obj}
+    if isinstance(obj, (int, np.integer)):
+        v = int(obj)
+        if abs(v) > _I64_MAX:    # PCG64 state words are 128-bit
+            return {"k": "bigint", "v": str(v)}
+        return {"k": "py", "v": v}
+    raise TypeError(f"run-state serializer: unsupported {type(obj)!r}")
+
+
+def _decode(spec: Any, arrays: dict) -> Any:
+    kind = spec["k"]
+    if kind == "modelbuffer":
+        buf = ModelBuffer(spec["size"])
+        for m, v in zip(spec["models"], spec["versions"]):
+            buf._buf.append(_decode(m, arrays))
+            buf._versions.append(v)
+        buf._next_version = spec["next_version"]
+        return buf
+    if kind == "dict":
+        return {_decode(k, arrays): _decode(v, arrays)
+                for k, v in zip(spec["keys"], spec["vals"])}
+    if kind == "list":
+        return [_decode(v, arrays) for v in spec["items"]]
+    if kind == "tuple":
+        return tuple(_decode(v, arrays) for v in spec["items"])
+    if kind == "arr":
+        return jnp.asarray(arrays[spec["ref"]])
+    if kind == "py":
+        return spec["v"]
+    if kind == "bigint":
+        return int(spec["v"])
+    raise ValueError(f"run-state spec: unknown kind {kind!r}")
+
+
+def rng_state(rng: np.random.Generator) -> dict:
+    """Snapshot a numpy Generator (plain nested dict of ints/strings)."""
+    return rng.bit_generator.state
+
+
+def restore_rng(rng: np.random.Generator, state: dict) -> None:
+    rng.bit_generator.state = state
+
+
+def save_run_state(ckpt_dir: str, rnd: int, state: dict,
+                   meta: dict | None = None) -> str:
+    """Persist one round's full run state as ``state_NNNNNN.npz`` +
+    ``.meta``.  ``state`` is an arbitrary nesting of dict / list / tuple /
+    arrays / scalars / ``ModelBuffer`` — see the module docstring."""
+    arrays: dict[str, np.ndarray] = {}
+    spec = _encode(state, arrays)
+    path = os.path.join(ckpt_dir, f"state_{rnd:06d}.npz")
+    # zero arrays (an all-scalar state) still writes a valid empty npz
+    io.save_pytree(path, arrays, meta={"round": rnd, "spec": spec,
+                                       **(meta or {})})
+    return path
+
+
+def load_run_state(path: str) -> tuple[dict, dict]:
+    """``(state, meta)`` for one state file (raises io.CORRUPT_ERRORS on a
+    torn/invalid file — callers resume through ``load_latest_state``)."""
+    arrays = io.load_flat(path)
+    meta = io.load_meta(path)
+    return _decode(meta["spec"], arrays), meta
+
+
+def load_latest_state(ckpt_dir: str) -> "tuple[dict, dict, int] | None":
+    """Resume data from the newest LOADABLE state file: ``(state, meta,
+    round)``, or ``None`` when the directory holds no state files yet (a
+    fresh run).  Unreadable files are skipped newest-first exactly like
+    ``io.load_latest``; all-corrupt raises rather than silently
+    restarting from scratch."""
+    hit = io.latest_loadable(ckpt_dir, "state", load_run_state)
+    if hit is None:
+        return None
+    (state, meta), rnd = hit
+    return state, meta, rnd

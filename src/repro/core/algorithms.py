@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.core import distillation as D
 from repro.core.modelzoo import ModelBundle
-from repro.core.server import ModelBuffer, weighted_average
+from repro.core.server import ModelBuffer, first_nonfinite_path, \
+    weighted_average
 from repro.models import layers
 
 
@@ -312,9 +313,19 @@ class FedGKD(Algorithm):
         buffer) instead of being discarded: the stale client models are
         fused by their data weights into ONE buffer entry per aggregation
         event, so the ``ModelBuffer`` version counter bumps exactly once
-        and the executor part-caches invalidate exactly one part."""
+        and the executor part-caches invalidate exactly one part.
+
+        Quarantine: a non-finite stale model never becomes a teacher —
+        the fault-handling loop validates updates before they get here,
+        but ``absorb_stale`` is also reachable with raw buffer contents,
+        and one poisoned entry would distill NaNs into every subsequent
+        local step.  Invalid entries are skipped (no version bump, part
+        caches stay clean); so is a fused result that is bitwise equal
+        to the current head (``ModelBuffer.push`` refuses duplicates)."""
         stale = [(u["params"], w) for u, s, w in
                  zip(uploads, staleness, weights) if s > 0]
+        stale = [(p, w) for p, w in stale
+                 if first_nonfinite_path(p) is None]
         if not stale:
             return server
         fused = weighted_average([p for p, _ in stale],

@@ -1058,6 +1058,14 @@ class AsyncExecutor:
       availability      optional ``systemsim.Availability`` duty cycle
       inner             ready-cohort executor spec or instance
       base_step_time    virtual seconds per unit of local work
+
+    Fault tolerance composes from the OUTSIDE, not here: pass
+    ``run_federated(faults=systemsim.FaultProfile(...))`` and the async
+    drive loop draws per-dispatch crash/timeout/corrupt faults from the
+    dedicated fault stream, validates completions at buffer-fill time
+    (``server.validate_update``), and re-dispatches failed clients with
+    capped backoff on the simulated clock — the same knobs drive the
+    synchronous executors, so faults fire identically across routes.
     """
 
     name = "async"

@@ -111,7 +111,11 @@ def run_federated(task: PaperTask, algo: Algorithm,
                   round_callback=None, dp=None,
                   executor: "str | executor_lib.ClientExecutor" = "auto",
                   precompute: "bool | str" = "auto",
-                  client_batched: "bool | str" = "auto") -> History:
+                  client_batched: "bool | str" = "auto",
+                  faults=None, fault_policy=None,
+                  checkpoint_dir: Optional[str] = None,
+                  checkpoint_every: int = 1,
+                  resume: bool = False) -> History:
     """Run T communication rounds of ``algo`` on the partitioned data.
 
     ``data`` is the eager in-memory dataset (``FederatedData``); for
@@ -140,6 +144,24 @@ def run_federated(task: PaperTask, algo: Algorithm,
     client-batched round body on conv backbones (``"auto"`` uses it when
     the model + algorithm support it; ``False`` forces the historical
     vmapped body — the conv benchmarks' naive baseline).
+
+    ``faults=`` (a ``systemsim.FaultProfile``) turns on fault-tolerant
+    rounds: per-dispatch crash/timeout/corrupt draws from a dedicated
+    child stream of the seed (identical across executor routes), a
+    server-side ``validate_update`` admission gate, quorum aggregation
+    with capped-exponential-backoff retries (``fault_policy=``, a
+    ``server.FaultPolicy``), and fault counters on
+    ``History.telemetry["faults"]``.  A zero-probability profile is
+    bit-identical to ``faults=None``.
+
+    ``checkpoint_dir=`` persists the FULL run state every
+    ``checkpoint_every`` rounds (params, teacher buffer, rng/sampler
+    state, per-client state, round records — ``checkpoint.recovery``);
+    ``resume=True`` restores the newest loadable state file from that
+    directory (torn files are skipped) and continues bit-identically to
+    the uninterrupted run.  Supported on the synchronous executors with
+    eager ``data=`` (the async event heap and the out-of-core population
+    state tiers are not checkpointable yet).
     """
     if (data is None) == (population is None):
         raise ValueError("pass exactly one of data= (eager FederatedData) "
@@ -198,19 +220,65 @@ def run_federated(task: PaperTask, algo: Algorithm,
     n_val = min(256, len(data.test_y) // 4)
     val_batch = (jnp.asarray(data.test_x[:n_val]), jnp.asarray(data.test_y[:n_val]))
 
+    injector = None
+    policy = None
+    if faults is not None:
+        from repro.core import systemsim
+        from repro.core.server import FaultPolicy
+        injector = systemsim.FaultInjector(faults,
+                                           systemsim.derive_fault_rng(seed))
+        policy = fault_policy if fault_policy is not None else FaultPolicy()
+        ctx.telemetry["faults"] = _fault_counters(policy)
+
+    if resume and checkpoint_dir is None:
+        raise ValueError("resume=True requires checkpoint_dir=")
+    if checkpoint_dir is not None:
+        if inner is not None:
+            raise ValueError("checkpointing the async executor is not "
+                             "supported: the in-flight event heap is not "
+                             "serializable run state yet")
+        if pop is not None:
+            raise ValueError("checkpointing with population= is not "
+                             "supported: per-client state lives in the "
+                             "out-of-core tiers, not the checkpoint")
+
     if inner is not None:
         return _run_async(task, algo, data, model, server, ctx, exec_, inner,
                           rng, jrng, seed=seed, rounds=rounds,
                           eval_every=eval_every, verbose=verbose,
                           round_callback=round_callback, dp=dp,
                           n_sample=n_sample, client_states=client_states,
-                          val_batch=val_batch, pop=pop)
+                          val_batch=val_batch, pop=pop,
+                          injector=injector, policy=policy)
 
     records: list[RoundRecord] = []
     local_acc = 0.0
     uploads: list[dict] = []
 
-    for t in range(rounds):
+    start_round = 0
+    if resume:
+        from repro.checkpoint import recovery
+        hit = recovery.load_latest_state(checkpoint_dir)
+        if hit is not None:
+            state, meta, start_round = hit
+            if meta.get("algo") not in (None, algo.name):
+                raise ValueError(
+                    f"resume: checkpoint was written by algo "
+                    f"{meta.get('algo')!r}, this run is {algo.name!r}")
+            server = state["server"]
+            jrng = state["jrng"]
+            recovery.restore_rng(rng, state["np_rng"])
+            if injector is not None and state.get("fault_rng") is not None:
+                recovery.restore_rng(injector.rng, state["fault_rng"])
+                if state.get("fault_counters") is not None:
+                    injector.counters.update(state["fault_counters"])
+                if state.get("fault_telemetry") is not None:
+                    ctx.telemetry["faults"].update(state["fault_telemetry"])
+            records = [RoundRecord(**d) for d in state["records"]]
+            for k, s in enumerate(state["client_states"]):
+                client_states[k] = s
+
+    for t in range(start_round, rounds):
         t0 = time.time()
         jrng, krng = jax.random.split(jrng)
         sampled = data.sample_cohort(rng, n_sample)
@@ -221,11 +289,20 @@ def run_federated(task: PaperTask, algo: Algorithm,
             # the cohort must not thrash the warm tier against itself
             # while the round materializes / trains it
             pop.pin(cids)
-        result = exec_.run_round(
-            ctx, server["global"], payload,
-            [client_states[k] for k in cids],
-            [data.clients[k] for k in cids], rng,
-            client_ids=cids)
+        if injector is None:
+            result = exec_.run_round(
+                ctx, server["global"], payload,
+                [client_states[k] for k in cids],
+                [data.clients[k] for k in cids], rng,
+                client_ids=cids)
+            uploads, weights = result.uploads, result.weights
+            local_losses = result.local_losses
+            for k, new_state in zip(cids, result.client_states):
+                client_states[k] = new_state
+        else:
+            uploads, weights, local_losses = _fault_tolerant_round(
+                exec_, ctx, server, payload, client_states, data, rng,
+                cids, injector, policy)
         if verbose and t == 0:
             # which route actually ran (the shard_map executor may degrade
             # to vmap on a single device — see RoundContext.telemetry)
@@ -235,33 +312,40 @@ def run_federated(task: PaperTask, algo: Algorithm,
                   + (f" ({tele['n_devices']} devices, cohort "
                      f"{tele['cohort']} padded to {tele['padded_to']})"
                      if "padded_to" in tele else ""))
-        uploads, weights = result.uploads, result.weights
-        local_losses = result.local_losses
-        for k, new_state in zip(cids, result.client_states):
-            client_states[k] = new_state
         if pop is not None:
             pop.unpin(cids)
             ctx.telemetry["population"] = pop.stats()
 
-        if dp is not None:
-            from repro.core import privacy
-            uploads = privacy.privatize_uploads(uploads, server["global"],
-                                                dp, t)
-        server = algo.server_update(server, uploads, weights, model, val_batch,
-                                    n_clients=data.n_clients)
-        if dp is not None:
-            from repro.core import privacy
-            server["global"] = privacy.noise_aggregate(server["global"], dp,
-                                                       len(uploads), t)
+        if not uploads:
+            # every client of the cohort crashed/was rejected through all
+            # retries: hold the global fixed rather than aggregate nothing
+            ctx.telemetry["faults"]["skipped_rounds"] += 1
+        else:
+            if dp is not None:
+                from repro.core import privacy
+                uploads = privacy.privatize_uploads(uploads, server["global"],
+                                                    dp, t)
+            server = algo.server_update(server, uploads, weights, model,
+                                        val_batch, n_clients=data.n_clients)
+            if dp is not None:
+                from repro.core import privacy
+                server["global"] = privacy.noise_aggregate(server["global"],
+                                                           dp, len(uploads), t)
 
         if (t + 1) % eval_every == 0 or t == rounds - 1:
             acc, loss = evaluate(model, server["global"], data.test_x, data.test_y)
         else:
             acc, loss = (records[-1].test_acc, records[-1].test_loss) if records else (0.0, 0.0)
         records.append(RoundRecord(t + 1, acc, loss,
-                                   float(np.mean(local_losses)),
+                                   float(np.mean(local_losses)) if local_losses
+                                   else 0.0,
                                    time.time() - t0,
                                    sampled=tuple(int(k) for k in sampled)))
+        if checkpoint_dir is not None and (
+                (t + 1) % checkpoint_every == 0 or t == rounds - 1):
+            _save_checkpoint(checkpoint_dir, t + 1, algo, server, jrng, rng,
+                             injector, records, client_states, data.n_clients,
+                             ftel=ctx.telemetry.get("faults"))
         if round_callback is not None:
             round_callback(t + 1, server, model)
         if verbose:
@@ -272,8 +356,115 @@ def run_federated(task: PaperTask, algo: Algorithm,
     if uploads:
         local_acc, _ = evaluate(model, uploads[-1]["params"],
                                 data.test_x, data.test_y)
+    if injector is not None:
+        ctx.telemetry["faults"].update(injector.counters)
     return History(algo.name, records, server["global"], local_acc,
                    dict(ctx.telemetry))
+
+
+def _fault_counters(policy) -> dict:
+    """Zeroed ``History.telemetry["faults"]`` schema (injection counters
+    from ``FaultInjector.counters`` merge in at the end of the run)."""
+    return {"crashes": 0, "timeouts": 0, "corrupt_injected": 0,
+            "rejected_nonfinite": 0, "rejected_norm": 0,
+            "retries": 0, "redispatches": 0, "backoff_wait": 0.0,
+            "quorum_shortfalls": 0, "skipped_rounds": 0,
+            "dropped_clients": 0, "quorum_frac": policy.quorum_frac}
+
+
+def _fault_tolerant_round(exec_, ctx, server, payload, client_states, data,
+                          rng, cids, injector, policy):
+    """One synchronous round under fault injection: train the cohort, draw
+    per-dispatch faults, gate survivors through ``validate_update``, and
+    retry the failed subset with capped exponential backoff until
+    ``quorum_frac`` of the cohort survives (or retries run out).
+
+    Returns ``(uploads, weights, local_losses)`` over the survivors, in
+    cohort order; survivor client state commits, failed state does not (a
+    crashed client's local work is lost, a corrupt client's state is as
+    suspect as its update).  With a zero-probability profile every client
+    survives on attempt 0 and the round is bit-identical to the unfaulted
+    path.
+    """
+    from repro.core import systemsim
+    from repro.core.server import validate_update
+
+    ftel = ctx.telemetry["faults"]
+    quorum = max(1, int(np.ceil(policy.quorum_frac * len(cids))))
+    uploads: list[dict] = []
+    weights: list[float] = []
+    losses: list[float] = []
+    state_commits: dict = {}
+    pending = list(cids)
+    attempt = 0
+    while pending:
+        drawn = [(k, injector.draw()) for k in pending]
+        # crash/timeout: the update never arrives, nothing to train for —
+        # the simulation skips the wasted local work entirely
+        failed = [k for k, f in drawn
+                  if f is not None and f[0] in ("crash", "timeout")]
+        alive = [(k, f) for k, f in drawn
+                 if f is None or f[0] == "corrupt"]
+        if alive:
+            ids = [k for k, _ in alive]
+            result = exec_.run_round(
+                ctx, server["global"], payload,
+                [client_states[k] for k in ids],
+                [data.clients[k] for k in ids], rng, client_ids=ids)
+            for i, (k, f) in enumerate(alive):
+                up = result.uploads[i]
+                if f is not None:
+                    up = dict(up, params=systemsim.corrupt_params(
+                        up["params"], f[1], injector.profile.huge_scale))
+                ok, reason = validate_update(
+                    up["params"], server["global"],
+                    max_norm_mult=policy.max_norm_mult)
+                if ok:
+                    uploads.append(up)
+                    weights.append(result.weights[i])
+                    losses.append(result.local_losses[i])
+                    state_commits[k] = result.client_states[i]
+                else:
+                    ftel["rejected_nonfinite"
+                         if reason.startswith("nonfinite")
+                         else "rejected_norm"] += 1
+                    failed.append(k)
+        if len(uploads) >= quorum or not failed \
+                or attempt >= policy.max_retries:
+            break
+        # re-dispatch the failed subset after a capped exponential backoff
+        # on the (virtual) clock; each retry re-trains from the same
+        # round-frozen payload against the current global
+        attempt += 1
+        ftel["retries"] += 1
+        ftel["redispatches"] += len(failed)
+        ftel["backoff_wait"] += policy.backoff(attempt)
+        pending = failed
+    if len(uploads) < quorum:
+        ftel["quorum_shortfalls"] += 1
+    for k, s in state_commits.items():
+        client_states[k] = s
+    return uploads, weights, losses
+
+
+def _save_checkpoint(ckpt_dir, rnd, algo, server, jrng, rng, injector,
+                     records, client_states, n_clients, ftel=None):
+    from repro.checkpoint import recovery
+    state = {
+        "server": server,
+        "jrng": jrng,
+        "np_rng": recovery.rng_state(rng),
+        "fault_rng": (recovery.rng_state(injector.rng)
+                      if injector is not None else None),
+        # counters travel with the rng so a resumed run's fault telemetry
+        # matches the uninterrupted run, not just the post-resume tail
+        "fault_counters": (dict(injector.counters)
+                           if injector is not None else None),
+        "fault_telemetry": dict(ftel) if ftel is not None else None,
+        "records": [dataclasses.asdict(r) for r in records],
+        "client_states": [client_states[k] for k in range(n_clients)],
+    }
+    recovery.save_run_state(ckpt_dir, rnd, state, meta={"algo": algo.name})
 
 
 def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
@@ -284,7 +475,7 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
                rng: np.random.Generator, jrng, *, seed: int, rounds: int,
                eval_every: int, verbose: bool, round_callback, dp,
                n_sample: int, client_states: dict, val_batch,
-               pop=None) -> History:
+               pop=None, injector=None, policy=None) -> History:
     """Buffered-asynchronous rounds on a simulated heterogeneous system.
 
     Event structure (one History record per AGGREGATION, i.e. per global
@@ -313,6 +504,16 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
     ``rng``/``jrng`` are consumed exactly like the synchronous loop
     (sample, then materialize), which is what makes the equivalence and
     determinism suites exact.
+
+    With fault injection (``injector``/``policy`` from
+    ``run_federated(faults=)``) each dispatch additionally draws a fault
+    from the dedicated fault stream: crashed/timed-out/invalid
+    completions are skipped by the buffer fill (which keeps draining the
+    heap until it holds ``B`` VALIDATED updates), the failed client is
+    re-dispatched against the current global after a capped exponential
+    backoff on the simulated clock (dropped from the fleet after
+    ``max_retries`` consecutive failures), and the post-aggregation
+    refill tops the fleet back up to ``n_sample`` in flight.
     """
     from repro.core import systemsim
     from repro.core.server import async_aggregation_weights
@@ -354,6 +555,42 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
     max_stale = 0.0
     records: list[RoundRecord] = []
     uploads: list[dict] = []
+    ftel = ctx.telemetry.get("faults")
+    fail_count: dict[int, int] = {}     # consecutive failures per client
+
+    def launch(cids: "list[int]", krng, delay: float = 0.0) -> None:
+        """Train ``cids`` against the current global and schedule their
+        completions (with per-dispatch fault draws when injection is on:
+        a faulted dispatch still occupies the heap — inflated by the
+        timeout factor for the timeout tail — but its tag marks it dead
+        or carries a corrupted upload for the validation gate)."""
+        payload = algo.round_payload(server, krng)
+        if pop is not None:
+            # in-flight clients keep their warm shard / device slab /
+            # state-tier entries until their completions aggregate
+            pop.pin(cids)
+        result = inner.run_round(
+            ctx, server["global"], payload,
+            [client_states[k] for k in cids],
+            [data.clients[k] for k in cids], rng, client_ids=cids)
+        for i, k in enumerate(cids):
+            fault = injector.draw() if injector is not None else None
+            up = result.uploads[i]
+            if fault is None:
+                # a failed client's local work is lost: only healthy
+                # dispatches commit their state update
+                client_states[k] = result.client_states[i]
+            elif fault[0] == "corrupt":
+                up = dict(up, params=systemsim.corrupt_params(
+                    up["params"], fault[1], injector.profile.huge_scale))
+            slowdown = (injector.profile.timeout_factor
+                        if fault is not None and fault[0] == "timeout"
+                        else 1.0)
+            in_flight.add(k)
+            sim.dispatch(k, work_of(k), tag={
+                "upload": up, "weight": result.weights[i],
+                "loss": result.local_losses[i], "version": version,
+                "fault": fault}, delay=delay, slowdown=slowdown)
 
     def dispatch_wave(k_count: int) -> None:
         nonlocal jrng
@@ -365,28 +602,75 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         # sync loop; with clients in flight the excluded draw reproduces
         # the historical sorted-idle-array indexing bit for bit
         sampled = data.sample_cohort(rng, k_count, exclude=in_flight)
-        payload = algo.round_payload(server, krng)
-        cids = [int(k) for k in sampled]
-        if pop is not None:
-            # in-flight clients keep their warm shard / device slab /
-            # state-tier entries until their completions aggregate
-            pop.pin(cids)
-        result = inner.run_round(
-            ctx, server["global"], payload,
-            [client_states[k] for k in cids],
-            [data.clients[k] for k in cids], rng, client_ids=cids)
-        for k, new_state in zip(cids, result.client_states):
-            client_states[k] = new_state
-        for i, k in enumerate(cids):
-            in_flight.add(k)
-            sim.dispatch(k, work_of(k), tag={
-                "upload": result.uploads[i], "weight": result.weights[i],
-                "loss": result.local_losses[i], "version": version})
+        launch([int(k) for k in sampled], krng)
+
+    def redispatch(k: int, delay: float) -> None:
+        nonlocal jrng
+        jrng, krng = jax.random.split(jrng)
+        launch([k], krng, delay=delay)
+
+    def fill_buffer() -> list:
+        """Drain the heap until it yields ``b`` VALIDATED completions —
+        dead (crash/timeout) and rejected updates are skipped, their
+        clients re-dispatched with capped exponential backoff (dropped
+        from the fleet after ``max_retries`` consecutive failures).  May
+        return fewer than ``b`` (even zero) when the whole fleet fails
+        out."""
+        from repro.core.server import validate_update
+
+        out: list = []
+        while len(out) < b and sim.in_flight > 0:
+            c = sim.pop()
+            fault = c.tag.get("fault")
+            if fault is None or fault[0] == "corrupt":
+                ok, reason = validate_update(
+                    c.tag["upload"]["params"], server["global"],
+                    max_norm_mult=policy.max_norm_mult)
+                if ok:
+                    out.append(c)
+                    fail_count.pop(c.client, None)
+                    continue
+                ftel["rejected_nonfinite"
+                     if reason.startswith("nonfinite")
+                     else "rejected_norm"] += 1
+            # dead completion: free the slot, retry or drop the client
+            in_flight.discard(c.client)
+            if pop is not None:
+                pop.unpin([c.client])
+            fails = fail_count.get(c.client, 0) + 1
+            fail_count[c.client] = fails
+            if fails <= policy.max_retries:
+                delay = policy.backoff(fails)
+                ftel["redispatches"] += 1
+                ftel["retries"] += 1
+                ftel["backoff_wait"] += delay
+                redispatch(c.client, delay)
+            else:
+                ftel["dropped_clients"] += 1
+                fail_count.pop(c.client, None)
+        return out
 
     dispatch_wave(n_sample)
     for t in range(rounds):
         t0 = time.time()
-        completions = sim.pop_batch(b)
+        if injector is None:
+            completions = sim.pop_batch(b)
+        else:
+            completions = fill_buffer()
+            if not completions:
+                # the whole fleet failed out this aggregation window:
+                # hold the global, record the skipped event, redial
+                ftel["skipped_rounds"] += 1
+                acc, loss = ((records[-1].test_acc, records[-1].test_loss)
+                             if records else
+                             evaluate(model, server["global"],
+                                      data.test_x, data.test_y))
+                records.append(RoundRecord(
+                    t + 1, acc, loss, 0.0, time.time() - t0,
+                    sim_time=sim.now, version=version))
+                if t < rounds - 1:
+                    dispatch_wave(min(b, data.n_clients - len(in_flight)))
+                continue
         # canonical aggregation order: dispatch sequence (see docstring)
         completions.sort(key=lambda c: c.seq)
         staleness = [version - c.tag["version"] for c in completions]
@@ -448,7 +732,14 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
                   f"local={np.mean(local_losses):.4f} "
                   f"sim_t={sim.now:.1f} stale={np.mean(staleness):.2f}")
         if t < rounds - 1:
-            dispatch_wave(b)
+            if injector is None:
+                dispatch_wave(b)
+            else:
+                # permanently dropped clients shrink the fleet below
+                # n_sample: top back up (bounded by the idle population)
+                want = min(n_sample - len(in_flight),
+                           data.n_clients - len(in_flight))
+                dispatch_wave(max(0, want))
 
     if pop is not None and in_flight:
         # clients still in flight when the run ends would stay pinned —
@@ -462,6 +753,8 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         stale_absorbed=stale_absorbed,
         mean_staleness=float(np.mean([r.mean_staleness for r in records])),
         max_staleness=max_stale, sim=sim.stats())
+    if injector is not None:
+        ftel.update(injector.counters)
 
     local_acc = 0.0
     if uploads:

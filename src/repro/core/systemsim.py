@@ -29,6 +29,21 @@ the ``numpy.random.Generator`` handed in at construction — there is no
 builds the canonical generator for a training seed (a child stream of the
 run's SeedSequence, so the simulation does not perturb the batch/sampling
 draws of the equivalent synchronous run).
+
+Fault injection
+---------------
+``FaultProfile`` + ``FaultInjector`` add client FAILURES on top of the
+speed/availability model: per dispatch a client may CRASH (its update
+never arrives), TIME OUT (it arrives only after a ``timeout_factor``×
+inflated duration — past any reasonable deadline, so the server treats it
+as dead), or upload a CORRUPT update (NaN / Inf / exploded-norm
+parameters, the three shapes a broken client actually produces).  Draws
+come from ``derive_fault_rng(seed)`` — a SECOND child stream, distinct
+from the sim stream — so enabling faults perturbs neither the
+speed/availability draws nor the main sampling/batch rng: a zero-
+probability profile replays the fault-free run bit for bit, and the same
+seed fires the same faults whichever executor route
+(sequential/vmap/shard_map/async) consumes the dispatch sequence.
 """
 from __future__ import annotations
 
@@ -41,14 +56,27 @@ import numpy as np
 # child-stream key for derive_rng: the sim draws from a stream SPAWNED off
 # the training seed so async and sync runs consume the main rng identically
 _SIM_STREAM_KEY = 0x5E1F
+# a separate child stream for fault draws: faults must not perturb the
+# speed/availability stream (or the main rng) so a zero-probability
+# profile is bit-identical to no profile at all
+_FAULT_STREAM_KEY = 0xFA17
 
 _PROFILE_KINDS = ("homogeneous", "straggler", "lognormal", "uniform")
+
+CORRUPT_MODES = ("nan", "inf", "huge")
 
 
 def derive_rng(seed: int) -> np.random.Generator:
     """The canonical simulation generator for a training seed."""
     return np.random.default_rng(np.random.SeedSequence(
         entropy=seed, spawn_key=(_SIM_STREAM_KEY,)))
+
+
+def derive_fault_rng(seed: int) -> np.random.Generator:
+    """The canonical FAULT generator for a training seed (its own child
+    stream: fault draws never consume the sim or sampling streams)."""
+    return np.random.default_rng(np.random.SeedSequence(
+        entropy=seed, spawn_key=(_FAULT_STREAM_KEY,)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +117,108 @@ class Availability:
             raise ValueError(f"duty must be in (0, 1], got {self.duty}")
         if self.period <= 0.0:
             raise ValueError(f"period must be positive, got {self.period}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProfile:
+    """Per-dispatch failure model (all probabilities independent draws).
+
+        crash_prob      client dies mid-round: the update never arrives
+        timeout_prob    client straggles into the timeout tail: its
+                        completion lands at ``timeout_factor`` × the
+                        honest duration, past any deadline — the server
+                        treats it exactly like a crash, but it is counted
+                        separately (and occupies the async event heap for
+                        the inflated duration)
+        corrupt_prob    the update arrives but is garbage; the corruption
+                        MODE is drawn uniformly from ``corrupt_modes``:
+                        "nan" / "inf" poison one parameter element,
+                        "huge" scales every parameter by ``huge_scale``
+                        (finite, but a norm outlier)
+
+    A profile with all probabilities zero is exactly equivalent to no
+    profile: the fault stream is still drawn from, but from its OWN child
+    stream (``derive_fault_rng``), so nothing else shifts.
+    """
+    crash_prob: float = 0.0
+    timeout_prob: float = 0.0
+    corrupt_prob: float = 0.0
+    corrupt_modes: tuple = CORRUPT_MODES
+    timeout_factor: float = 16.0
+    huge_scale: float = 1e6
+
+    def __post_init__(self):
+        total = self.crash_prob + self.timeout_prob + self.corrupt_prob
+        if not (0.0 <= total <= 1.0):
+            raise ValueError(
+                f"fault probabilities must sum into [0, 1], got {total}")
+        for m in self.corrupt_modes:
+            if m not in CORRUPT_MODES:
+                raise ValueError(f"unknown corrupt mode {m!r}; "
+                                 f"available: {CORRUPT_MODES}")
+
+    @property
+    def any(self) -> bool:
+        return (self.crash_prob + self.timeout_prob
+                + self.corrupt_prob) > 0.0
+
+
+class FaultInjector:
+    """Seeded per-dispatch fault draws + injection counters.
+
+    ``draw()`` consumes ONE uniform per dispatch (plus one more only when
+    a corruption fires, to pick the mode), so the fault sequence is a pure
+    function of the seed and the dispatch order — the three synchronous
+    executors share a dispatch order (the sampled cohort) and therefore
+    fire identical faults.
+    """
+
+    def __init__(self, profile: FaultProfile,
+                 rng: Optional[np.random.Generator] = None):
+        self.profile = profile
+        self.rng = rng if rng is not None else derive_fault_rng(0)
+        self.counters = {"crashes": 0, "timeouts": 0, "corrupt_injected": 0}
+
+    def draw(self) -> "tuple[str, str] | None":
+        """``None`` (healthy) or ``(kind, mode)`` with kind in
+        crash/timeout/corrupt and mode one of ``CORRUPT_MODES`` (empty
+        string for non-corrupt kinds)."""
+        p = self.profile
+        u = self.rng.random()
+        if u < p.crash_prob:
+            self.counters["crashes"] += 1
+            return ("crash", "")
+        if u < p.crash_prob + p.timeout_prob:
+            self.counters["timeouts"] += 1
+            return ("timeout", "")
+        if u < p.crash_prob + p.timeout_prob + p.corrupt_prob:
+            mode = p.corrupt_modes[
+                int(self.rng.integers(len(p.corrupt_modes)))]
+            self.counters["corrupt_injected"] += 1
+            return ("corrupt", mode)
+        return None
+
+
+def corrupt_params(params: Any, mode: str, huge_scale: float = 1e6) -> Any:
+    """Apply one corruption mode to a parameter pytree (pure).
+
+    "nan"/"inf" poison a single element of the first leaf — the subtle
+    shape, exercising the validator's full-tree scan rather than handing
+    it an all-garbage tensor; "huge" multiplies every leaf by
+    ``huge_scale`` — all-finite, caught only by the norm gate.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if mode == "huge":
+        return jax.tree_util.tree_map(lambda l: l * huge_scale, params)
+    if mode not in ("nan", "inf"):
+        raise ValueError(f"unknown corrupt mode {mode!r}")
+    poison = jnp.nan if mode == "nan" else jnp.inf
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    first = leaves[0]
+    leaves[0] = first.at[(0,) * first.ndim].set(poison)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def draw_speeds(profile: SpeedProfile, n_clients: int,
@@ -165,14 +295,23 @@ class SystemSim:
     def in_flight(self) -> int:
         return len(self._heap)
 
-    def dispatch(self, client: int, work: float, tag: Any = None) -> float:
+    def dispatch(self, client: int, work: float, tag: Any = None, *,
+                 delay: float = 0.0, slowdown: float = 1.0) -> float:
         """Start ``work`` units on ``client`` at the current clock (or its
-        next availability window); returns the scheduled completion time."""
-        start = self.next_available(client, self.now)
-        if start > self.now:
+        next availability window); returns the scheduled completion time.
+
+        ``delay`` pushes the earliest start past ``now`` (the retry
+        path's exponential backoff on the simulated clock); ``slowdown``
+        inflates the duration (the fault model's timeout tail).
+        """
+        earliest = self.now + delay
+        start = self.next_available(client, earliest)
+        if start > earliest:
+            # only the availability wait counts here; the caller tracks
+            # its own backoff delay in the fault telemetry
             self.availability_delays += 1
-            self.total_wait += start - self.now
-        completion = start + self.duration(client, work)
+            self.total_wait += start - earliest
+        completion = start + self.duration(client, work) * slowdown
         heapq.heappush(self._heap, (completion, self._seq, client, tag))
         self._seq += 1
         self.dispatches += 1

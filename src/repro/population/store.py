@@ -146,6 +146,7 @@ class ClientStateStore:
         self.state_hits = 0
         self.state_spills = 0
         self.state_loads = 0
+        self.state_corrupt_reinits = 0
         self.peak_warm = 0
 
     def _spill_path(self, cid: int) -> str:
@@ -163,9 +164,24 @@ class ClientStateStore:
             self.state_hits += 1
             return self.warm[cid]
         if cid in self.spilled:
-            from repro.checkpoint.io import load_pytree
-            state = load_pytree(self._spill_path(cid), like=self.init_fn(cid))
-            self.state_loads += 1
+            from repro.checkpoint.io import CORRUPT_ERRORS, load_pytree
+            try:
+                state = load_pytree(self._spill_path(cid),
+                                    like=self.init_fn(cid))
+                self.state_loads += 1
+            except CORRUPT_ERRORS as e:
+                # a torn/garbage spill file (crash mid-save, disk fault)
+                # must not kill the run: the client restarts from its
+                # initial state — the same semantics as never having been
+                # sampled — and the event is counted + logged
+                import logging
+                logging.getLogger("repro.population").warning(
+                    "corrupt state spill for client %d (%s: %s); "
+                    "re-initializing", cid, type(e).__name__, e)
+                self.spilled.discard(cid)
+                state = self.init_fn(cid)
+                self.state_corrupt_reinits += 1
+                self.state_inits += 1
         else:
             state = self.init_fn(cid)
             self.state_inits += 1
@@ -197,4 +213,5 @@ class ClientStateStore:
                 "state_inits": self.state_inits, "state_hits": self.state_hits,
                 "state_spills": self.state_spills,
                 "state_loads": self.state_loads,
+                "state_corrupt_reinits": self.state_corrupt_reinits,
                 "state_peak_warm": self.peak_warm}

@@ -180,6 +180,56 @@ def test_availability_windows():
         Availability(period=-1.0)
 
 
+def test_availability_boundaries_are_half_open():
+    """Windows are ``[open, close)``: a dispatch landing EXACTLY on the
+    closing edge has missed the window; one landing exactly on the opening
+    edge starts immediately."""
+    av = Availability(period=10.0, duty=0.5)
+    sim = SystemSim(2, SpeedProfile(), availability=av,
+                    rng=np.random.default_rng(3))
+    sim.phases = np.array([0.0, 5.0])   # windows [0,5), [5,10) mod 10
+    # exactly on the closing edge: closed, wait a full off-cycle
+    assert sim.next_available(0, 5.0) == 10.0
+    # exactly on the opening edge: open
+    assert sim.next_available(0, 10.0) == 10.0
+    assert sim.next_available(1, 5.0) == 5.0
+    # gating applies to the START only — a run may COMPLETE outside the
+    # window (mirrors real FL: a device uploads when training ends, the
+    # duty cycle gates reachability for dispatch)
+    sim.now = 4.0
+    done = sim.dispatch(0, work=3.0)
+    assert done == 7.0 and sim.availability_delays == 0
+
+
+def test_dispatch_while_unavailable_delays_to_window():
+    """A dispatch (or a backoff retry) issued while the client is dark
+    starts at the next window opening, and the wait is metered."""
+    av = Availability(period=10.0, duty=0.5)
+    sim = SystemSim(2, SpeedProfile(), availability=av,
+                    rng=np.random.default_rng(3))
+    sim.phases = np.array([0.0, 5.0])
+    sim.now = 6.0                       # client 0 is dark during [5, 10)
+    done = sim.dispatch(0, work=1.0)
+    assert done == 11.0
+    assert sim.availability_delays == 1 and sim.total_wait == 4.0
+    # a retry delay that lands inside the dark stretch slides to the same
+    # window opening — backoff and availability compose, not race
+    sim2 = SystemSim(2, SpeedProfile(), availability=av,
+                     rng=np.random.default_rng(3))
+    sim2.phases = np.array([0.0, 5.0])
+    sim2.now = 2.0
+    done = sim2.dispatch(0, work=1.0, delay=4.0)    # earliest start 6.0
+    assert done == 11.0 and sim2.total_wait == 4.0
+    # delay alone is NOT an availability wait: inside the window it adds
+    # no metered delay
+    sim3 = SystemSim(2, SpeedProfile(), availability=av,
+                     rng=np.random.default_rng(3))
+    sim3.phases = np.array([0.0, 5.0])
+    done = sim3.dispatch(0, work=1.0, delay=2.0)     # starts at 2, runs 1
+    assert done == 3.0
+    assert sim3.availability_delays == 0 and sim3.total_wait == 0.0
+
+
 def test_pop_empty_and_overdrain_raise():
     sim = SystemSim(2, SpeedProfile(), rng=np.random.default_rng(0))
     with pytest.raises(RuntimeError):
@@ -309,7 +359,8 @@ def test_vote_absorb_keeps_val_losses_aligned(tiny_setup):
     model = make_model(task)
     gp = model.init(jax.random.PRNGKey(0))
     server = algo.init_server(gp, model, task.num_classes)
-    server["buffer"].push(gp)
+    # a second distinct entry (push de-duplicates bitwise-equal heads)
+    server["buffer"].push(jax.tree_util.tree_map(lambda p: p * 1.01, gp))
     server["val_losses"] = [0.5, 0.7]
     uploads = [{"params": jax.tree_util.tree_map(lambda p: p * 2.0, gp)}]
     server = algo.absorb_stale(server, uploads, [2], [1.0])
@@ -323,10 +374,13 @@ def test_vote_absorb_keeps_val_losses_aligned(tiny_setup):
                                val_batch=(vx, vy))
     assert len(server["val_losses"]) == len(server["buffer"]) == 3
     # FULL buffer: a push evicts the oldest entry and keeps len constant —
-    # the refresh must still fire (regression: len-based push detection)
+    # the refresh must still fire (regression: len-based push detection).
+    # A DISTINCT upload: re-absorbing the same one would fuse to a bitwise
+    # duplicate of the head, which push now rejects without a version bump
+    uploads2 = [{"params": jax.tree_util.tree_map(lambda p: p * 3.0, gp)}]
     before = list(server["val_losses"])
     v_newest = server["buffer"].versions[0]
-    server = algo.absorb_stale(server, uploads, [3], [1.0], model=model,
+    server = algo.absorb_stale(server, uploads2, [3], [1.0], model=model,
                                val_batch=(vx, vy))
     assert server["buffer"].versions[0] == v_newest + 1
     assert len(server["val_losses"]) == len(server["buffer"]) == 3

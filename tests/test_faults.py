@@ -1,0 +1,475 @@
+"""Fault-tolerant federated rounds (PR 7): deterministic fault injection,
+update validation + quorum aggregation, retry/backoff re-dispatch, and
+mid-run crash recovery.
+
+Four layers, mirroring the acceptance criteria:
+
+  * unit: ``FaultProfile`` validation, ``FaultInjector`` draw determinism,
+    ``corrupt_params`` modes, ``validate_update`` gates, ``FaultPolicy``
+    backoff, ``ModelBuffer.push`` hardening, ``save_pytree`` non-finite
+    refusal, and the self-describing run-state serializer round-trip;
+  * zero-probability identity: a ``FaultProfile()`` with all probs 0 is
+    bit-identical to ``faults=None`` on every executor route — the fault
+    stream is a CHILD stream (0xFA17) of the training seed, so merely
+    enabling the machinery must not perturb sampling, batching or init;
+  * chaos: under crash=20% + corrupt=5%, fedavg / fedgkd / fedgkd-vote
+    complete every round via quorum + retry and land within 2% of the
+    fault-free accuracy;
+  * recovery: kill-then-``resume=`` reproduces the uninterrupted history
+    bit-for-bit, including through a torn (truncated) newest checkpoint
+    and a hard ``os._exit`` mid-round in a subprocess.
+"""
+import dataclasses
+import glob
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.checkpoint import recovery
+from repro.configs.paper import TOY
+from repro.core import algorithms, executor as ex, fl_loop
+from repro.core.server import (FaultPolicy, ModelBuffer, first_nonfinite_path,
+                               validate_update)
+from repro.core.systemsim import (CORRUPT_MODES, FaultInjector, FaultProfile,
+                                  corrupt_params, derive_fault_rng)
+from repro.data.pipeline import ClientData, FederatedData
+from repro.data.synthetic import SyntheticTabularTask
+
+RAGGED_SIZES = (20, 45, 64, 100, 130, 150)
+
+CHAOS = FaultProfile(crash_prob=0.2, corrupt_prob=0.05)
+
+
+def _ragged_data(task, sizes=RAGGED_SIZES):
+    gen = SyntheticTabularTask(task.num_classes, dim=task.feat_dim, seed=0)
+    clients = [ClientData(*gen.generate(n, seed=100 + i))
+               for i, n in enumerate(sizes)]
+    test_x, test_y = gen.generate(200, seed=999)
+    return FederatedData(clients, test_x, test_y,
+                         np.zeros((len(sizes), task.num_classes)))
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    task = dataclasses.replace(TOY, n_clients=len(RAGGED_SIZES),
+                               participation=1.0, batch_size=64, rounds=2,
+                               local_epochs=2)
+    return task, _ragged_data(task)
+
+
+_REC_FIELDS = ("round", "test_acc", "test_loss", "mean_local_loss",
+               "sim_time", "version", "mean_staleness", "sampled")
+
+
+def _assert_histories_identical(a, b):
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        for f in _REC_FIELDS:
+            assert getattr(ra, f) == getattr(rb, f), (ra.round, f)
+    la = jax.tree_util.tree_leaves(a.final_params)
+    lb = jax.tree_util.tree_leaves(b.final_params)
+    assert all(bool(jnp.all(x == y)) for x, y in zip(la, lb))
+
+
+# --- unit: profile / injector / corruption / validation ---------------------
+
+def test_fault_profile_validates():
+    with pytest.raises(ValueError):
+        FaultProfile(crash_prob=-0.1)
+    with pytest.raises(ValueError):
+        FaultProfile(crash_prob=0.7, timeout_prob=0.4)  # sums past 1
+    with pytest.raises(ValueError):
+        FaultProfile(corrupt_prob=0.1, corrupt_modes=("nan", "bogus"))
+    assert not FaultProfile().any
+    assert FaultProfile(crash_prob=0.01).any
+
+
+def test_injector_draws_are_deterministic():
+    prof = FaultProfile(crash_prob=0.2, timeout_prob=0.1, corrupt_prob=0.1)
+    a = FaultInjector(prof, derive_fault_rng(7))
+    b = FaultInjector(prof, derive_fault_rng(7))
+    seq_a = [a.draw() for _ in range(200)]
+    seq_b = [b.draw() for _ in range(200)]
+    assert seq_a == seq_b
+    kinds = {f[0] for f in seq_a if f is not None}
+    assert kinds == {"crash", "timeout", "corrupt"}
+    assert a.counters == b.counters
+    assert a.counters["crashes"] > 0 and a.counters["corrupt_injected"] > 0
+
+
+def test_injector_zero_profile_never_fires_but_advances_stream():
+    inj = FaultInjector(FaultProfile(), derive_fault_rng(0))
+    assert all(inj.draw() is None for _ in range(50))
+    assert inj.counters == {"crashes": 0, "timeouts": 0,
+                            "corrupt_injected": 0}
+
+
+def test_fault_stream_is_independent_of_sim_stream():
+    # same entropy, different spawn keys: fault draws must not replay the
+    # systemsim speed/availability stream
+    from repro.core.systemsim import derive_rng
+    a = derive_fault_rng(3).random(8)
+    b = derive_rng(3).random(8)
+    assert not np.allclose(a, b)
+
+
+@pytest.mark.parametrize("mode", CORRUPT_MODES)
+def test_corrupt_params_modes(mode):
+    params = {"w": jnp.ones((3, 2)), "b": jnp.zeros((2,))}
+    bad = corrupt_params(params, mode)
+    ok, reason = validate_update(bad, params)
+    assert not ok
+    if mode in ("nan", "inf"):
+        assert reason.startswith("nonfinite:")
+        assert first_nonfinite_path(bad) is not None
+    else:  # "huge" stays finite — only the norm gate catches it
+        assert first_nonfinite_path(bad) is None
+        assert reason.startswith("norm:")
+    # original is untouched
+    assert first_nonfinite_path(params) is None
+
+
+def test_validate_update_accepts_clean_and_scales_norm_gate():
+    ref = {"w": jnp.ones((4,))}
+    ok, reason = validate_update({"w": jnp.ones((4,)) * 1.5}, ref)
+    assert ok and reason == "ok"
+    ok, reason = validate_update({"w": jnp.ones((4,)) * 1e4}, ref,
+                                 max_norm_mult=10.0)
+    assert not ok and reason.startswith("norm:")
+    # loose gate lets the same update through
+    ok, _ = validate_update({"w": jnp.ones((4,)) * 1e4}, ref,
+                            max_norm_mult=1e6)
+    assert ok
+
+
+def test_fault_policy_backoff_caps():
+    pol = FaultPolicy(backoff_base=1.0, backoff_cap=30.0)
+    waits = [pol.backoff(k) for k in range(1, 8)]
+    assert waits[:3] == [1.0, 2.0, 4.0]
+    assert max(waits) == 30.0
+    assert waits == sorted(waits)
+
+
+# --- unit: ModelBuffer hardening / checkpoint refusal -----------------------
+
+def test_model_buffer_rejects_nonfinite_push():
+    buf = ModelBuffer(3)
+    with pytest.raises(ValueError, match="w"):
+        buf.push({"w": jnp.array([1.0, jnp.nan])})
+    assert len(buf) == 0 and buf.versions == []
+
+
+def test_model_buffer_dedups_identical_head():
+    buf = ModelBuffer(3)
+    p = {"w": jnp.ones((2, 2))}
+    assert buf.push(p) is True
+    assert buf.push({"w": jnp.ones((2, 2))}) is False  # bitwise duplicate
+    assert len(buf) == 1 and buf.versions == [0]
+    assert buf.push({"w": jnp.ones((2, 2)) * 1.01}) is True
+    assert buf.versions == [1, 0]
+
+
+def test_save_pytree_refuses_nonfinite(tmp_path):
+    path = str(tmp_path / "bad.npz")
+    with pytest.raises(ValueError, match="a/b"):
+        ckpt_io.save_pytree(path, {"a": {"b": np.array([np.inf])}})
+    assert not os.path.exists(path)
+
+
+def test_run_state_roundtrip(tmp_path):
+    buf = ModelBuffer(2)
+    buf.push({"w": jnp.arange(4.0)})
+    buf.push({"w": jnp.arange(4.0) * 2})
+    rng = np.random.default_rng(5)
+    rng.random(17)  # advance so the 128-bit PCG64 words are nontrivial
+    state = {"buffer": buf, "np_rng": recovery.rng_state(rng),
+             "records": [{"round": 0, "sampled": (1, 2, 3), "acc": 0.5}],
+             "client_states": [(), {"c": jnp.ones((2,))}], "none": None}
+    recovery.save_run_state(str(tmp_path), 4, state, meta={"algo": "fedgkd"})
+    got, meta, rnd = recovery.load_latest_state(str(tmp_path))
+    assert rnd == 4 and meta["algo"] == "fedgkd"
+    buf2 = got["buffer"]
+    assert buf2.versions == buf.versions and len(buf2) == 2
+    assert bool(jnp.all(buf2.models[0]["w"] == buf.models[0]["w"]))
+    assert got["records"][0]["sampled"] == (1, 2, 3)
+    assert got["client_states"][0] == ()
+    fresh = np.random.default_rng(0)
+    recovery.restore_rng(fresh, got["np_rng"])
+    assert fresh.random() == rng.random()
+
+
+# --- zero-probability identity across every route ---------------------------
+
+@pytest.mark.parametrize("spec", ["sequential", "vmap", "shard_map", "async"])
+def test_zero_prob_faults_bit_identical(tiny_setup, spec):
+    """Enabling the fault machinery with all probabilities at zero must not
+    change a single bit of the run: the injector draws from its own child
+    stream and a zero profile skips even those draws' side effects."""
+    task, data = tiny_setup
+
+    def route():
+        if spec == "async":
+            return ex.AsyncExecutor(buffer_size=3, staleness="fedgkd")
+        return spec
+
+    base = fl_loop.run_federated(task, algorithms.make("fedgkd"), data,
+                                 seed=0, executor=route())
+    gated = fl_loop.run_federated(task, algorithms.make("fedgkd"), data,
+                                  seed=0, executor=route(),
+                                  faults=FaultProfile())
+    _assert_histories_identical(base, gated)
+    assert gated.telemetry["faults"]["crashes"] == 0
+
+
+def test_faults_identical_across_sync_routes(tiny_setup):
+    """The injector fires at the fl_loop boundary in cohort order, so the
+    SAME clients crash/corrupt no matter which sync executor runs the
+    round — fault telemetry must match exactly."""
+    task, data = tiny_setup
+    out = {}
+    for spec in ("sequential", "vmap"):
+        h = fl_loop.run_federated(task, algorithms.make("fedavg"), data,
+                                  seed=11, rounds=4, executor=spec,
+                                  faults=CHAOS)
+        out[spec] = h
+    ta = out["sequential"].telemetry["faults"]
+    tb = out["vmap"].telemetry["faults"]
+    assert ta == tb
+    assert ta["crashes"] + ta["corrupt_injected"] > 0
+    for ra, rb in zip(out["sequential"].records, out["vmap"].records):
+        assert ra.sampled == rb.sampled
+        assert abs(ra.test_acc - rb.test_acc) < 1e-5
+
+
+# --- chaos: quorum + retry keep every round alive ---------------------------
+
+@pytest.mark.parametrize("name,kw", [("fedavg", {}),
+                                     ("fedgkd", {"buffer_m": 3}),
+                                     ("fedgkd-vote", {"buffer_m": 3})])
+def test_chaos_completes_within_two_percent(tiny_setup, name, kw):
+    """crash=20% + corrupt=5%: every round completes via quorum + retry and
+    final accuracy stays within 2% of the fault-free run."""
+    task, data = tiny_setup
+    clean = fl_loop.run_federated(task, algorithms.make(name, **kw), data,
+                                  seed=3, rounds=8, executor="vmap")
+    fault = fl_loop.run_federated(task, algorithms.make(name, **kw), data,
+                                  seed=3, rounds=8, executor="vmap",
+                                  faults=CHAOS)
+    assert len(fault.records) == 8
+    ftel = fault.telemetry["faults"]
+    assert ftel["skipped_rounds"] == 0, "quorum+retry must keep rounds alive"
+    assert ftel["crashes"] > 0
+    # validation gate caught every injected corruption
+    assert (ftel["rejected_nonfinite"] + ftel["rejected_norm"]
+            == ftel["corrupt_injected"])
+    assert fault.records[-1].test_acc >= clean.records[-1].test_acc - 0.02
+
+
+def test_total_crash_skips_rounds_and_holds_global(tiny_setup):
+    """crash_prob=1.0 with max_retries exhausted: no survivors, the round is
+    recorded as skipped and the global model is held, not zeroed."""
+    task, data = tiny_setup
+    h = fl_loop.run_federated(
+        task, algorithms.make("fedavg"), data, seed=0, rounds=2,
+        executor="sequential", faults=FaultProfile(crash_prob=1.0),
+        fault_policy=FaultPolicy(max_retries=1))
+    ftel = h.telemetry["faults"]
+    assert ftel["skipped_rounds"] == 2
+    assert ftel["quorum_shortfalls"] == 2
+    assert first_nonfinite_path(h.final_params) is None
+    # both rounds evaluated the held (initial) global: identical accuracy
+    assert h.records[0].test_acc == h.records[1].test_acc
+
+
+def test_async_chaos_completes(tiny_setup):
+    task, data = tiny_setup
+    h = fl_loop.run_federated(
+        task, algorithms.make("fedgkd", buffer_m=3), data, seed=4, rounds=5,
+        executor=ex.AsyncExecutor(buffer_size=3, staleness="fedgkd"),
+        faults=CHAOS)
+    assert len(h.records) == 5
+    ftel = h.telemetry["faults"]
+    assert ftel["crashes"] + ftel["corrupt_injected"] > 0
+    assert (ftel["rejected_nonfinite"] + ftel["rejected_norm"]
+            == ftel["corrupt_injected"])
+    assert np.isfinite(h.records[-1].test_acc)
+
+
+def test_corrupt_teacher_never_reaches_buffer(tiny_setup):
+    """High corruption + a norm gate: ModelBuffer versions advance only on
+    validated pushes — a quarantined update can never version-bump."""
+    task, data = tiny_setup
+    h = fl_loop.run_federated(
+        task, algorithms.make("fedgkd", buffer_m=3), data, seed=2, rounds=4,
+        executor="vmap", faults=FaultProfile(corrupt_prob=0.4))
+    assert first_nonfinite_path(h.final_params) is None
+    assert all(np.isfinite(r.test_loss) for r in h.records)
+
+
+# --- recovery: kill then resume, bit-for-bit --------------------------------
+
+def test_resume_reproduces_history_bit_for_bit(tiny_setup, tmp_path):
+    task, data = tiny_setup
+    mk = lambda: algorithms.make("fedgkd-vote", buffer_m=3)  # noqa: E731
+    full = fl_loop.run_federated(task, mk(), data, seed=9, rounds=6,
+                                 executor="vmap")
+    ck = str(tmp_path / "ck")
+    fl_loop.run_federated(task, mk(), data, seed=9, rounds=3, executor="vmap",
+                          checkpoint_dir=ck)  # the "killed" prefix
+    resumed = fl_loop.run_federated(task, mk(), data, seed=9, rounds=6,
+                                    executor="vmap", checkpoint_dir=ck,
+                                    resume=True)
+    _assert_histories_identical(full, resumed)
+
+
+def test_resume_with_faults_bit_for_bit(tiny_setup, tmp_path):
+    """The fault-injector rng is checkpointed too: a resumed chaotic run
+    replays the SAME crash/corrupt schedule the uninterrupted run saw."""
+    task, data = tiny_setup
+    mk = lambda: algorithms.make("fedgkd", buffer_m=3)  # noqa: E731
+    full = fl_loop.run_federated(task, mk(), data, seed=9, rounds=6,
+                                 executor="vmap", faults=CHAOS)
+    ck = str(tmp_path / "ck")
+    fl_loop.run_federated(task, mk(), data, seed=9, rounds=3, executor="vmap",
+                          faults=CHAOS, checkpoint_dir=ck)
+    resumed = fl_loop.run_federated(task, mk(), data, seed=9, rounds=6,
+                                    executor="vmap", faults=CHAOS,
+                                    checkpoint_dir=ck, resume=True)
+    _assert_histories_identical(full, resumed)
+    assert (full.telemetry["faults"]["crashes"]
+            == resumed.telemetry["faults"]["crashes"])
+
+
+def test_resume_skips_torn_checkpoint(tiny_setup, tmp_path):
+    """A file torn by a crash mid-save is skipped newest-first; resume
+    restarts from the previous valid round and still matches."""
+    task, data = tiny_setup
+    mk = lambda: algorithms.make("fedavg")  # noqa: E731
+    full = fl_loop.run_federated(task, mk(), data, seed=9, rounds=5,
+                                 executor="vmap")
+    ck = str(tmp_path / "ck")
+    fl_loop.run_federated(task, mk(), data, seed=9, rounds=3, executor="vmap",
+                          checkpoint_dir=ck)
+    newest = sorted(glob.glob(os.path.join(ck, "state_*.npz")))[-1]
+    with open(newest, "r+b") as f:
+        f.truncate(64)
+    resumed = fl_loop.run_federated(task, mk(), data, seed=9, rounds=5,
+                                    executor="vmap", checkpoint_dir=ck,
+                                    resume=True)
+    _assert_histories_identical(full, resumed)
+
+
+def test_resume_fresh_dir_starts_from_scratch(tiny_setup, tmp_path):
+    task, data = tiny_setup
+    ck = str(tmp_path / "empty")
+    os.makedirs(ck)
+    h = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                              rounds=2, executor="vmap", checkpoint_dir=ck,
+                              resume=True)
+    assert len(h.records) == 2
+    assert glob.glob(os.path.join(ck, "state_*.npz"))
+
+
+def test_resume_guards(tiny_setup):
+    task, data = tiny_setup
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                              rounds=1, executor="vmap", resume=True)
+    with pytest.raises(ValueError, match="async"):
+        fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                              rounds=1, executor="async",
+                              checkpoint_dir="/tmp/nope")
+
+
+def test_algo_mismatch_on_resume_raises(tiny_setup, tmp_path):
+    task, data = tiny_setup
+    ck = str(tmp_path / "ck")
+    fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                          rounds=2, executor="vmap", checkpoint_dir=ck)
+    with pytest.raises(ValueError, match="fedavg"):
+        fl_loop.run_federated(task, algorithms.make("fedgkd", buffer_m=3),
+                              data, seed=0, rounds=3, executor="vmap",
+                              checkpoint_dir=ck, resume=True)
+
+
+_KILL_SCRIPT = """\
+import dataclasses, os, sys
+import numpy as np
+from repro.configs.paper import TOY
+from repro.core import algorithms, fl_loop
+from repro.data.pipeline import ClientData, FederatedData
+from repro.data.synthetic import SyntheticTabularTask
+
+SIZES = (20, 45, 64, 100, 130, 150)
+task = dataclasses.replace(TOY, n_clients=len(SIZES), participation=1.0,
+                           batch_size=64, rounds=2, local_epochs=2)
+gen = SyntheticTabularTask(task.num_classes, dim=task.feat_dim, seed=0)
+clients = [ClientData(*gen.generate(n, seed=100 + i))
+           for i, n in enumerate(SIZES)]
+tx, ty = gen.generate(200, seed=999)
+data = FederatedData(clients, tx, ty, np.zeros((len(SIZES),
+                                                task.num_classes)))
+
+def kill_at_3(rnd, server, model):
+    if rnd == 3:        # three rounds checkpointed, then a SIGKILL-like death
+        os._exit(17)
+
+fl_loop.run_federated(task, algorithms.make("fedgkd", buffer_m=3), data,
+                      seed=9, rounds=6, executor="vmap",
+                      checkpoint_dir=sys.argv[1], round_callback=kill_at_3)
+"""
+
+
+@pytest.mark.slow
+def test_hard_kill_then_resume_matches_uninterrupted(tiny_setup, tmp_path):
+    """Kill a checkpointing run with os._exit (no teardown, like OOM/SIGKILL)
+    after round 3, resume in-process, and demand bit-identity with the
+    never-killed run."""
+    task, data = tiny_setup
+    ck = str(tmp_path / "ck")
+    os.makedirs(ck)
+    script = tmp_path / "killed_run.py"
+    script.write_text(_KILL_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in (env.get("PYTHONPATH", ""),) if p]
+        + [os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")])
+    proc = subprocess.run([sys.executable, str(script), ck], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 17, proc.stderr[-2000:]
+    assert glob.glob(os.path.join(ck, "state_*.npz"))
+
+    mk = lambda: algorithms.make("fedgkd", buffer_m=3)  # noqa: E731
+    full = fl_loop.run_federated(task, mk(), data, seed=9, rounds=6,
+                                 executor="vmap")
+    resumed = fl_loop.run_federated(task, mk(), data, seed=9, rounds=6,
+                                    executor="vmap", checkpoint_dir=ck,
+                                    resume=True)
+    _assert_histories_identical(full, resumed)
+
+
+# --- nightly chaos sweep (--runslow) ----------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("crash", [0.0, 0.1, 0.2])
+@pytest.mark.parametrize("corrupt", [0.0, 0.05])
+def test_chaos_grid(tiny_setup, crash, corrupt):
+    """Nightly grid: every (crash, corrupt) cell completes all rounds with a
+    finite, above-chance accuracy and fully-accounted corruption."""
+    task, data = tiny_setup
+    prof = FaultProfile(crash_prob=crash, corrupt_prob=corrupt)
+    h = fl_loop.run_federated(task, algorithms.make("fedgkd", buffer_m=3),
+                              data, seed=5, rounds=6, executor="vmap",
+                              faults=prof)
+    assert len(h.records) == 6
+    ftel = h.telemetry["faults"]
+    assert ftel["skipped_rounds"] == 0
+    assert (ftel["rejected_nonfinite"] + ftel["rejected_norm"]
+            == ftel["corrupt_injected"])
+    assert h.records[-1].test_acc > 1.5 / task.num_classes

@@ -379,6 +379,55 @@ def test_state_store_pinned_states_not_evicted(tmp_path):
     assert 0 in states.warm and len(states.warm) == 2
 
 
+def test_state_store_eviction_storm_all_pinned_exceeds_cap(tmp_path):
+    """Evict-while-pinned: when every warm entry is pinned the tier grows
+    past ``warm_cap`` rather than spilling a pinned state — a mid-round
+    cohort must never lose state it is actively training."""
+    pinned = {0, 1, 2, 3}
+    states = ClientStateStore(lambda cid: {"v": jnp.zeros(())}, mutable=True,
+                              warm_cap=2, spill_dir=str(tmp_path),
+                              pinned=pinned)
+    for cid in range(4):
+        states[cid] = {"v": jnp.full((), float(cid))}
+    assert len(states.warm) == 4            # over cap, nothing spilled
+    assert states.state_spills == 0 and states.spilled == set()
+    # unpinning and touching a new client drains the backlog down to cap
+    pinned.clear()
+    states[7] = {"v": jnp.full((), 7.0)}
+    assert len(states.warm) == 2
+    assert states.state_spills == 3
+    # spilled values survived the storm bit-exact
+    for cid in (0, 1, 2):
+        assert float(states[cid]["v"]) == float(cid)
+
+
+def test_state_store_corrupt_spill_reinits_with_warning(tmp_path, caplog):
+    """A torn/garbage spill file (crash mid-save, disk fault) must not kill
+    the run: the client falls back to its initial state with a logged
+    warning and the ``state_corrupt_reinits`` counter ticks."""
+    def init(cid):
+        return {"w": jnp.zeros((3,))}
+
+    states = ClientStateStore(init, mutable=True, warm_cap=1,
+                              spill_dir=str(tmp_path))
+    states[0] = {"w": jnp.full((3,), 5.0)}
+    states[1] = {"w": jnp.full((3,), 6.0)}      # evicts + spills client 0
+    assert states.spilled == {0}
+    path = os.path.join(str(tmp_path), "state_000000000.npz")
+    with open(path, "r+b") as f:                # tear the spill mid-file
+        f.truncate(32)
+    with caplog.at_level("WARNING", logger="repro.population"):
+        got = states[0]
+    assert float(got["w"][0]) == 0.0            # re-initialized, not 5.0
+    assert 0 not in states.spilled              # corrupt file forgotten
+    assert states.state_corrupt_reinits == 1
+    assert states.stats()["state_corrupt_reinits"] == 1
+    assert any("corrupt state spill" in r.message for r in caplog.records)
+    # the store heals: the re-evicted state round-trips cleanly afterwards
+    states[2] = {"w": jnp.full((3,), 7.0)}      # evicts 0 again, clean spill
+    assert float(states[0]["w"][0]) == 0.0
+
+
 # --------------------------------------------------------------------------
 # run_federated(population=): equivalence + seed sequences
 # --------------------------------------------------------------------------
