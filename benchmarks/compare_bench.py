@@ -18,7 +18,12 @@ both artifacts with the shared ``cases`` schema:
   * ``BENCH_faults.json`` — LOWER-is-better fault-tolerance metrics:
     ``acc_drop_at_20pct_crash`` (accuracy lost at the heaviest fault cell
     vs fault-free) and ``overhead_ratio`` (retry re-dispatches per
-    completed round; deterministic under the seeded injector).
+    completed round; deterministic under the seeded injector);
+  * ``BENCH_throughput.json`` — measured async throughput under wave
+    churn: ``client_updates_per_sec`` and ``pipeline_speedup``
+    (pipelined fixed-slot dispatch vs the single-stream baseline,
+    higher-better) plus ``compile_count`` (traced round bodies across the
+    run, LOWER-is-better — fixed-slot waves pin it to 1).
 
 A case is keyed by ``(algo, executor, epochs, precompute, buffer_size,
 model, conv_route, population, faults)`` (trailing fields ``None`` for
@@ -40,12 +45,13 @@ import argparse
 import json
 
 METRICS = ("speedup_vs_sequential", "speedup_vs_no_precompute",
-           "sim_speedup_vs_sync", "speedup_vs_naive_vmap")
+           "sim_speedup_vs_sync", "speedup_vs_naive_vmap",
+           "client_updates_per_sec", "pipeline_speedup")
 # resource costs: regression direction is inverted (new may not EXCEED
 # baseline * (1 + tolerance)) — an RSS or latency DROP is never a failure
 METRICS_LOWER = ("peak_host_rss_mb", "sample_latency_ms",
                  "sample_ratio_1m_vs_10k", "acc_drop_at_20pct_crash",
-                 "overhead_ratio")
+                 "overhead_ratio", "compile_count")
 
 
 def case_key(row: dict) -> tuple:

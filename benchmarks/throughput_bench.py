@@ -1,0 +1,236 @@
+"""Measured async throughput under wave-size churn, and sim calibration.
+
+``BENCH_async.json`` gates a PREDICTED speedup on the simulated clock;
+this bench measures the real thing: wall-clock ``client_updates_per_sec``
+of the buffered-async loop on a ragged (non-IID-sized) federation whose
+wave shapes churn, with the two dispatch modes the async executor
+supports:
+
+  * ``async-singlestream`` — the historical path: variable wave shapes
+    (one retrace per distinct cohort geometry) and a host sync per wave;
+  * ``async-pipelined`` — fixed-slot waves padded to the buffer size
+    through the phantom-client masks (exactly ONE compiled round body for
+    the whole run, proven by the ``compile_count`` telemetry) plus
+    deferred host syncs (``jax.block_until_ready`` only at aggregation),
+    so wave N+1's dispatch overlaps wave N's in-flight work.
+
+Both modes aggregate bit-identical histories (pinned by
+``tests/test_async_executor.py``); only scheduling differs, so the ratio
+``pipeline_speedup`` is pure overhead reduction.  The bench also
+calibrates ``systemsim.base_step_time`` against a measured per-step
+device time (``systemsim.measure_step_time`` on the model's jitted SGD
+step) and records how the calibrated virtual clock's wall prediction
+compares to the measured wall (``calibration_ratio``).
+
+Writes ``BENCH_throughput.json`` at the repo root — the artifact the
+nightly ``throughput-bench`` job gates via ``compare_bench.py``
+(``client_updates_per_sec``/``pipeline_speedup`` higher-is-better,
+``compile_count`` lower-is-better).  The acceptance criterion — pipelined
+throughput >= 1.2x single-stream on the forced 8-device host mesh — is
+enforced in-run via ``--min-speedup``:
+
+    PYTHONPATH=src python benchmarks/throughput_bench.py --host-devices 8
+    PYTHONPATH=src python benchmarks/throughput_bench.py \
+        --algos fedgkd --rounds 20 --min-speedup 0
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import pathlib
+import sys
+import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# client sizes are RAGGED so variable-wave mode sees churning (S, B, rows)
+# geometries — the retrace pressure the fixed-slot mode eliminates
+SIZES = (20, 45, 64, 100, 130, 150, 38, 75, 110, 24, 88, 140, 52, 96, 30, 66)
+
+
+def _force_host_devices(n: int) -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}").strip()
+
+
+def make_data(task, seed: int = 0):
+    import numpy as np
+
+    from repro.data.pipeline import ClientData, FederatedData
+    from repro.data.synthetic import make_task_data
+
+    xtr, ytr, xte, yte = make_task_data(task, sum(SIZES), 400, seed=seed)
+    clients, off = [], 0
+    for s in SIZES:
+        clients.append(ClientData(xtr[off:off + s], ytr[off:off + s]))
+        off += s
+    return FederatedData(clients, xte, yte,
+                         np.zeros((len(SIZES), task.num_classes)))
+
+
+def measured_step_time(model, data, batch_size: int) -> float:
+    """Per-step device seconds of the model's jitted SGD step on a
+    full-size batch — the ``base_step_time`` calibration input."""
+    import jax
+    import jax.numpy as jnp
+    import optax
+
+    from repro.core.systemsim import measure_step_time
+
+    params = model.init(jax.random.PRNGKey(0))
+    xb = jnp.asarray(data.clients[0].x[:batch_size])
+    yb = jnp.asarray(data.clients[0].y[:batch_size])
+
+    def loss_fn(p, x, y):
+        logits = model.apply(p, x)
+        return optax.softmax_cross_entropy_with_integer_labels(
+            logits, y).mean()
+
+    @jax.jit
+    def step(p, x, y):
+        g = jax.grad(loss_fn)(p, x, y)
+        return jax.tree_util.tree_map(lambda w, gw: w - 0.05 * gw, p, g)
+
+    return measure_step_time(step, params, xb, yb, warmup=2, repeats=5)
+
+
+def run_mode(algo_name: str, task, data, args, *, pipelined: bool):
+    from repro.core import algorithms, fl_loop
+    from repro.core.executor import AsyncExecutor
+    from repro.core.systemsim import Availability, SpeedProfile
+
+    ex = AsyncExecutor(
+        buffer_size=args.buffer, staleness="fedgkd", staleness_a=0.5,
+        staleness_cutoff=4,
+        profile=SpeedProfile(kind="straggler",
+                             straggler_frac=args.straggler_frac),
+        availability=Availability(period=24.0, duty=0.8), inner="vmap",
+        pipelined=pipelined, wave_slots="auto" if pipelined else "variable")
+    t0 = time.perf_counter()
+    hist = fl_loop.run_federated(task, algorithms.make(algo_name), data,
+                                 seed=args.seed, rounds=args.rounds,
+                                 eval_every=args.rounds, executor=ex)
+    wall = time.perf_counter() - t0
+    return hist, wall
+
+
+def bench_algo(algo_name: str, task, data, args, step_s: float) -> list:
+    rows = []
+    results = {}
+    for pipelined in (False, True):
+        hist, wall = run_mode(algo_name, task, data, args,
+                              pipelined=pipelined)
+        updates = sum(len(r.sampled) for r in hist.records)
+        mode = "async-pipelined" if pipelined else "async-singlestream"
+        results[mode] = (hist, wall, updates)
+        rows.append({
+            "algo": algo_name, "executor": mode,
+            "epochs": task.local_epochs, "precompute": True,
+            "buffer_size": args.buffer, "rounds": args.rounds,
+            "wall_s": round(wall, 3),
+            "client_updates": updates,
+            "client_updates_per_sec": round(updates / wall, 3),
+            "compile_count": hist.telemetry.get("compile_count"),
+            "final_sim_time": round(float(hist.records[-1].sim_time), 2),
+        })
+    hist_p, wall_p, _ = results["async-pipelined"]
+    row_p = rows[-1]
+    row_p["pipeline_speedup"] = round(
+        row_p["client_updates_per_sec"] / rows[0]["client_updates_per_sec"],
+    4)
+    # calibration: with base_step_time = measured per-step seconds the
+    # virtual clock reads in predicted wall seconds (the clock scales
+    # linearly in base_step_time, so scale rather than rerun).  The sim
+    # models the FLEET's concurrent wall-clock; the measured wall serializes
+    # every wave through one host mesh, so the ratio reads as the host's
+    # effective client-parallelism, not an error bar.
+    predicted = float(hist_p.records[-1].sim_time) * step_s
+    row_p["base_step_time_calibrated_s"] = round(step_s, 6)
+    row_p["predicted_wall_s"] = round(predicted, 3)
+    row_p["calibration_ratio"] = round(wall_p / predicted, 4)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algos", nargs="+", default=["fedavg", "fedgkd"])
+    ap.add_argument("--rounds", type=int, default=30,
+                    help="async aggregations per mode (30 exercises the "
+                         "churn window the compile_count criterion names)")
+    ap.add_argument("--buffer", type=int, default=4)
+    ap.add_argument("--clients-in-flight", type=int, default=8,
+                    dest="n_sample")
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--straggler-frac", type=float, default=0.25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force an N-device host mesh (must be set before "
+                         "jax initializes)")
+    ap.add_argument("--min-speedup", type=float, default=1.2,
+                    help="fail if pipelined throughput < this multiple of "
+                         "single-stream (0 disables the gate)")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_throughput.json"))
+    args = ap.parse_args(argv)
+
+    if args.host_devices > 0:
+        _force_host_devices(args.host_devices)
+    import jax
+
+    if args.host_devices > 0 and len(jax.devices()) != args.host_devices:
+        print(f"host mesh forcing failed: wanted {args.host_devices} "
+              f"devices, jax sees {len(jax.devices())} (jax already "
+              f"initialized?)")
+        return 2
+
+    from repro.configs.paper import TOY
+
+    task = dataclasses.replace(TOY, n_clients=len(SIZES),
+                               participation=args.n_sample / len(SIZES),
+                               batch_size=args.batch_size,
+                               local_epochs=args.local_epochs)
+    data = make_data(task, seed=args.seed)
+
+    from repro.core.modelzoo import make_model
+
+    step_s = measured_step_time(make_model(task), data, args.batch_size)
+    print(f"calibrated per-step device time: {step_s * 1e3:.3f} ms")
+
+    cases = []
+    for algo_name in args.algos:
+        rows = bench_algo(algo_name, task, data, args, step_s)
+        cases.extend(rows)
+        base, pipe = rows
+        print(f"{algo_name:>12}: single-stream "
+              f"{base['client_updates_per_sec']:8.2f} up/s "
+              f"(compiles {base['compile_count']}); pipelined "
+              f"{pipe['client_updates_per_sec']:8.2f} up/s "
+              f"(compiles {pipe['compile_count']}) -> "
+              f"{pipe['pipeline_speedup']:.2f}x")
+
+    payload = {"task": "toy-ragged", "devices": len(jax.devices()),
+               "backend": jax.default_backend(), "clients": args.n_sample,
+               "width": 16, "buffer": args.buffer,
+               "profile": "straggler", "cases": cases}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out}")
+
+    if args.min_speedup > 0:
+        bad = [c for c in cases
+               if c["executor"] == "async-pipelined"
+               and c["pipeline_speedup"] < args.min_speedup]
+        if bad:
+            print(f"FAIL: {len(bad)} case(s) under the "
+                  f">= {args.min_speedup:.1f}x pipeline-speedup criterion: "
+                  f"{[(c['algo'], c['pipeline_speedup']) for c in bad]}")
+            return 1
+        print(f"all cases >= {args.min_speedup:.1f}x single-stream")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

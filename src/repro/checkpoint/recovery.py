@@ -48,6 +48,17 @@ def _encode(obj: Any, arrays: dict) -> Any:
     if isinstance(obj, (list, tuple)):
         return {"k": "list" if isinstance(obj, list) else "tuple",
                 "items": [_encode(v, arrays) for v in obj]}
+    if isinstance(obj, np.floating):
+        # numpy float scalars are IEEE doubles — exact as python floats;
+        # the array path below would round-trip them through jnp's
+        # default float32 and silently lose bits (the async sim heap's
+        # completion times are np.float64)
+        return {"k": "py", "v": float(obj)}
+    if isinstance(obj, np.integer):
+        v = int(obj)
+        if abs(v) > _I64_MAX:
+            return {"k": "bigint", "v": str(v)}
+        return {"k": "py", "v": v}
     if hasattr(obj, "shape") and hasattr(obj, "dtype"):
         key = f"a{len(arrays)}"
         arrays[key] = np.asarray(obj)

@@ -162,6 +162,25 @@ class RoundContext:
     # False forces the historical vmapped body (the benchmarks' naive
     # baseline); True additionally raises if the pair cannot support it
     client_batched: "bool | str" = "auto"
+    # -- fixed-slot wave geometry (the async pipelined path) -------------
+    # When set, every batched run_round pads its cohort to ``wave_slots``
+    # phantom-masked client slots and its batch stacks to
+    # ``pad_steps``/``pad_batch`` steps×examples (full shards to
+    # ``pad_rows`` rows), so CHURNING wave sizes hit ONE compiled round
+    # body instead of retracing per distinct (K, S, B) — see
+    # ``AsyncExecutor``.  None (the default) keeps the historical
+    # per-wave-maxima shapes.  Padding is exact, not approximate: phantom
+    # slots/steps are identities through the masking machinery and are
+    # sliced off before anything downstream sees them.
+    wave_slots: Optional[int] = None
+    pad_steps: Optional[int] = None
+    pad_batch: Optional[int] = None
+    pad_rows: Optional[int] = None
+    # deferred-loss mode: run_round returns local losses as on-device
+    # scalars instead of forcing a host sync per wave — the async
+    # pipelined loop converts them at aggregation, which is the only
+    # point allowed to block (``jax.block_until_ready`` semantics)
+    deferred: bool = False
 
     def __post_init__(self):
         loss_fn = self.algo.loss_fn(self.model)
@@ -210,6 +229,15 @@ class RoundContext:
         # placement counters, parts recomputed — written by executors, read
         # by fl_loop logging and the regression tests
         self.telemetry: dict = {}
+        # distinct round-body input shape signatures seen so far: each new
+        # signature is exactly one XLA retrace of the round function, so
+        # ``telemetry["compile_count"] == len(round_shapes)`` counts
+        # compiled round bodies (the fixed-slot acceptance criterion)
+        self.round_shapes: set = set()
+
+    def note_round_shape(self, sig: tuple) -> None:
+        self.round_shapes.add(sig)
+        self.telemetry["compile_count"] = len(self.round_shapes)
 
 
 @dataclasses.dataclass
@@ -286,13 +314,19 @@ def materialize_client(rng: np.random.Generator, data: ClientData,
     return MaterializedClient(data.x[sel], data.y[sel], data.n, sel)
 
 
-def _pad_and_stack(mats: list[MaterializedClient]):
+def _pad_and_stack(mats: list[MaterializedClient], k_pad: Optional[int] = None,
+                   s_pad: Optional[int] = None, b_pad: Optional[int] = None):
     """(K, S, B, ...) arrays + example mask (K, S, B) + pick indices
     (K, S, B) + step mask (K, S).  Padded picks point at row 0 — harmless,
-    the example mask zero-weights whatever they gather."""
-    S = max(m.xs.shape[0] for m in mats)
-    B = max(m.xs.shape[1] for m in mats)
-    k = len(mats)
+    the example mask zero-weights whatever they gather.
+
+    ``k_pad``/``s_pad``/``b_pad`` raise the stack dimensions to fixed
+    targets (never below the cohort maxima): rows beyond ``len(mats)`` are
+    phantom clients with all-zero masks, extra steps/examples are masked
+    pads like any ragged client's — the fixed-slot wave geometry."""
+    S = max(max(m.xs.shape[0] for m in mats), s_pad or 0)
+    B = max(max(m.xs.shape[1] for m in mats), b_pad or 0)
+    k = max(len(mats), k_pad or 0)
     feat = mats[0].xs.shape[2:]
     xs = np.zeros((k, S, B) + feat, mats[0].xs.dtype)
     ys = np.zeros((k, S, B), mats[0].ys.dtype)
@@ -310,13 +344,16 @@ def _pad_and_stack(mats: list[MaterializedClient]):
             jnp.asarray(picks), jnp.asarray(step_mask))
 
 
-def _pad_and_stack_picks(picks: list[np.ndarray], k_pad: int):
+def _pad_and_stack_picks(picks: list[np.ndarray], k_pad: int,
+                         s_pad: Optional[int] = None,
+                         b_pad: Optional[int] = None):
     """Stack per-client pick indices to (k_pad, S, B) + example mask
     (k_pad, S, B) + step mask (k_pad, S) — the shard_map path's entire
     per-round host→device payload.  Rows beyond ``len(picks)`` are phantom
-    clients: all-zero masks make their every step an identity."""
-    S = max(p.shape[0] for p in picks)
-    B = max(p.shape[1] for p in picks)
+    clients: all-zero masks make their every step an identity.
+    ``s_pad``/``b_pad`` raise S/B to fixed targets (fixed-slot waves)."""
+    S = max(max(p.shape[0] for p in picks), s_pad or 0)
+    B = max(max(p.shape[1] for p in picks), b_pad or 0)
     out = np.zeros((k_pad, S, B), np.int32)
     ex_mask = np.zeros((k_pad, S, B), np.float32)
     step_mask = np.zeros((k_pad, S), bool)
@@ -341,7 +378,8 @@ def _pad_clients_axis(tree: Any, k_pad: int) -> Any:
 
 
 def _pad_full_data(client_data: list[ClientData], cache: Optional[dict] = None,
-                   cohort_key=None):
+                   cohort_key=None, k_pad: Optional[int] = None,
+                   n_pad: Optional[int] = None):
     """Stack each client's FULL shard to (K, N_max, ...) + mask for the
     vmapped ``client_finalize`` / ``precompute_aux`` hooks.
 
@@ -350,13 +388,17 @@ def _pad_full_data(client_data: list[ClientData], cache: Optional[dict] = None,
     work entirely.  The cache holds ONE entry: only a cohort repeated
     back-to-back (fixed-cohort loops, benchmarks) ever hits — under random
     partial participation every round keys differently, and retaining
-    misses would pin (K, N_max, ...) device stacks for nothing."""
+    misses would pin (K, N_max, ...) device stacks for nothing.
+
+    ``k_pad``/``n_pad`` raise the client/row dimensions to fixed targets
+    (fixed-slot waves); phantom rows carry zero values behind a zero mask.
+    """
     if cache is not None and cohort_key is not None:
         hit = cache.get(cohort_key)
         if hit is not None:
             return hit
-    n_max = max(d.n for d in client_data)
-    k = len(client_data)
+    n_max = max(max(d.n for d in client_data), n_pad or 0)
+    k = max(len(client_data), k_pad or 0)
     feat = client_data[0].x.shape[1:]
     xs = np.zeros((k, n_max) + feat, client_data[0].x.dtype)
     ys = np.zeros((k, n_max), client_data[0].y.dtype)
@@ -458,15 +500,21 @@ class VmapExecutor:
     def _round_fn(self, ctx: RoundContext) -> Callable:
         fn = ctx.jit_cache.get("round")
         if fn is None:
+            # the (xs, ys, ex_mask) batch stacks are rebuilt fresh every
+            # round, so their buffers can be donated back to XLA — a real
+            # win on accelerators, a warning no-op on the CPU backend
+            donate = (() if jax.default_backend() == "cpu" else (3, 4, 5))
             if ctx.batched_local_update is not None:
                 # client-batched body: one fused cohort program (stacked
                 # params through the model, grouped-conv kernels) instead
                 # of vmapping the per-client scan — same signature
-                fn = jax.jit(ctx.batched_local_update)
+                fn = jax.jit(ctx.batched_local_update,
+                             donate_argnums=donate)
             else:
                 fn = jax.jit(jax.vmap(ctx.local_update,
                                       in_axes=(None, None, 0, 0, 0, 0, 0, 0,
-                                               None)))
+                                               None)),
+                             donate_argnums=donate)
             ctx.jit_cache["round"] = fn
         return fn
 
@@ -565,8 +613,10 @@ class VmapExecutor:
             dev = {"cohort": cohort, "slabs": {}}
             ctx.jit_cache["parts_dev"] = dev
         slabs = dev["slabs"]
-        k = len(client_data)
-        n_max = max(d.n for d in client_data)
+        # slab geometry comes from the (possibly slot-padded) full stack,
+        # not the raw cohort: phantom rows stay zero behind the mask
+        k = int(fx.shape[0])
+        n_max = int(fx.shape[1])
         tail = ctx.aux_cache[client_ids[0]][keys[0]].shape[1:]
         for m, key in enumerate(keys):
             if key in slabs:
@@ -601,13 +651,18 @@ class VmapExecutor:
             "client_batched" if ctx.batched_local_update is not None
             else "vmap")
         k = len(client_data)
+        # fixed-slot waves: pad the cohort axis to ``wave_slots`` phantom
+        # clients (and rows/steps/batch to the population-wide targets) so
+        # every wave, whatever its size, runs the SAME compiled body
+        k_pad = max(k, ctx.wave_slots) if ctx.wave_slots else k
         full = None
         aux_full = None
         if ctx.has_precompute or ctx.has_finalize:
             full = _pad_full_data(
                 client_data, cache=ctx.jit_cache.setdefault("full_data", {}),
                 cohort_key=(tuple(client_ids)
-                            if client_ids is not None else None))
+                            if client_ids is not None else None),
+                k_pad=k_pad, n_pad=ctx.pad_rows)
         if ctx.has_precompute:
             parts_spec = (ctx.algo.precompute_parts(payload)
                           if client_ids is not None else None)
@@ -623,23 +678,33 @@ class VmapExecutor:
 
         mats = [materialize_client(rng, d, ctx.batch_size, ctx.epochs,
                                    ctx.max_batches) for d in client_data]
-        xs, ys, ex_mask, picks, step_mask = _pad_and_stack(mats)
-        states_stacked = tree_stack(client_states)
+        xs, ys, ex_mask, picks, step_mask = _pad_and_stack(
+            mats, k_pad=k_pad, s_pad=ctx.pad_steps, b_pad=ctx.pad_batch)
+        states_real = tree_stack(client_states)
+        states_stacked = _pad_clients_axis(states_real, k_pad)
         aux = (self._gather_fn(ctx)(aux_full, picks)
                if ctx.has_precompute else ())
+        ctx.note_round_shape(("round", ctx.telemetry["round_body"])
+                             + tuple(xs.shape))
 
-        params_stacked, mloss = self._execute(
+        params_padded, mloss_padded = self._execute(
             ctx, global_params, payload, states_stacked, xs, ys, ex_mask,
             aux, step_mask)
+        # drop phantom slots before anything downstream sees them
+        params_stacked = (jax.tree_util.tree_map(lambda l: l[:k],
+                                                 params_padded)
+                          if k_pad > k else params_padded)
+        mloss = mloss_padded[:k] if k_pad > k else mloss_padded
 
         if ctx.has_finalize:
             fx, fy, fmask = full
-            extras_stacked = self._finalize_fn(ctx)(params_stacked, fx, fy,
-                                                    fmask, payload)
+            extras_stacked = self._finalize_fn(ctx)(params_stacked, fx[:k],
+                                                    fy[:k], fmask[:k],
+                                                    payload)
         else:
             extras_stacked = {}
         if ctx.has_state_update:
-            new_states_stacked = self._state_fn(ctx)(states_stacked,
+            new_states_stacked = self._state_fn(ctx)(states_real,
                                                      params_stacked, payload)
         else:
             new_states_stacked = None
@@ -650,7 +715,8 @@ class VmapExecutor:
         new_states = (_tree_unstack_jit(new_states_stacked, k)
                       if ctx.has_state_update else list(client_states))
         return RoundResult(uploads, [float(m.n) for m in mats],
-                           np.asarray(mloss).astype(float).tolist(),
+                           mloss if ctx.deferred
+                           else np.asarray(mloss).astype(float).tolist(),
                            new_states)
 
 
@@ -789,7 +855,8 @@ class ShardMapExecutor(VmapExecutor):
     # -- device-resident cohort assembly ---------------------------------
     def _resident_cohort(self, ctx: RoundContext, mesh,
                          client_data: list[ClientData],
-                         client_ids: Optional[list[int]], k_pad: int):
+                         client_ids: Optional[list[int]], k_pad: int,
+                         rows: Optional[int] = None):
         """(k_pad, rows, ...) x/y/mask stacks sharded ``P("clients")``,
         assembled from the per-client resident slabs in ``ctx.placement``.
 
@@ -800,7 +867,8 @@ class ShardMapExecutor(VmapExecutor):
         devices = list(mesh.devices.reshape(-1))
         ndev = len(devices)
         g = k_pad // ndev
-        rows = max(slab_rows(d.n) for d in client_data)
+        if rows is None:
+            rows = max(slab_rows(d.n) for d in client_data)
         cohort_key = (tuple(client_ids), rows, ndev) \
             if client_ids is not None else None
         cache = ctx.jit_cache.setdefault("slab_stack", {})
@@ -957,10 +1025,17 @@ class ShardMapExecutor(VmapExecutor):
                      client_data, rng, client_ids, ndev) -> RoundResult:
         mesh = self._mesh(ctx, ndev)
         k = len(client_data)
-        g = -(-k // ndev)
+        # fixed-slot waves: pad cohorts up to ``wave_slots`` BEFORE the
+        # mesh rounding so every wave lands on the same (k_pad, rows, S, B)
+        # geometry and the sharded round body never retraces
+        k_eff = max(k, ctx.wave_slots) if ctx.wave_slots else k
+        g = -(-k_eff // ndev)
         k_pad = g * ndev
+        rows = max(slab_rows(d.n) for d in client_data)
+        if ctx.pad_rows is not None:
+            rows = max(rows, slab_rows(ctx.pad_rows))
         full = self._resident_cohort(ctx, mesh, client_data, client_ids,
-                                     k_pad)
+                                     k_pad, rows=rows)
         aux_full: Any = ()
         if ctx.has_precompute:
             parts_spec = (ctx.algo.precompute_parts(payload)
@@ -976,7 +1051,8 @@ class ShardMapExecutor(VmapExecutor):
         picks_list = [materialize_picks(rng, d, ctx.batch_size, ctx.epochs,
                                         ctx.max_batches)
                       for d in client_data]
-        picks, ex_mask, step_mask = _pad_and_stack_picks(picks_list, k_pad)
+        picks, ex_mask, step_mask = _pad_and_stack_picks(
+            picks_list, k_pad, s_pad=ctx.pad_steps, b_pad=ctx.pad_batch)
         sharding = NamedSharding(mesh, P("clients"))
         picks = jax.device_put(picks, sharding)
         ex_mask = jax.device_put(ex_mask, sharding)
@@ -985,6 +1061,8 @@ class ShardMapExecutor(VmapExecutor):
         states_padded = _pad_clients_axis(states_stacked, k_pad)
 
         fx, fy, fmask = full
+        ctx.note_round_shape(("smap_round", ndev, rows)
+                             + tuple(picks.shape))
         params_padded, mloss_padded = self._sharded_round_fn(ctx, mesh)(
             global_params, payload, states_padded, fx, fy, picks, ex_mask,
             step_mask, aux_full)
@@ -1017,7 +1095,8 @@ class ShardMapExecutor(VmapExecutor):
         _LOG.debug("shard_map round: K=%d padded to %d on %d devices", k,
                    k_pad, ndev)
         return RoundResult(uploads, [float(d.n) for d in client_data],
-                           np.asarray(mloss).astype(float).tolist(),
+                           mloss if ctx.deferred
+                           else np.asarray(mloss).astype(float).tolist(),
                            new_states)
 
 
@@ -1057,7 +1136,28 @@ class AsyncExecutor:
       profile           ``systemsim.SpeedProfile`` for per-client speeds
       availability      optional ``systemsim.Availability`` duty cycle
       inner             ready-cohort executor spec or instance
-      base_step_time    virtual seconds per unit of local work
+      base_step_time    virtual seconds per unit of local work — calibrate
+                        with ``systemsim.measure_step_time`` to make
+                        ``sim_time`` a wall-clock prediction
+      pipelined         True (default) overlaps wave N+1's dispatch — the
+                        host-side slab gather / batch materialization and
+                        the teacher ``precompute_aux`` — with wave N's
+                        on-device training: the inner executor defers its
+                        loss sync (``RoundContext.deferred``) and the
+                        drive loop refills the fleet BEFORE the eval
+                        forces, so ``jax.block_until_ready`` happens only
+                        at aggregation.  False restores the historical
+                        single-stream order (the throughput benchmark's
+                        baseline); values are identical either way.
+      wave_slots        "auto" (default) pads every dispatch wave to a
+                        fixed slot count — the buffer size — on the
+                        batched inners, pinning ONE compiled round body
+                        across wave-size churn (``telemetry
+                        ["compile_count"]`` proves it); an int forces the
+                        slot count, None/"variable" keeps the historical
+                        per-wave shapes (which retrace per distinct
+                        geometry).  The sequential inner has no stacked
+                        shapes to pin and always runs variable.
 
     Fault tolerance composes from the OUTSIDE, not here: pass
     ``run_federated(faults=systemsim.FaultProfile(...))`` and the async
@@ -1075,13 +1175,21 @@ class AsyncExecutor:
                  staleness_cutoff: Optional[float] = None,
                  profile=None, availability=None,
                  inner: "str | ClientExecutor" = "auto",
-                 base_step_time: float = 1.0):
+                 base_step_time: float = 1.0,
+                 pipelined: bool = True,
+                 wave_slots: "int | str | None" = "auto"):
         from repro.core.server import STALENESS_SCHEMES
         if staleness not in STALENESS_SCHEMES:
             raise ValueError(f"unknown staleness scheme {staleness!r}; "
                              f"available: {STALENESS_SCHEMES}")
         if isinstance(inner, str) and inner == "async":
             raise ValueError("AsyncExecutor cannot nest itself as inner")
+        if isinstance(wave_slots, str) and wave_slots not in ("auto",
+                                                              "variable"):
+            raise ValueError(f"wave_slots must be 'auto', 'variable', an "
+                             f"int or None, got {wave_slots!r}")
+        if isinstance(wave_slots, int) and wave_slots < 1:
+            raise ValueError(f"wave_slots must be >= 1, got {wave_slots}")
         self.buffer_size = buffer_size
         self.staleness = staleness
         self.staleness_a = staleness_a
@@ -1090,6 +1198,8 @@ class AsyncExecutor:
         self.availability = availability
         self.inner = inner
         self.base_step_time = base_step_time
+        self.pipelined = pipelined
+        self.wave_slots = wave_slots
 
     def resolve_inner(self, algo: Algorithm, n_sample: int,
                       model: Optional[ModelBundle] = None) -> ClientExecutor:
@@ -1097,6 +1207,21 @@ class AsyncExecutor:
         if isinstance(resolved, AsyncExecutor):
             raise ValueError("AsyncExecutor cannot nest itself as inner")
         return resolved
+
+    def resolve_wave_slots(self, buffer_size: int,
+                           inner: ClientExecutor) -> Optional[int]:
+        """The fixed wave slot count for this run, or None for variable
+        waves.  "auto" resolves to the aggregation buffer size: refills
+        dispatch exactly B clients, redispatches pad 1 → B, and the
+        initial ``n_sample`` wave chunks into ceil(n_sample / B) calls of
+        the SAME B-slot body (see ``fl_loop._run_async``) — so one shape
+        covers every wave.  The sequential inner trains clients one at a
+        time (no stacked shapes) and always runs variable."""
+        if self.wave_slots in (None, "variable"):
+            return None
+        if getattr(inner, "name", None) == "sequential":
+            return None
+        return buffer_size if self.wave_slots == "auto" else self.wave_slots
 
     def run_round(self, ctx, global_params, payload, client_states,
                   client_data, rng, client_ids=None) -> RoundResult:

@@ -159,9 +159,13 @@ def run_federated(task: PaperTask, algo: Algorithm,
     state, per-client state, round records — ``checkpoint.recovery``);
     ``resume=True`` restores the newest loadable state file from that
     directory (torn files are skipped) and continues bit-identically to
-    the uninterrupted run.  Supported on the synchronous executors with
-    eager ``data=`` (the async event heap and the out-of-core population
-    state tiers are not checkpointable yet).
+    the uninterrupted run.  This composes with ``executor="async"`` (the
+    in-flight event heap, its tagged upload pytrees and the per-client
+    retry state serialize with the rest — a kill mid-wave resumes the
+    exact wave) and with ``population=`` (the per-client state tiers
+    snapshot their warm entries by value and their spill set by
+    reference, so resume re-warms lazily from the same spill files;
+    stateless algorithms re-init bit-identically and snapshot nothing).
     """
     if (data is None) == (population is None):
         raise ValueError("pass exactly one of data= (eager FederatedData) "
@@ -232,15 +236,6 @@ def run_federated(task: PaperTask, algo: Algorithm,
 
     if resume and checkpoint_dir is None:
         raise ValueError("resume=True requires checkpoint_dir=")
-    if checkpoint_dir is not None:
-        if inner is not None:
-            raise ValueError("checkpointing the async executor is not "
-                             "supported: the in-flight event heap is not "
-                             "serializable run state yet")
-        if pop is not None:
-            raise ValueError("checkpointing with population= is not "
-                             "supported: per-client state lives in the "
-                             "out-of-core tiers, not the checkpoint")
 
     if inner is not None:
         return _run_async(task, algo, data, model, server, ctx, exec_, inner,
@@ -249,7 +244,9 @@ def run_federated(task: PaperTask, algo: Algorithm,
                           round_callback=round_callback, dp=dp,
                           n_sample=n_sample, client_states=client_states,
                           val_batch=val_batch, pop=pop,
-                          injector=injector, policy=policy)
+                          injector=injector, policy=policy,
+                          checkpoint_dir=checkpoint_dir,
+                          checkpoint_every=checkpoint_every, resume=resume)
 
     records: list[RoundRecord] = []
     local_acc = 0.0
@@ -275,8 +272,7 @@ def run_federated(task: PaperTask, algo: Algorithm,
                 if state.get("fault_telemetry") is not None:
                     ctx.telemetry["faults"].update(state["fault_telemetry"])
             records = [RoundRecord(**d) for d in state["records"]]
-            for k, s in enumerate(state["client_states"]):
-                client_states[k] = s
+            _restore_client_states(client_states, state["client_states"])
 
     for t in range(start_round, rounds):
         t0 = time.time()
@@ -447,8 +443,44 @@ def _fault_tolerant_round(exec_, ctx, server, payload, client_states, data,
     return uploads, weights, losses
 
 
+def _max_client_n(data) -> int:
+    """Largest client example count in the population — the shape bound
+    fixed-slot waves pin the compiled round body to.  Population facades
+    answer through ``max_client_n()`` without materializing cold shards;
+    eager ``FederatedData`` scans its client list."""
+    fn = getattr(data, "max_client_n", None)
+    if fn is not None:
+        return int(fn())
+    return int(max(d.n for d in data.clients))
+
+
+def _snapshot_client_states(client_states, n_clients):
+    """Checkpoint payload for per-client algorithm state.  The eager dict
+    stores every state by value (O(n_clients) — fine at eager scale); a
+    population-tier ``ClientStateStore`` snapshots itself instead (warm
+    entries by value, the spill set by reference, nothing at all for
+    stateless algorithms) so the checkpoint stays O(touched clients)."""
+    if hasattr(client_states, "snapshot"):
+        return client_states.snapshot()
+    return [client_states[k] for k in range(n_clients)]
+
+
+def _restore_client_states(client_states, saved):
+    if hasattr(client_states, "restore") and isinstance(saved, dict):
+        client_states.restore(saved)
+        return
+    if isinstance(saved, dict):
+        raise ValueError(
+            "checkpoint holds a population state-store snapshot but this "
+            "run uses eager data= — resume with the population= it was "
+            "written under")
+    for k, s in enumerate(saved):
+        client_states[k] = s
+
+
 def _save_checkpoint(ckpt_dir, rnd, algo, server, jrng, rng, injector,
-                     records, client_states, n_clients, ftel=None):
+                     records, client_states, n_clients, ftel=None,
+                     extra=None):
     from repro.checkpoint import recovery
     state = {
         "server": server,
@@ -462,8 +494,10 @@ def _save_checkpoint(ckpt_dir, rnd, algo, server, jrng, rng, injector,
                            if injector is not None else None),
         "fault_telemetry": dict(ftel) if ftel is not None else None,
         "records": [dataclasses.asdict(r) for r in records],
-        "client_states": [client_states[k] for k in range(n_clients)],
+        "client_states": _snapshot_client_states(client_states, n_clients),
     }
+    if extra:
+        state.update(extra)
     recovery.save_run_state(ckpt_dir, rnd, state, meta={"algo": algo.name})
 
 
@@ -475,7 +509,9 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
                rng: np.random.Generator, jrng, *, seed: int, rounds: int,
                eval_every: int, verbose: bool, round_callback, dp,
                n_sample: int, client_states: dict, val_batch,
-               pop=None, injector=None, policy=None) -> History:
+               pop=None, injector=None, policy=None,
+               checkpoint_dir=None, checkpoint_every: int = 1,
+               resume: bool = False) -> History:
     """Buffered-asynchronous rounds on a simulated heterogeneous system.
 
     Event structure (one History record per AGGREGATION, i.e. per global
@@ -514,6 +550,31 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
     backoff on the simulated clock (dropped from the fleet after
     ``max_retries`` consecutive failures), and the post-aggregation
     refill tops the fleet back up to ``n_sample`` in flight.
+
+    Fixed-slot waves + pipelining (``AsyncExecutor(wave_slots=,
+    pipelined=)``): with fixed slots every dispatch wave pads to the
+    buffer size B through the phantom-client masking machinery — refills
+    ARE B clients, redispatches pad 1 → B, and the initial ``n_sample``
+    wave trains as ceil(n_sample/B) chunks of the same B-slot body — so
+    exactly ONE compiled round body serves the whole run
+    (``telemetry["compile_count"]``).  Pipelined mode defers every host
+    sync to the aggregation: the inner executor returns on-device losses,
+    the refill wave's sampling/materialization/teacher-precompute dispatch
+    BEFORE the round's eval forces, and ``jax.block_until_ready`` runs
+    only on the buffer being aggregated — wave N+1's host+device prologue
+    overlaps wave N's training.  Both knobs change scheduling only: the
+    aggregated numbers are identical to the single-stream variable-wave
+    path (the equivalence tests pin fixed-vs-variable bit-for-bit at zero
+    faults and pipelined-vs-single-stream < 1e-5).
+
+    ``checkpoint_dir=``/``resume=`` compose with all of the above: each
+    aggregation checkpoints the full run state INCLUDING the simulator
+    (clock, event heap with its tagged in-flight upload pytrees, dispatch
+    sequence) and the per-client retry counters, so a run killed mid-wave
+    resumes into the exact wave it died in and replays the uninterrupted
+    history bit-for-bit — faults included (corruption is applied at
+    buffer-fill time, never inside the heap, so the snapshot only ever
+    holds finite leaves).
     """
     from repro.core import systemsim
     from repro.core.server import async_aggregation_weights
@@ -545,6 +606,21 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
             w = work_memo[k] = client_work(data.client_n(k))
         return w
 
+    # fixed-slot wave geometry: pin the batched round body's shapes to
+    # population-wide maxima (client size -> steps/batch/rows are all
+    # monotone in n, so the largest client bounds every wave) and the
+    # client axis to the buffer size — one compiled body for the run
+    slots = exec_.resolve_wave_slots(b, inner)
+    if slots is not None:
+        n_max = _max_client_n(data)
+        ctx.wave_slots = slots
+        ctx.pad_steps = client_work(n_max)
+        ctx.pad_batch = min(ctx.batch_size, n_max)
+        ctx.pad_rows = n_max
+    # pipelined mode: batched inners return on-device losses (forced only
+    # at aggregation, below) instead of syncing the host per wave
+    ctx.deferred = bool(exec_.pipelined and inner.name != "sequential")
+
     # in-flight ids are the SMALL set (≤ n_sample); sampling excludes them
     # instead of enumerating the O(population) idle complement — for flat
     # data ``sample_cohort(exclude=...)`` reproduces the historical
@@ -562,35 +638,42 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         """Train ``cids`` against the current global and schedule their
         completions (with per-dispatch fault draws when injection is on:
         a faulted dispatch still occupies the heap — inflated by the
-        timeout factor for the timeout tail — but its tag marks it dead
-        or carries a corrupted upload for the validation gate)."""
+        timeout factor for the timeout tail — but its tag marks it dead;
+        corruption is applied at buffer-FILL time from the tag, so the
+        heap itself only ever holds finite uploads and stays
+        checkpointable through ``io.save_pytree``'s non-finite gate).
+
+        In fixed-slot mode the wave trains in chunks of ``slots`` clients
+        so every inner call runs the one compiled B-slot body; sampling
+        (one ``sample_cohort`` per wave) and the sim dispatch sequence
+        are untouched — chunking is invisible to both."""
         payload = algo.round_payload(server, krng)
         if pop is not None:
             # in-flight clients keep their warm shard / device slab /
             # state-tier entries until their completions aggregate
             pop.pin(cids)
-        result = inner.run_round(
-            ctx, server["global"], payload,
-            [client_states[k] for k in cids],
-            [data.clients[k] for k in cids], rng, client_ids=cids)
-        for i, k in enumerate(cids):
-            fault = injector.draw() if injector is not None else None
-            up = result.uploads[i]
-            if fault is None:
-                # a failed client's local work is lost: only healthy
-                # dispatches commit their state update
-                client_states[k] = result.client_states[i]
-            elif fault[0] == "corrupt":
-                up = dict(up, params=systemsim.corrupt_params(
-                    up["params"], fault[1], injector.profile.huge_scale))
-            slowdown = (injector.profile.timeout_factor
-                        if fault is not None and fault[0] == "timeout"
-                        else 1.0)
-            in_flight.add(k)
-            sim.dispatch(k, work_of(k), tag={
-                "upload": up, "weight": result.weights[i],
-                "loss": result.local_losses[i], "version": version,
-                "fault": fault}, delay=delay, slowdown=slowdown)
+        groups = ([cids[i:i + slots] for i in range(0, len(cids), slots)]
+                  if slots is not None else [cids])
+        for group in groups:
+            result = inner.run_round(
+                ctx, server["global"], payload,
+                [client_states[k] for k in group],
+                [data.clients[k] for k in group], rng, client_ids=group)
+            for i, k in enumerate(group):
+                fault = injector.draw() if injector is not None else None
+                if fault is None:
+                    # a failed client's local work is lost: only healthy
+                    # dispatches commit their state update
+                    client_states[k] = result.client_states[i]
+                slowdown = (injector.profile.timeout_factor
+                            if fault is not None and fault[0] == "timeout"
+                            else 1.0)
+                in_flight.add(k)
+                sim.dispatch(k, work_of(k), tag={
+                    "upload": result.uploads[i],
+                    "weight": result.weights[i],
+                    "loss": result.local_losses[i], "version": version,
+                    "fault": fault}, delay=delay, slowdown=slowdown)
 
     def dispatch_wave(k_count: int) -> None:
         nonlocal jrng
@@ -622,6 +705,15 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         while len(out) < b and sim.in_flight > 0:
             c = sim.pop()
             fault = c.tag.get("fault")
+            if fault is not None and fault[0] == "corrupt":
+                # corruption is applied HERE, not at dispatch: the heap
+                # only ever holds the clean finite upload plus the fault
+                # tag (so checkpoints of in-flight state pass io.py's
+                # non-finite gate), and ``corrupt_params`` is pure, so a
+                # restored heap replays the same corrupted bytes
+                up = c.tag["upload"]
+                c.tag["upload"] = dict(up, params=systemsim.corrupt_params(
+                    up["params"], fault[1], injector.profile.huge_scale))
             if fault is None or fault[0] == "corrupt":
                 ok, reason = validate_update(
                     c.tag["upload"]["params"], server["global"],
@@ -650,8 +742,78 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
                 fail_count.pop(c.client, None)
         return out
 
-    dispatch_wave(n_sample)
-    for t in range(rounds):
+    def refill() -> None:
+        if injector is None:
+            dispatch_wave(b)
+        else:
+            # permanently dropped clients shrink the fleet below
+            # n_sample: top back up (bounded by the idle population)
+            want = min(n_sample - len(in_flight),
+                       data.n_clients - len(in_flight))
+            dispatch_wave(max(0, want))
+
+    def save_ckpt(rnd: int) -> None:
+        """Checkpoint the FULL async run state.  Must run AFTER the
+        round's refill: the heap snapshot has to contain the wave the
+        uninterrupted run would carry into round ``rnd + 1``, or resume
+        would aggregate from an under-filled fleet."""
+        if checkpoint_dir is None or (
+                rnd % checkpoint_every != 0 and rnd != rounds):
+            return
+        _save_checkpoint(
+            checkpoint_dir, rnd, algo, server, jrng, rng, injector,
+            records, client_states, data.n_clients, ftel=ftel,
+            extra={"sim": sim.state(),
+                   "in_flight": sorted(in_flight),
+                   "version": version,
+                   "stale_absorbed": stale_absorbed,
+                   "max_stale": max_stale,
+                   "fail_count": sorted(fail_count.items())})
+
+    start_round = 0
+    if resume:
+        from repro.checkpoint import recovery
+        hit = recovery.load_latest_state(checkpoint_dir)
+        if hit is not None:
+            state, meta, start_round = hit
+            if meta.get("algo") not in (None, algo.name):
+                raise ValueError(
+                    f"resume: checkpoint was written by algo "
+                    f"{meta.get('algo')!r}, this run is {algo.name!r}")
+            server = state["server"]
+            jrng = state["jrng"]
+            recovery.restore_rng(rng, state["np_rng"])
+            if injector is not None and state.get("fault_rng") is not None:
+                recovery.restore_rng(injector.rng, state["fault_rng"])
+                if state.get("fault_counters") is not None:
+                    injector.counters.update(state["fault_counters"])
+                if state.get("fault_telemetry") is not None:
+                    ftel.update(state["fault_telemetry"])
+            records = [RoundRecord(**d) for d in state["records"]]
+            _restore_client_states(client_states, state["client_states"])
+            sim.restore(state["sim"])
+            in_flight = set(int(k) for k in state["in_flight"])
+            version = int(state["version"])
+            stale_absorbed = int(state["stale_absorbed"])
+            max_stale = float(state["max_stale"])
+            fail_count.clear()
+            fail_count.update({int(k): int(v)
+                               for k, v in state["fail_count"]})
+            if pop is not None and in_flight:
+                # restored in-flight clients must hold their warm/slab
+                # pins exactly as they did when the checkpoint was cut
+                pop.pin(sorted(in_flight))
+
+    # with checkpointing on, the FINAL round refills too: its checkpoint
+    # then matches the one an uninterrupted longer run writes at the same
+    # round, so a finished run can be EXTENDED (resume with more rounds)
+    # bit-identically, not just recovered from a kill
+    def wants_refill(t: int) -> bool:
+        return t < rounds - 1 or checkpoint_dir is not None
+
+    if start_round == 0:
+        dispatch_wave(n_sample)
+    for t in range(start_round, rounds):
         t0 = time.time()
         if injector is None:
             completions = sim.pop_batch(b)
@@ -668,8 +830,9 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
                 records.append(RoundRecord(
                     t + 1, acc, loss, 0.0, time.time() - t0,
                     sim_time=sim.now, version=version))
-                if t < rounds - 1:
+                if wants_refill(t):
                     dispatch_wave(min(b, data.n_clients - len(in_flight)))
+                save_ckpt(t + 1)
                 continue
         # canonical aggregation order: dispatch sequence (see docstring)
         completions.sort(key=lambda c: c.seq)
@@ -680,7 +843,12 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         weights = async_aggregation_weights(
             data_weights, staleness, exec_.staleness, a=exec_.staleness_a,
             cutoff=exec_.staleness_cutoff, normalize=False)
-        local_losses = [c.tag["loss"] for c in completions]
+        # deferred (pipelined) completions carry on-device losses; this
+        # float() + the block_until_ready below are the round's ONLY
+        # host syncs — everything still in flight stays in flight
+        local_losses = [float(c.tag["loss"]) for c in completions]
+        if ctx.deferred:
+            jax.block_until_ready(agg_uploads)
         if verbose and t == 0:
             tele = ctx.telemetry
             print(f"[{algo.name}] executor route: async/"
@@ -713,6 +881,16 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
             pop.unpin([c.client for c in completions])
             ctx.telemetry["population"] = pop.stats()
 
+        refilled = False
+        if ctx.deferred and wants_refill(t):
+            # pipelining: dispatch wave N+1 (sampling, slab gather,
+            # teacher precompute, device launch) BEFORE this round's
+            # eval forces the host — the refill's host prologue and its
+            # device work overlap the eval and the wait for the next
+            # buffer.  Eval consumes no rng, so hoisting the dispatch
+            # past it leaves the sampled history untouched.
+            refill()
+            refilled = True
         if (t + 1) % eval_every == 0 or t == rounds - 1:
             acc, loss = evaluate(model, server["global"], data.test_x,
                                  data.test_y)
@@ -724,6 +902,9 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
             time.time() - t0, sim_time=sim.now, version=version,
             mean_staleness=float(np.mean(staleness)),
             sampled=tuple(c.client for c in completions)))
+        if wants_refill(t) and not refilled:
+            refill()
+        save_ckpt(t + 1)
         if round_callback is not None:
             round_callback(t + 1, server, model)
         if verbose:
@@ -731,15 +912,6 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
                   f"acc={acc:.4f} loss={loss:.4f} "
                   f"local={np.mean(local_losses):.4f} "
                   f"sim_t={sim.now:.1f} stale={np.mean(staleness):.2f}")
-        if t < rounds - 1:
-            if injector is None:
-                dispatch_wave(b)
-            else:
-                # permanently dropped clients shrink the fleet below
-                # n_sample: top back up (bounded by the idle population)
-                want = min(n_sample - len(in_flight),
-                           data.n_clients - len(in_flight))
-                dispatch_wave(max(0, want))
 
     if pop is not None and in_flight:
         # clients still in flight when the run ends would stay pinned —

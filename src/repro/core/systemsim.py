@@ -342,3 +342,71 @@ class SystemSim:
                 "speed_min": float(self.speeds.min()),
                 "speed_max": float(self.speeds.max()),
                 "speed_mean": float(self.speeds.mean())}
+
+    # -- checkpointing ----------------------------------------------------
+    def state(self) -> dict:
+        """Serializable snapshot of ALL mutable sim state — the clock, the
+        in-flight event heap (tags included: the async loop stores upload
+        pytrees there, which ``checkpoint.recovery`` encodes leaf by leaf)
+        and the counters.  Speeds/phases are included too: they are
+        reproducible from the seed, but restoring them makes the snapshot
+        self-contained rather than construction-order-dependent."""
+        return {"now": float(self.now),
+                "heap": list(self._heap),
+                "seq": self._seq,
+                "dispatches": self.dispatches,
+                "availability_delays": self.availability_delays,
+                "total_wait": float(self.total_wait),
+                # as python-float lists, NOT arrays: float64 arrays would
+                # round-trip through jnp's default float32 on decode
+                "speeds": [float(s) for s in self.speeds],
+                "phases": ([float(p) for p in self.phases]
+                           if self.phases is not None else None)}
+
+    def restore(self, state: dict) -> None:
+        """Rehydrate from ``state()`` (round-tripped through
+        ``checkpoint.recovery``): heap entries come back as tuples in the
+        saved order, which is a valid heap — re-heapify anyway so a
+        hand-edited snapshot cannot corrupt the pop order."""
+        self.now = float(state["now"])
+        heap = [(float(t), int(seq), int(client), tag)
+                for t, seq, client, tag in state["heap"]]
+        heapq.heapify(heap)
+        self._heap = heap
+        self._seq = int(state["seq"])
+        self.dispatches = int(state["dispatches"])
+        self.availability_delays = int(state["availability_delays"])
+        self.total_wait = float(state["total_wait"])
+        self.speeds = np.asarray(state["speeds"], np.float64)
+        phases = state.get("phases")
+        self.phases = (np.asarray(phases, np.float64)
+                       if phases is not None else None)
+
+
+def measure_step_time(step_fn, *args, warmup: int = 1,
+                      repeats: int = 3) -> float:
+    """Median wall-clock seconds of one ``step_fn(*args)`` call, with a
+    device sync after each — the calibration input for
+    ``SystemSim(base_step_time=...)``.
+
+    ``base_step_time`` defaults to 1.0 virtual second per unit of local
+    work, so ``sim_time`` is in abstract step units.  Calibrating it to a
+    measured per-step device time (wall seconds / local steps in the
+    call) turns the virtual clock into a wall-clock PREDICTION:
+    ``sim_time * base_step_time`` then estimates real seconds, which is
+    what lets ``sim_speedup_vs_sync`` be checked against measured
+    throughput (``benchmarks/throughput_bench.py`` records the ratio).
+    """
+    import time as _time
+
+    import jax as _jax
+
+    for _ in range(max(0, warmup)):
+        _jax.block_until_ready(step_fn(*args))
+    samples = []
+    for _ in range(max(1, repeats)):
+        t0 = _time.perf_counter()
+        _jax.block_until_ready(step_fn(*args))
+        samples.append(_time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2]

@@ -66,6 +66,11 @@ class FederatedData:
     def client_n(self, cid: int) -> int:
         return self.clients[int(cid)].n
 
+    def max_client_n(self) -> int:
+        """Largest client — the shape bound fixed-slot async waves pin
+        their one compiled round body to."""
+        return int(max(c.n for c in self.clients))
+
     def sample_cohort(self, rng: np.random.Generator, k: int,
                       exclude=None) -> np.ndarray:
         """Flat uniform-without-replacement cohort draw (the historical

@@ -77,6 +77,13 @@ class Population:
     def client_n(self, cid: int) -> int:
         return self.store.client_n(cid)
 
+    def max_client_n(self) -> int:
+        fn = getattr(self.store.source, "max_client_n", None)
+        if fn is not None:
+            return int(fn())
+        return int(max(self.store.source.client_n(c)
+                       for c in range(self.n_clients)))
+
     def sample_cohort(self, rng: np.random.Generator, k: int,
                       exclude: Optional[Iterable[int]] = None) -> np.ndarray:
         return self.sampler.sample(rng, k, exclude)

@@ -79,6 +79,9 @@ class InMemorySource:
     def client_n(self, cid: int) -> int:
         return self.clients[cid].n
 
+    def max_client_n(self) -> int:
+        return int(max(c.n for c in self.clients))
+
 
 class SyntheticClientSource:
     """Million-client populations from a seed: client ``cid`` is generated
@@ -121,6 +124,11 @@ class SyntheticClientSource:
         # the size is the client stream's FIRST draw, so it is knowable
         # without generating the feature arrays
         return int(self._rng(cid).integers(self.min_n, self.max_n + 1))
+
+    def max_client_n(self) -> int:
+        # sizes are uniform over [min_n, max_n]: the bound is exact
+        # without touching a single client stream
+        return self.max_n
 
     def client(self, cid: int) -> ClientData:
         rng = self._rng(cid)
@@ -262,6 +270,15 @@ class DiskShardSource:
         s, i = self._locate(cid)
         off = self._shard(s)[2]
         return int(off[i + 1] - off[i])
+
+    def max_client_n(self) -> int:
+        """Largest client from the per-shard offset tables alone — the
+        offset files are tiny; shard payload bytes stay cold."""
+        best = 0
+        for s in range(len(self.shard_sizes)):
+            off = np.load(_shard_paths(self.root, s)[2])
+            best = max(best, int(np.max(np.diff(off))))
+        return best
 
     def client(self, cid: int) -> ClientData:
         s, i = self._locate(cid)

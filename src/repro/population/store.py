@@ -207,6 +207,43 @@ class ClientStateStore:
             self.state_spills += 1
         self.peak_warm = max(self.peak_warm, len(self.warm))
 
+    def snapshot(self) -> dict:
+        """Checkpoint payload: warm states by VALUE, the spill tier by
+        REFERENCE (the set of spilled ids + the spill directory).  Resume
+        re-warms lazily — a restored store starts with the same warm
+        entries and reloads spilled states from disk on first touch.
+        Stateless algorithms snapshot nothing but the marker (their
+        states re-derive from ``init_fn``)."""
+        snap: dict = {"kind": "state_store", "mutable": self.mutable}
+        if self.mutable:
+            snap["warm_cids"] = [int(c) for c in self.warm]
+            snap["warm_states"] = list(self.warm.values())
+            snap["spilled"] = sorted(int(c) for c in self.spilled)
+            snap["spill_dir"] = self.spill_dir
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        if bool(snap.get("mutable")) != self.mutable:
+            raise ValueError(
+                "checkpointed state store mutability does not match this "
+                "run's algorithm — resume with the algo it was written "
+                "under")
+        if not self.mutable:
+            return
+        self.warm = collections.OrderedDict(
+            zip([int(c) for c in snap["warm_cids"]], snap["warm_states"]))
+        self.spilled = set(int(c) for c in snap["spilled"])
+        spill_dir = snap.get("spill_dir")
+        if self.spilled and (spill_dir is None
+                             or not os.path.isdir(spill_dir)):
+            raise ValueError(
+                f"checkpoint references spilled client states under "
+                f"{spill_dir!r} but that directory is gone — pass "
+                f"state_dir= a durable path to make spills survive "
+                f"restarts")
+        if spill_dir is not None:
+            self.spill_dir = spill_dir
+
     def stats(self) -> dict:
         return {"state_mutable": self.mutable,
                 "state_warm": len(self.warm), "state_spilled": len(self.spilled),

@@ -547,3 +547,130 @@ def test_straggler_profile_sweep(tiny_setup, profile, scheme):
     assert h.telemetry["route"] == "async"
     assert h.telemetry["staleness_scheme"] == scheme
     assert h.telemetry["sim"]["speed_min"] > 0.0
+
+
+# --- fixed-slot waves + pipelined dispatch ----------------------------------
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >1 device: run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _slot_exec(wave_slots, pipelined, inner="vmap"):
+    return ex.AsyncExecutor(buffer_size=3, staleness="fedgkd",
+                            staleness_a=0.5, staleness_cutoff=4,
+                            profile=STRAGGLER,
+                            availability=Availability(period=24.0, duty=0.8),
+                            inner=inner, wave_slots=wave_slots,
+                            pipelined=pipelined)
+
+
+def _history_key(h):
+    return [(r.round, r.test_acc, r.test_loss, r.mean_local_loss,
+             float(r.sim_time), r.version, r.mean_staleness, r.sampled)
+            for r in h.records]
+
+
+def test_wave_slots_validation():
+    with pytest.raises(ValueError, match="wave_slots"):
+        ex.AsyncExecutor(wave_slots="sometimes")
+    with pytest.raises(ValueError, match="wave_slots"):
+        ex.AsyncExecutor(wave_slots=0)
+
+
+def test_fixed_slot_waves_bit_identical_to_variable(tiny_setup):
+    """Padding every dispatch wave to B slots (phantom-client masks, S/B/
+    rows pinned to population maxima) must not move a single bit of the
+    aggregated history at zero faults — padded slots are exact identities
+    through the scan's keep-masks."""
+    task, data = tiny_setup
+    mk = lambda: algorithms.make("fedgkd", buffer_m=3)  # noqa: E731
+    h_fix = fl_loop.run_federated(task, mk(), data, seed=7, rounds=8,
+                                  executor=_slot_exec("auto", False))
+    h_var = fl_loop.run_federated(task, mk(), data, seed=7, rounds=8,
+                                  executor=_slot_exec("variable", False))
+    assert _history_key(h_fix) == _history_key(h_var)
+    la = jax.tree_util.tree_leaves(h_fix.final_params)
+    lb = jax.tree_util.tree_leaves(h_var.final_params)
+    assert all(bool(np.all(np.asarray(x) == np.asarray(y)))
+               for x, y in zip(la, lb))
+
+
+def test_fixed_slot_compile_count_under_churn(tiny_setup):
+    """Across a 30-round async run with churning wave geometry (ragged
+    client sizes, initial 6-wave then 3-refills) the fixed-slot mode
+    traces exactly ONE round body; the variable mode retraces per
+    distinct (steps, batch, rows) signature."""
+    task, data = tiny_setup
+    mk = lambda: algorithms.make("fedavg")  # noqa: E731
+    h_fix = fl_loop.run_federated(task, mk(), data, seed=0, rounds=30,
+                                  eval_every=30,
+                                  executor=_slot_exec("auto", True))
+    h_var = fl_loop.run_federated(task, mk(), data, seed=0, rounds=30,
+                                  eval_every=30,
+                                  executor=_slot_exec("variable", False))
+    assert h_fix.telemetry["compile_count"] == 1
+    assert h_var.telemetry["compile_count"] >= 3
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedgkd", "fedgkd-vote"])
+def test_pipelined_matches_single_stream(tiny_setup, algo):
+    """Deferred host syncs + refill-before-eval change SCHEDULING only:
+    the aggregated history agrees with the single-stream variable-wave
+    path to < 1e-5 on every algorithm (in practice bit-identical on CPU;
+    the tolerance allows accelerator reassociation)."""
+    task, data = tiny_setup
+    kw = {"buffer_m": 3} if algo.startswith("fedgkd") else {}
+    mk = lambda: algorithms.make(algo, **kw)  # noqa: E731
+    h_p = fl_loop.run_federated(task, mk(), data, seed=5, rounds=8,
+                                executor=_slot_exec("auto", True))
+    h_s = fl_loop.run_federated(task, mk(), data, seed=5, rounds=8,
+                                executor=_slot_exec("variable", False))
+    assert [r.sampled for r in h_p.records] == \
+           [r.sampled for r in h_s.records]
+    for a, b in zip(h_p.records, h_s.records):
+        assert abs(a.test_acc - b.test_acc) < 1e-5
+        assert abs(a.test_loss - b.test_loss) < 1e-5
+        assert abs(a.mean_local_loss - b.mean_local_loss) < 1e-5
+
+
+def test_sequential_inner_ignores_wave_slots(tiny_setup):
+    """The sequential inner has no batched body to pin: wave_slots
+    resolves to None (no padding, no compile_count telemetry) and the
+    run still completes deferred-free."""
+    task, data = tiny_setup
+    h = fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
+                              rounds=3,
+                              executor=_slot_exec("auto", True,
+                                                  inner="sequential"))
+    assert len(h.records) == 3
+    assert "compile_count" not in h.telemetry
+
+
+def test_measure_step_time_positive_and_syncing():
+    import jax.numpy as jnp
+
+    from repro.core.systemsim import measure_step_time
+
+    f = jax.jit(lambda x: (x @ x.T).sum())
+    t = measure_step_time(f, jnp.ones((64, 64)), warmup=1, repeats=3)
+    assert t > 0.0 and np.isfinite(t)
+
+
+@multidevice
+def test_fixed_slot_waves_shard_map_inner(tiny_setup):
+    """Fixed-slot equivalence on the device mesh: the sharded inner pads
+    wave slots to the device multiple on top of the B-slot padding and
+    still reproduces the variable-wave history bit-for-bit, with ONE
+    traced sharded round body."""
+    task, data = tiny_setup
+    mk = lambda: algorithms.make("fedgkd", buffer_m=3)  # noqa: E731
+    h_fix = fl_loop.run_federated(task, mk(), data, seed=7, rounds=8,
+                                  executor=_slot_exec("auto", True,
+                                                      inner="shard_map"))
+    h_var = fl_loop.run_federated(task, mk(), data, seed=7, rounds=8,
+                                  executor=_slot_exec("variable", False,
+                                                      inner="shard_map"))
+    assert _history_key(h_fix) == _history_key(h_var)
+    assert h_fix.telemetry["compile_count"] == 1

@@ -36,8 +36,10 @@ from repro.configs.paper import TOY
 from repro.core import algorithms, executor as ex, fl_loop
 from repro.core.server import (FaultPolicy, ModelBuffer, first_nonfinite_path,
                                validate_update)
-from repro.core.systemsim import (CORRUPT_MODES, FaultInjector, FaultProfile,
-                                  corrupt_params, derive_fault_rng)
+from repro.core.systemsim import (CORRUPT_MODES, Availability, FaultInjector,
+                                  FaultProfile, SpeedProfile, SystemSim,
+                                  corrupt_params, derive_fault_rng,
+                                  derive_rng)
 from repro.data.pipeline import ClientData, FederatedData
 from repro.data.synthetic import SyntheticTabularTask
 
@@ -376,15 +378,17 @@ def test_resume_fresh_dir_starts_from_scratch(tiny_setup, tmp_path):
     assert glob.glob(os.path.join(ck, "state_*.npz"))
 
 
-def test_resume_guards(tiny_setup):
+def test_resume_guards(tiny_setup, tmp_path):
     task, data = tiny_setup
     with pytest.raises(ValueError, match="checkpoint_dir"):
         fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
                               rounds=1, executor="vmap", resume=True)
-    with pytest.raises(ValueError, match="async"):
-        fl_loop.run_federated(task, algorithms.make("fedavg"), data, seed=0,
-                              rounds=1, executor="async",
-                              checkpoint_dir="/tmp/nope")
+    # checkpoint_dir= with executor="async" is no longer refused: the sim
+    # heap serializes (see the async_resume suite below)
+    hist = fl_loop.run_federated(task, algorithms.make("fedavg"), data,
+                                 seed=0, rounds=1, executor="async",
+                                 checkpoint_dir=str(tmp_path / "ok"))
+    assert len(hist.records) == 1
 
 
 def test_algo_mismatch_on_resume_raises(tiny_setup, tmp_path):
@@ -451,6 +455,183 @@ def test_hard_kill_then_resume_matches_uninterrupted(tiny_setup, tmp_path):
     resumed = fl_loop.run_federated(task, mk(), data, seed=9, rounds=6,
                                     executor="vmap", checkpoint_dir=ck,
                                     resume=True)
+    _assert_histories_identical(full, resumed)
+
+
+# --- async + population resume ----------------------------------------------
+# run by name in the CI fast job: pytest tests/test_faults.py -k async_resume
+
+
+def _async_exec():
+    return ex.AsyncExecutor(buffer_size=3, staleness="fedgkd",
+                            staleness_a=0.5, staleness_cutoff=4,
+                            profile=SpeedProfile(kind="straggler",
+                                                 straggler_frac=0.25),
+                            availability=Availability(period=24.0, duty=0.8),
+                            inner="vmap")
+
+
+def _inmem_population(data, state_dir=None):
+    from repro.population import Population
+    from repro.population.sources import InMemorySource
+    return Population(InMemorySource(data.clients), data.test_x, data.test_y,
+                      state_warm_cap=3, state_dir=state_dir)
+
+
+def test_async_resume_sim_state_roundtrip(tmp_path):
+    """The event heap (tagged upload pytrees included), clock, dispatch
+    sequence and speed/phase draws serialize through checkpoint.recovery
+    and rehydrate into an identical pop order — with float64 completion
+    times intact (np scalars must NOT round-trip through jnp's float32)."""
+    mk = lambda: SystemSim(  # noqa: E731
+        6, profile=SpeedProfile(kind="straggler", straggler_frac=0.25),
+        availability=Availability(period=10.0, duty=0.5), rng=derive_rng(3))
+    sim = mk()
+    for k in range(6):
+        sim.dispatch(k, 10 + 3 * k, tag={
+            "upload": {"params": jnp.arange(3.0) + k},
+            "weight": np.float64(1.5 + k), "loss": float(k),
+            "version": k % 2,
+            "fault": None if k % 2 else ("corrupt", CORRUPT_MODES[0])})
+    sim.pop()                       # mid-wave: one completion consumed
+    recovery.save_run_state(str(tmp_path), 1, {"sim": sim.state(),
+                                               "in_flight": [1, 2, 3, 4, 5]})
+    state, _meta, rnd = recovery.load_latest_state(str(tmp_path))
+    assert rnd == 1 and state["in_flight"] == [1, 2, 3, 4, 5]
+    other = mk()
+    other.restore(state["sim"])
+    assert other.now == sim.now and other.in_flight == sim.in_flight
+    while sim.in_flight:
+        a, b = sim.pop(), other.pop()
+        assert (a.time, a.seq, a.client) == (b.time, b.seq, b.client)
+        assert a.tag["weight"] == b.tag["weight"]
+        assert a.tag["fault"] == b.tag["fault"]
+        assert np.array_equal(np.asarray(a.tag["upload"]["params"]),
+                              np.asarray(b.tag["upload"]["params"]))
+
+
+def _check_async_resume(task, data, ck, *, faults=None, population=None,
+                        rounds=8, cut=3):
+    """Full run vs checkpoint-at-``cut``-then-resume: bit-identical."""
+    mk = lambda: algorithms.make("fedgkd", buffer_m=3)  # noqa: E731
+    pop = population() if population else None
+    full = fl_loop.run_federated(task, mk(), None if pop else data,
+                                 population=pop, seed=9, rounds=rounds,
+                                 executor=_async_exec(), faults=faults)
+    pop = population() if population else None
+    fl_loop.run_federated(task, mk(), None if pop else data, population=pop,
+                          seed=9, rounds=cut, executor=_async_exec(),
+                          faults=faults, checkpoint_dir=ck)
+    pop = population() if population else None
+    resumed = fl_loop.run_federated(task, mk(), None if pop else data,
+                                    population=pop, seed=9, rounds=rounds,
+                                    executor=_async_exec(), faults=faults,
+                                    checkpoint_dir=ck, resume=True)
+    _assert_histories_identical(full, resumed)
+
+
+def test_async_resume_bit_identical(tiny_setup, tmp_path):
+    """Resume mid-run with executor="async": the restored heap/clock/
+    in-flight fleet replay the uninterrupted history bit-for-bit."""
+    task, data = tiny_setup
+    _check_async_resume(task, data, str(tmp_path / "ck"))
+
+
+def test_async_resume_with_faults_bit_identical(tiny_setup, tmp_path):
+    """Same, under CHAOS: fault draws, retry backoff state and corrupt
+    uploads (applied at fill time, never stored in the heap) all resume."""
+    task, data = tiny_setup
+    _check_async_resume(task, data, str(tmp_path / "ck"), faults=CHAOS)
+
+
+def test_async_resume_with_population_bit_identical(tiny_setup, tmp_path):
+    """checkpoint_dir= composes with population= AND executor="async":
+    the state store snapshots warm-by-value/spill-by-reference and
+    restored in-flight clients re-pin their warm entries."""
+    task, data = tiny_setup
+    sd = str(tmp_path / "spill")
+    _check_async_resume(task, data, str(tmp_path / "ck"),
+                        population=lambda: _inmem_population(data, sd))
+
+
+def test_population_sync_resume_bit_identical(tiny_setup, tmp_path):
+    """The lifted population+checkpoint refusal, sync path: a stateful
+    algorithm's warm/spilled client states survive the round trip."""
+    task, data = tiny_setup
+    sd = str(tmp_path / "spill")
+    ck = str(tmp_path / "ck")
+    mk = lambda: algorithms.make("scaffold")  # noqa: E731
+    full = fl_loop.run_federated(
+        task, mk(), population=_inmem_population(data, sd), seed=4,
+        rounds=6, executor="vmap")
+    fl_loop.run_federated(
+        task, mk(), population=_inmem_population(data, sd), seed=4,
+        rounds=3, executor="vmap", checkpoint_dir=ck)
+    resumed = fl_loop.run_federated(
+        task, mk(), population=_inmem_population(data, sd), seed=4,
+        rounds=6, executor="vmap", checkpoint_dir=ck, resume=True)
+    _assert_histories_identical(full, resumed)
+
+
+_ASYNC_KILL_SCRIPT = """\
+import dataclasses, os, sys
+import numpy as np
+from repro.configs.paper import TOY
+from repro.core import algorithms, fl_loop
+from repro.core.executor import AsyncExecutor
+from repro.core.systemsim import Availability, SpeedProfile
+from repro.data.pipeline import ClientData, FederatedData
+from repro.data.synthetic import SyntheticTabularTask
+
+SIZES = (20, 45, 64, 100, 130, 150)
+task = dataclasses.replace(TOY, n_clients=len(SIZES), participation=1.0,
+                           batch_size=64, rounds=2, local_epochs=2)
+gen = SyntheticTabularTask(task.num_classes, dim=task.feat_dim, seed=0)
+clients = [ClientData(*gen.generate(n, seed=100 + i))
+           for i, n in enumerate(SIZES)]
+tx, ty = gen.generate(200, seed=999)
+data = FederatedData(clients, tx, ty, np.zeros((len(SIZES),
+                                                task.num_classes)))
+
+def kill_at_3(rnd, server, model):
+    if rnd == 3:    # three aggregations checkpointed, then a hard death
+        os._exit(17)
+
+fl_loop.run_federated(
+    task, algorithms.make("fedgkd", buffer_m=3), data, seed=9, rounds=6,
+    executor=AsyncExecutor(buffer_size=3, staleness="fedgkd",
+                           staleness_a=0.5, staleness_cutoff=4,
+                           profile=SpeedProfile(kind="straggler",
+                                                straggler_frac=0.25),
+                           availability=Availability(period=24.0, duty=0.8),
+                           inner="vmap"),
+    checkpoint_dir=sys.argv[1], round_callback=kill_at_3)
+"""
+
+
+def test_async_resume_after_hard_kill(tiny_setup, tmp_path):
+    """os._exit mid-async-run (in-flight wave on the heap), resume
+    in-process, demand bit-identity with the never-killed run."""
+    task, data = tiny_setup
+    ck = str(tmp_path / "ck")
+    os.makedirs(ck)
+    script = tmp_path / "killed_async_run.py"
+    script.write_text(_ASYNC_KILL_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in (env.get("PYTHONPATH", ""),) if p]
+        + [os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")])
+    proc = subprocess.run([sys.executable, str(script), ck], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 17, proc.stderr[-2000:]
+    assert glob.glob(os.path.join(ck, "state_*.npz"))
+
+    mk = lambda: algorithms.make("fedgkd", buffer_m=3)  # noqa: E731
+    full = fl_loop.run_federated(task, mk(), data, seed=9, rounds=6,
+                                 executor=_async_exec())
+    resumed = fl_loop.run_federated(task, mk(), data, seed=9, rounds=6,
+                                    executor=_async_exec(),
+                                    checkpoint_dir=ck, resume=True)
     _assert_histories_identical(full, resumed)
 
 
