@@ -15,6 +15,10 @@ both artifacts with the shared ``cases`` schema:
     million-client population-tier run: ``peak_host_rss_mb`` (the warm-cap
     memory bound held) and ``sample_latency_ms`` (the O(cohort) draw), plus
     the population-independence ratio ``sample_ratio_1m_vs_10k``;
+  * ``BENCH_multihost.json`` — LOWER-is-better per-host resource metrics
+    from the 2-process placement run (one case per host, keyed by the
+    ``host`` field): ``peak_host_rss_mb`` and ``peak_warm`` — the
+    sharded warm tiers must keep holding ``warm_cap // n_hosts``;
   * ``BENCH_faults.json`` — LOWER-is-better fault-tolerance metrics:
     ``acc_drop_at_20pct_crash`` (accuracy lost at the heaviest fault cell
     vs fault-free) and ``overhead_ratio`` (retry re-dispatches per
@@ -51,14 +55,15 @@ METRICS = ("speedup_vs_sequential", "speedup_vs_no_precompute",
 # baseline * (1 + tolerance)) — an RSS or latency DROP is never a failure
 METRICS_LOWER = ("peak_host_rss_mb", "sample_latency_ms",
                  "sample_ratio_1m_vs_10k", "acc_drop_at_20pct_crash",
-                 "overhead_ratio", "compile_count")
+                 "overhead_ratio", "compile_count", "peak_warm",
+                 "rss_ratio_vs_single")
 
 
 def case_key(row: dict) -> tuple:
     return (row["algo"], row["executor"], row["epochs"],
             bool(row.get("precompute")), row.get("buffer_size"),
             row.get("model"), row.get("conv_route"), row.get("population"),
-            row.get("faults"))
+            row.get("faults"), row.get("host"))
 
 
 def index_cases(payload: dict) -> dict:

@@ -1,0 +1,224 @@
+"""Multi-host population placement benchmark: per-host memory bounds.
+
+Measures the tentpole claim of the multi-host placement layer
+(``repro.population.placement``): splitting a million-client population
+across N host processes divides the warm/hot working set — each host's
+``peak_warm`` stays inside ``warm_cap // n_hosts`` and its peak RSS lands
+measurably below the single-host figure, while the 2-process shard_map run
+still completes its rounds through the filesystem allgather exchange.
+
+The coordinator spawns every measured run as a FRESH subprocess (its own
+``--worker`` mode) so each VmHWM high-water mark is clean:
+
+  * one single-host worker (``n_hosts=1``) — the baseline figure;
+  * ``--n-hosts`` workers sharing an exchange dir — the distributed run.
+
+Clients are deliberately fat (``--min-n/--max-n`` rows of ``--dim``
+features) so the warm+hot tiers dominate interpreter noise in the RSS
+comparison; ``max_batches_per_client`` keeps the CPU compute tiny.
+
+Writes ``BENCH_multihost.json`` (one case per host, keyed by the ``host``
+field) which the nightly ``multihost-bench`` job gates through
+``compare_bench.py`` — ``peak_host_rss_mb`` and ``peak_warm`` are
+lower-is-better.  The run itself FAILS in place if a host breaks its warm
+bound or the per-host RSS is not below the single-host measurement.
+
+    PYTHONPATH=src python benchmarks/multihost_bench.py --host-devices 8
+    PYTHONPATH=src python benchmarks/multihost_bench.py \
+        --population 100000 --rounds 2            # faster local smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _worker(args) -> int:
+    """One measured training run (single-host baseline or one rank)."""
+    import jax
+
+    from repro.configs.paper import TOY
+    from repro.core import algorithms, fl_loop
+    from repro.population import (HostPlacement, Population, peak_rss_mb)
+
+    n, k = args.population, args.cohort
+    placement = None
+    if args.n_hosts > 1:
+        placement = HostPlacement(args.host, args.n_hosts,
+                                  exchange_dir=args.exchange,
+                                  timeout_s=args.timeout)
+    population = Population.synthetic(
+        n, warm_cap=args.warm_cap, shard_size=args.shard_size,
+        dim=args.dim, min_n=args.min_n, max_n=args.max_n, seed=0,
+        n_test=128, placement=placement)
+    task = dataclasses.replace(TOY, n_clients=n, participation=k / n,
+                               rounds=args.rounds, local_epochs=1,
+                               batch_size=64, feat_dim=args.dim)
+    route = "shard_map" if len(jax.devices()) > 1 else "vmap"
+    t0 = time.perf_counter()
+    hist = fl_loop.run_federated(task, algorithms.make("fedavg"),
+                                 population=population, seed=0,
+                                 executor=route, width=args.width,
+                                 eval_every=max(args.rounds, 1),
+                                 max_batches_per_client=4)
+    wall = time.perf_counter() - t0
+    stats = hist.telemetry["population"]
+    result = {"host": (f"host{args.host}" if args.n_hosts > 1
+                       else "single"),
+              "n_hosts": args.n_hosts, "executor": route,
+              "devices": len(jax.devices()),
+              "wall_s": round(wall, 2),
+              "peak_host_rss_mb": round(peak_rss_mb(), 1),
+              "final_acc": hist.records[-1].test_acc,
+              **{f"tier_{key}": val for key, val in stats.items()
+                 if isinstance(val, (int, float))},
+              "peak_warm": int(stats["peak_warm"]),
+              "warm_cap": stats["warm_cap"]}
+    with open(args.result, "w") as f:
+        json.dump(result, f)
+    print(f"[{result['host']}] {args.rounds} rounds x K={k} [{route}]: "
+          f"{wall:.1f} s wall, peak RSS {result['peak_host_rss_mb']:.0f} MB, "
+          f"peak_warm {result['peak_warm']} (cap {result['warm_cap']})")
+    return 0
+
+
+def _spawn(args, host: int, n_hosts: int, exchange: str,
+           result: str) -> subprocess.Popen:
+    cmd = [sys.executable, __file__, "--worker", "--host", str(host),
+           "--n-hosts", str(n_hosts), "--result", result,
+           "--population", str(args.population), "--cohort",
+           str(args.cohort), "--rounds", str(args.rounds), "--warm-cap",
+           str(args.warm_cap), "--shard-size", str(args.shard_size),
+           "--dim", str(args.dim), "--min-n", str(args.min_n), "--max-n",
+           str(args.max_n), "--width", str(args.width), "--timeout",
+           str(args.timeout)]
+    if exchange:
+        cmd += ["--exchange", exchange]
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    if args.host_devices:
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                            f"{args.host_devices}")
+    env.setdefault("PYTHONPATH", str(REPO_ROOT / "src"))
+    return subprocess.Popen(cmd, env=env)
+
+
+def _collect(procs, results) -> list[dict]:
+    for p in procs:
+        if p.wait() != 0:
+            sys.exit(f"worker exited {p.returncode}")
+    out = []
+    for path in results:
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--host", type=int, default=0, help=argparse.SUPPRESS)
+    ap.add_argument("--exchange", default="", help=argparse.SUPPRESS)
+    ap.add_argument("--result", default="", help=argparse.SUPPRESS)
+    ap.add_argument("--n-hosts", type=int, default=2,
+                    help="emulated host processes for the distributed run")
+    ap.add_argument("--population", type=int, default=1_000_000)
+    ap.add_argument("--cohort", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--warm-cap", type=int, default=256,
+                    help="GLOBAL warm cap; each host keeps cap // n_hosts")
+    ap.add_argument("--shard-size", type=int, default=4096)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--min-n", type=int, default=2048)
+    ap.add_argument("--max-n", type=int, default=4096)
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--timeout", type=float, default=900.0)
+    ap.add_argument("--host-devices", type=int, default=8,
+                    help="XLA host-platform devices per worker (0 = leave "
+                         "XLA_FLAGS alone; workers then run the vmap route)")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_multihost.json"))
+    args = ap.parse_args(argv)
+
+    if args.worker:
+        return _worker(args)
+
+    with tempfile.TemporaryDirectory(prefix="repro_mh_bench_") as tmp:
+        # -- single-host baseline (fresh process: clean VmHWM) -------------
+        single_res = os.path.join(tmp, "single.json")
+        single = _collect([_spawn(args, 0, 1, "", single_res)],
+                          [single_res])[0]
+
+        # -- the distributed run: n_hosts workers, shared exchange dir -----
+        exch = os.path.join(tmp, "exchange")
+        results = [os.path.join(tmp, f"host{h}.json")
+                   for h in range(args.n_hosts)]
+        hosts = _collect(
+            [_spawn(args, h, args.n_hosts, exch, results[h])
+             for h in range(args.n_hosts)], results)
+
+    per_host_cap = max(1, args.warm_cap // args.n_hosts)
+    max_rss = max(h["peak_host_rss_mb"] for h in hosts)
+    print(f"\nsingle host: peak RSS {single['peak_host_rss_mb']:.0f} MB, "
+          f"peak_warm {single['peak_warm']} (cap {args.warm_cap})")
+    print(f"{args.n_hosts} hosts:     max peak RSS {max_rss:.0f} MB, "
+          f"peak_warm {[h['peak_warm'] for h in hosts]} "
+          f"(per-host cap {per_host_cap})")
+
+    failures = []
+    if single["peak_warm"] > args.warm_cap:
+        failures.append(f"single-host peak_warm {single['peak_warm']} "
+                        f"exceeded cap {args.warm_cap}")
+    for h in hosts:
+        # the synchronous round pins only the owned cohort slice, which
+        # the per-host cap dominates at these settings — no excursion slack
+        if h["peak_warm"] > per_host_cap:
+            failures.append(f"{h['host']} peak_warm {h['peak_warm']} "
+                            f"exceeded per-host cap {per_host_cap}")
+        if h["final_acc"] != single["final_acc"]:
+            failures.append(f"{h['host']} final_acc {h['final_acc']} != "
+                            f"single-host {single['final_acc']} — the "
+                            f"placement changed the numbers")
+    if not max_rss < single["peak_host_rss_mb"] * 0.95:
+        failures.append(f"max per-host RSS {max_rss:.0f} MB is not "
+                        f"measurably below the single-host "
+                        f"{single['peak_host_rss_mb']:.0f} MB")
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}")
+        return 1
+
+    common = {"algo": "fedavg", "executor": single["executor"], "epochs": 1,
+              "precompute": False, "population": args.population,
+              "cohort": args.cohort, "rounds": args.rounds,
+              "warm_cap": args.warm_cap}
+    payload = {
+        "task": "toy", "devices": single["devices"],
+        "backend": "cpu", "clients": args.cohort, "width": args.width,
+        "population": args.population, "n_hosts": args.n_hosts,
+        "dim": args.dim, "min_n": args.min_n, "max_n": args.max_n,
+        "cases": ([dict(common, **single)]
+                  + [dict(common, **h) for h in hosts]
+                  + [dict(common, host="max_over_hosts",
+                          peak_host_rss_mb=max_rss,
+                          peak_warm=max(h["peak_warm"] for h in hosts),
+                          rss_ratio_vs_single=round(
+                              max_rss / single["peak_host_rss_mb"], 4))]),
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -257,11 +257,17 @@ class ClientExecutor(Protocol):
     def run_round(self, ctx: RoundContext, global_params: Any, payload: Any,
                   client_states: list[Any], client_data: list[ClientData],
                   rng: np.random.Generator,
-                  client_ids: Optional[list[int]] = None) -> RoundResult:
+                  client_ids: Optional[list[int]] = None,
+                  picks: Optional[list[np.ndarray]] = None) -> RoundResult:
         """``client_ids`` (stable per-client identifiers, aligned with
         ``client_data``) unlock the cross-round teacher-logit cache for
         algorithms that expose ``precompute_parts``; ``None`` disables
-        caching but changes nothing else."""
+        caching but changes nothing else.  ``picks`` supplies pre-drawn
+        batch indices (one ``materialize_picks`` array per client, same
+        order as ``client_data``) so a caller that must keep ``rng`` in
+        lockstep across processes (multi-host placement) can draw for the
+        FULL cohort itself; ``None`` keeps the historical in-executor
+        draws."""
         ...
 
 
@@ -311,6 +317,14 @@ def materialize_client(rng: np.random.Generator, data: ClientData,
     """``materialize_picks`` plus the host-side row gather (the sequential
     and vmap executors feed the gathered batches straight to the device)."""
     sel = materialize_picks(rng, data, batch_size, epochs, max_batches)
+    return MaterializedClient(data.x[sel], data.y[sel], data.n, sel)
+
+
+def client_from_picks(data: ClientData, sel: np.ndarray) -> MaterializedClient:
+    """``materialize_client`` with the indices already drawn — the
+    multi-host round pre-draws picks for the whole cohort (rng lockstep)
+    and hands each executor only its owned slice."""
+    sel = np.asarray(sel, np.int32)
     return MaterializedClient(data.x[sel], data.y[sel], data.n, sel)
 
 
@@ -452,12 +466,15 @@ class SequentialExecutor:
         return fn
 
     def run_round(self, ctx, global_params, payload, client_states,
-                  client_data, rng, client_ids=None) -> RoundResult:
+                  client_data, rng, client_ids=None,
+                  picks=None) -> RoundResult:
         ctx.telemetry["route"] = "sequential"
         uploads, weights, losses, new_states = [], [], [], []
-        for state, cdata in zip(client_states, client_data):
-            mat = materialize_client(rng, cdata, ctx.batch_size, ctx.epochs,
-                                     ctx.max_batches)
+        for ci, (state, cdata) in enumerate(zip(client_states, client_data)):
+            mat = (client_from_picks(cdata, picks[ci])
+                   if picks is not None else
+                   materialize_client(rng, cdata, ctx.batch_size, ctx.epochs,
+                                      ctx.max_batches))
             if ctx.has_precompute:
                 # one jitted (precompute + all-steps gather) dispatch, then
                 # cheap per-step numpy views — never per-step device slicing
@@ -645,7 +662,8 @@ class VmapExecutor:
         return combine_fn(payload, jnp.asarray(parts), *full)
 
     def run_round(self, ctx, global_params, payload, client_states,
-                  client_data, rng, client_ids=None) -> RoundResult:
+                  client_data, rng, client_ids=None,
+                  picks=None) -> RoundResult:
         ctx.telemetry["route"] = "vmap"
         ctx.telemetry["round_body"] = (
             "client_batched" if ctx.batched_local_update is not None
@@ -676,8 +694,11 @@ class VmapExecutor:
                 # materializes and pads the round's batches below
                 aux_full = self._precompute_fn(ctx)(payload, *full)
 
-        mats = [materialize_client(rng, d, ctx.batch_size, ctx.epochs,
-                                   ctx.max_batches) for d in client_data]
+        mats = ([client_from_picks(d, p)
+                 for d, p in zip(client_data, picks)]
+                if picks is not None else
+                [materialize_client(rng, d, ctx.batch_size, ctx.epochs,
+                                    ctx.max_batches) for d in client_data])
         xs, ys, ex_mask, picks, step_mask = _pad_and_stack(
             mats, k_pad=k_pad, s_pad=ctx.pad_steps, b_pad=ctx.pad_batch)
         states_real = tree_stack(client_states)
@@ -741,8 +762,10 @@ class ShardMapExecutor(VmapExecutor):
         key = ("clients_mesh", ndev)
         mesh = ctx.jit_cache.get(key)
         if mesh is None:
-            from repro.launch.mesh import make_clients_mesh
-            mesh = make_clients_mesh(ndev)
+            from repro.launch.mesh import (make_clients_mesh,
+                                           make_local_clients_mesh)
+            mesh = (make_local_clients_mesh(ndev)
+                    if jax.process_count() > 1 else make_clients_mesh(ndev))
             ctx.jit_cache[key] = mesh
         return mesh
 
@@ -907,7 +930,11 @@ class ShardMapExecutor(VmapExecutor):
         mask = np.zeros((k_pad, rows), np.float32)
         for i, d in enumerate(client_data):
             mask[i, :d.n] = 1.0
-        fmask = jax.device_put(mask, sharding)
+        # process-local -> global assembly: single-process this is a
+        # device_put; in a multi-process topology every host contributes
+        # the mask rows its devices own (same shim for both)
+        from repro.sharding import make_array_from_process_local_data_compat
+        fmask = make_array_from_process_local_data_compat(sharding, mask)
         out = (fx, fy, fmask)
         if cohort_key is not None:
             cache.clear()
@@ -999,8 +1026,12 @@ class ShardMapExecutor(VmapExecutor):
 
     # -- the round ---------------------------------------------------------
     def run_round(self, ctx, global_params, payload, client_states,
-                  client_data, rng, client_ids=None) -> RoundResult:
-        ndev = len(jax.devices())
+                  client_data, rng, client_ids=None,
+                  picks=None) -> RoundResult:
+        # a multi-process topology shards each host's owned cohort slice
+        # over its LOCAL devices; single-process the two sets are equal
+        ndev = (len(jax.local_devices()) if jax.process_count() > 1
+                else len(jax.devices()))
         if ndev == 1:
             if self.strict:
                 raise RuntimeError(
@@ -1015,14 +1046,16 @@ class ShardMapExecutor(VmapExecutor):
                 "--xla_force_host_platform_device_count=N for a real mesh)")
             result = super().run_round(ctx, global_params, payload,
                                        client_states, client_data, rng,
-                                       client_ids)
+                                       client_ids, picks)
             ctx.telemetry.update(route="vmap-fallback", n_devices=1)
             return result
         return self._run_sharded(ctx, global_params, payload, client_states,
-                                 client_data, rng, client_ids, ndev)
+                                 client_data, rng, client_ids, ndev,
+                                 picks=picks)
 
     def _run_sharded(self, ctx, global_params, payload, client_states,
-                     client_data, rng, client_ids, ndev) -> RoundResult:
+                     client_data, rng, client_ids, ndev,
+                     picks=None) -> RoundResult:
         mesh = self._mesh(ctx, ndev)
         k = len(client_data)
         # fixed-slot waves: pad cohorts up to ``wave_slots`` BEFORE the
@@ -1048,9 +1081,10 @@ class ShardMapExecutor(VmapExecutor):
                 aux_full = self._sharded_precompute_fn(ctx, mesh)(payload,
                                                                   *full)
 
-        picks_list = [materialize_picks(rng, d, ctx.batch_size, ctx.epochs,
-                                        ctx.max_batches)
-                      for d in client_data]
+        picks_list = (list(picks) if picks is not None else
+                      [materialize_picks(rng, d, ctx.batch_size, ctx.epochs,
+                                         ctx.max_batches)
+                       for d in client_data])
         picks, ex_mask, step_mask = _pad_and_stack_picks(
             picks_list, k_pad, s_pad=ctx.pad_steps, b_pad=ctx.pad_batch)
         sharding = NamedSharding(mesh, P("clients"))

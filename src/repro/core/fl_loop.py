@@ -173,6 +173,7 @@ def run_federated(task: PaperTask, algo: Algorithm,
     pop = population
     if pop is not None:
         data = pop      # duck-typed: clients[cid] / test_x / sample_cohort
+    multihost = pop is not None and getattr(pop, "multihost", False)
     rounds = rounds if rounds is not None else task.rounds
     model = make_model(task, projection_head=algo.needs_projection_head,
                        width=width)
@@ -180,7 +181,10 @@ def run_federated(task: PaperTask, algo: Algorithm,
     jrng = jax.random.PRNGKey(seed)
 
     global_params = model.init(jax.random.PRNGKey(seed + 1))
-    probe_x = jnp.asarray(data.clients[0].x[:2])
+    # multi-host: probe shapes from the cold source directly — a host that
+    # does not own client 0 must not pull it into its warm tier
+    probe_x = jnp.asarray((pop.probe_client() if multihost
+                           else data.clients[0]).x[:2])
     if isinstance(algo, FedGen):
         server = algo.init_server_with_probe(global_params, model,
                                              task.num_classes, probe_x)
@@ -208,6 +212,22 @@ def run_federated(task: PaperTask, algo: Algorithm,
         batch_size=task.batch_size, epochs=task.local_epochs,
         max_batches=max_batches_per_client, precompute=bool(precompute),
         client_batched=client_batched)
+
+    if multihost:
+        if isinstance(exec_, executor_lib.AsyncExecutor):
+            raise NotImplementedError(
+                "multi-host placement does not compose with "
+                "executor='async' yet — run the async loop single-host")
+        if faults is not None or dp is not None:
+            raise NotImplementedError(
+                "multi-host placement does not compose with faults=/dp= "
+                "yet")
+        if checkpoint_dir is not None or resume:
+            raise NotImplementedError(
+                "multi-host placement does not compose with "
+                "checkpoint_dir=/resume= yet")
+        # this host's devices must never materialize an unowned slab
+        ctx.placement.owns = pop.owned
 
     if pop is not None:
         # hot tier coherence: warm evictions drop device slabs, slab-store
@@ -281,11 +301,17 @@ def run_federated(task: PaperTask, algo: Algorithm,
         payload = algo.round_payload(server, krng)
 
         cids = [int(k) for k in sampled]
-        if pop is not None:
-            # the cohort must not thrash the warm tier against itself
-            # while the round materializes / trains it
-            pop.pin(cids)
-        if injector is None:
+        if multihost:
+            # train only the owned slice, exchange uploads, aggregate the
+            # identical full-cohort update on every host
+            uploads, weights, local_losses = _multihost_round(
+                ctx, exec_, pop, server["global"], payload, client_states,
+                cids, rng, t)
+        elif injector is None:
+            if pop is not None:
+                # the cohort must not thrash the warm tier against itself
+                # while the round materializes / trains it
+                pop.pin(cids)
             result = exec_.run_round(
                 ctx, server["global"], payload,
                 [client_states[k] for k in cids],
@@ -296,6 +322,8 @@ def run_federated(task: PaperTask, algo: Algorithm,
             for k, new_state in zip(cids, result.client_states):
                 client_states[k] = new_state
         else:
+            if pop is not None:
+                pop.pin(cids)
             uploads, weights, local_losses = _fault_tolerant_round(
                 exec_, ctx, server, payload, client_states, data, rng,
                 cids, injector, policy)
@@ -308,7 +336,7 @@ def run_federated(task: PaperTask, algo: Algorithm,
                   + (f" ({tele['n_devices']} devices, cohort "
                      f"{tele['cohort']} padded to {tele['padded_to']})"
                      if "padded_to" in tele else ""))
-        if pop is not None:
+        if pop is not None and not multihost:
             pop.unpin(cids)
             ctx.telemetry["population"] = pop.stats()
 
@@ -356,6 +384,79 @@ def run_federated(task: PaperTask, algo: Algorithm,
         ctx.telemetry["faults"].update(injector.counters)
     return History(algo.name, records, server["global"], local_acc,
                    dict(ctx.telemetry))
+
+
+class _SizeOnly:
+    """``materialize_picks`` touches only ``.n`` — this stub lets every
+    host pre-draw the full cohort's batch indices from client sizes alone
+    (``client_n`` never materializes arrays), keeping the numpy stream in
+    lockstep across hosts."""
+
+    __slots__ = ("n",)
+
+    def __init__(self, n: int):
+        self.n = int(n)
+
+
+def _multihost_round(ctx, exec_, pop, global_params, payload, client_states,
+                     cids, rng, t):
+    """One synchronous round under multi-host placement.
+
+    Every host arrives here with identical ``rng``/``payload``/``cids``
+    (the sampler draws in lockstep).  Each host pre-draws batch picks for
+    the WHOLE cohort in cohort order — consuming the generator exactly as
+    the single-host executors would — then trains only the slice it owns,
+    publishes its uploads through the filesystem allgather, and rebuilds
+    the full cohort-ordered upload list from every host's payload
+    (including its own, re-read from its file, so all hosts aggregate
+    byte-identical inputs).  Per-host tier telemetry lands on
+    ``telemetry["population"]["hosts"]``, indexed by host id.
+    """
+    from repro.population import placement as placement_lib
+
+    own_idx = [i for i, c in enumerate(cids) if pop.owned(c)]
+    own_cids = [cids[i] for i in own_idx]
+    picks_all = [executor_lib.materialize_picks(
+        rng, _SizeOnly(pop.client_n(c)), ctx.batch_size, ctx.epochs,
+        ctx.max_batches) for c in cids]
+    if own_cids:
+        pop.pin(own_cids)
+        result = exec_.run_round(
+            ctx, global_params, payload,
+            [client_states[k] for k in own_cids],
+            [pop.clients[k] for k in own_cids], rng,
+            client_ids=own_cids, picks=[picks_all[i] for i in own_idx])
+        pop.unpin(own_cids)
+        for k, new_state in zip(own_cids, result.client_states):
+            client_states[k] = new_state
+        local = {"idx": own_idx, "uploads": result.uploads,
+                 "weights": [float(w) for w in result.weights],
+                 "losses": [float(v) for v in result.local_losses]}
+    else:                       # this host owns nobody this round: it still
+        local = {"idx": [], "uploads": [],  # publishes (the barrier) and
+                 "weights": [], "losses": []}  # aggregates like the rest
+    local["stats"] = dict(pop.stats(),
+                          host_rss_mb=placement_lib.peak_rss_mb(),
+                          slab=ctx.placement.stats())
+    gathered = placement_lib.allgather(pop.placement, f"round{t:06d}", local)
+    k = len(cids)
+    uploads: list = [None] * k
+    weights = [0.0] * k
+    losses = [0.0] * k
+    for host_payload in gathered:
+        for j, i in enumerate(host_payload["idx"]):
+            uploads[int(i)] = host_payload["uploads"][j]
+            weights[int(i)] = float(host_payload["weights"][j])
+            losses[int(i)] = float(host_payload["losses"][j])
+    missing = [cids[i] for i, u in enumerate(uploads) if u is None]
+    if missing:
+        raise RuntimeError(
+            f"multi-host round {t}: no host owned clients "
+            f"{missing[:5]}{'...' if len(missing) > 5 else ''} — the "
+            f"placement does not partition the cohort")
+    ctx.telemetry["population"] = dict(
+        pop.stats(), hosts=[g["stats"] for g in gathered])
+    return uploads, weights, losses
 
 
 def _fault_counters(policy) -> dict:

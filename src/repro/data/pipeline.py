@@ -155,13 +155,20 @@ class ClientSlabStore:
     slabs however many waves dispatch before their completions aggregate.
     With more pinned clients than ``max_resident`` the store temporarily
     exceeds the cap rather than evict pinned work.
+
+    Under multi-host placement (``repro.population.placement``) each
+    host's devices own only a shard subset; set ``owns`` to that
+    membership predicate and the store REFUSES to materialize a slab for
+    an unowned client — a placement bug surfaces as a loud ValueError
+    here instead of silently doubling per-host device memory.
     """
 
     def __init__(self, max_resident: Optional[int] = None,
-                 on_evict=None):
+                 on_evict=None, owns=None):
         self.slabs: "collections.OrderedDict" = collections.OrderedDict()
         self.max_resident = max_resident
         self.on_evict = on_evict        # called (cid, entry) on cap eviction
+        self.owns = owns                # optional cid -> bool ownership gate
         self.pinned: set = set()        # exempt from cap eviction
         self.host_transfers = 0
         self.device_moves = 0
@@ -175,6 +182,11 @@ class ClientSlabStore:
     def get(self, cid, data: ClientData, device) -> dict:
         import jax
 
+        if self.owns is not None and cid is not None and not self.owns(cid):
+            raise ValueError(
+                f"slab store: client {cid} is not owned by this host's "
+                f"placement — the multi-host round must slice the cohort "
+                f"to owned clients before materializing")
         entry = self.slabs.get(cid) if cid is not None else None
         if entry is not None and entry["n"] == data.n:
             self.slabs.move_to_end(cid)

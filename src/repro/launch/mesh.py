@@ -36,3 +36,19 @@ def make_clients_mesh(n: int | None = None) -> jax.sharding.Mesh:
     """
     n = len(jax.devices()) if n is None else n
     return make_mesh_compat((n,), ("clients",))
+
+
+def make_local_clients_mesh(n: int | None = None) -> jax.sharding.Mesh:
+    """``("clients",)`` mesh over THIS PROCESS's devices only.
+
+    In a multi-process topology ``jax.devices()`` is the global device
+    set; a host that trains just its owned cohort slice (population
+    multi-host placement — ``repro.population.placement``) shards that
+    slice over ``jax.local_devices()``.  Single-process, this is exactly
+    ``make_clients_mesh``.
+    """
+    import numpy as np
+
+    devs = jax.local_devices()
+    n = len(devs) if n is None else n
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("clients",))

@@ -7,6 +7,8 @@ cap instead of the population size.  See ``population.py`` for the facade
 the FL loop consumes, ``sources.py`` for the cold tier, ``store.py`` for
 the warm/state tiers, and ``sampling.py`` for the two-stage cohort draw.
 """
+from repro.population.placement import (HostPlacement, allgather,
+                                        peak_rss_mb)
 from repro.population.population import Population
 from repro.population.sampling import HierarchicalSampler, shift_positions
 from repro.population.sources import (ClientSource, DiskShardSource,
@@ -19,5 +21,5 @@ __all__ = [
     "Population", "HierarchicalSampler", "shift_positions", "ClientSource",
     "DiskShardSource", "InMemorySource", "SyntheticClientSource",
     "even_shard_sizes", "write_population_shards", "ClientStateStore",
-    "PopulationStore",
+    "PopulationStore", "HostPlacement", "allgather", "peak_rss_mb",
 ]

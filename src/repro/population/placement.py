@@ -1,0 +1,141 @@
+"""Multi-host placement for the population tier.
+
+One machine stops being the bound: with ``HostPlacement(host_id, n_hosts)``
+attached to a ``Population``, every host runs the SAME sampler draws (the
+numpy generator streams stay in lockstep — see ``fl_loop._run_multihost``)
+but materializes only the cohort slice it owns.  Ownership is by shard:
+
+    host(cid) = shard_of(cid) % n_hosts
+
+so a host's warm LRU holds only clients from its own shard subset and is
+capped at ``warm_cap // n_hosts`` — the per-host memory bound.  After the
+local slice trains, hosts exchange their uploads through a filesystem
+allgather (atomic write-to-temp + ``os.replace``, then poll — the
+``checkpoint.io`` idiom, safe because a visible file is always complete)
+and every host performs the identical server update on the full
+cohort-ordered upload list, so global state never diverges across hosts.
+
+The exchange payloads ride the self-describing ``checkpoint.recovery``
+serializer (dict/list/tuple/array/scalar nests), one ``.npz`` per
+(round, host) with the msgpack spec embedded, so uploads, weights, losses
+and telemetry all travel in a single atomic file.  Payload size is
+O(cohort slice), never O(population).
+
+This module is transport only — it does not import jax, so a coordinator
+script can construct placements before device initialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+
+from repro.checkpoint.recovery import _decode, _encode
+
+_SPEC_KEY = "__spec__"
+
+
+@dataclasses.dataclass(frozen=True)
+class HostPlacement:
+    """Which slice of the population this process owns.
+
+    Args:
+      host_id: this process's rank in ``[0, n_hosts)``.
+      n_hosts: total participating processes.  ``n_hosts == 1`` is inert —
+        every code path reduces to the single-host behavior bit-for-bit.
+      exchange_dir: shared directory for the cross-host upload exchange
+        (required when ``n_hosts > 1``; typically NFS or, for the emulated
+        2-process topology, a tmpdir both workers see).
+      timeout_s: how long to wait for a peer's round payload before
+        declaring the topology dead.
+    """
+
+    host_id: int
+    n_hosts: int
+    exchange_dir: Optional[str] = None
+    timeout_s: float = 300.0
+    poll_s: float = 0.02
+
+    def __post_init__(self):
+        if self.n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {self.n_hosts}")
+        if not (0 <= self.host_id < self.n_hosts):
+            raise ValueError(f"host_id {self.host_id} out of range "
+                             f"[0, {self.n_hosts})")
+        if self.n_hosts > 1 and not self.exchange_dir:
+            raise ValueError("n_hosts > 1 needs exchange_dir= (a directory "
+                             "every host can read and write)")
+
+    def owns_shard(self, shard: int) -> bool:
+        return shard % self.n_hosts == self.host_id
+
+    def split_cap(self, cap: Optional[int]) -> Optional[int]:
+        """A global warm cap divided into this host's share."""
+        if cap is None:
+            return None
+        return max(1, cap // self.n_hosts)
+
+
+# ---------------------------------------------------------------------------
+# filesystem allgather
+# ---------------------------------------------------------------------------
+
+def _payload_path(exchange_dir: str, tag: str, host: int) -> str:
+    return os.path.join(exchange_dir, f"{tag}_host{host:03d}.npz")
+
+
+def publish(placement: HostPlacement, tag: str, obj: Any) -> str:
+    """Write this host's payload for ``tag`` (one file, atomic)."""
+    arrays: dict[str, np.ndarray] = {}
+    spec = _encode(obj, arrays)
+    arrays[_SPEC_KEY] = np.frombuffer(msgpack.packb(spec), np.uint8)
+    path = _payload_path(placement.exchange_dir, tag, placement.host_id)
+    os.makedirs(placement.exchange_dir, exist_ok=True)
+    tmp = f"{path}.tmp{placement.host_id}"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)           # readers never see a partial file
+    return path
+
+
+def _read_payload(path: str) -> Any:
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files}
+    spec = msgpack.unpackb(arrays.pop(_SPEC_KEY).tobytes())
+    return _decode(spec, arrays)
+
+
+def allgather(placement: HostPlacement, tag: str, obj: Any) -> list:
+    """Publish ``obj`` and block until every host's ``tag`` payload lands;
+    returns the payloads indexed by host id (this host's own round-trips
+    through its file too, so every host consumes byte-identical inputs)."""
+    publish(placement, tag, obj)
+    out = []
+    deadline = time.monotonic() + placement.timeout_s
+    for h in range(placement.n_hosts):
+        path = _payload_path(placement.exchange_dir, tag, h)
+        while not os.path.exists(path):
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"multi-host exchange timed out after "
+                    f"{placement.timeout_s:.0f}s waiting for host {h} "
+                    f"({path}) — is the worker alive?")
+            time.sleep(placement.poll_s)
+        out.append(_read_payload(path))
+    return out
+
+
+def peak_rss_mb() -> float:
+    """This process's peak resident set (VmHWM), in MB."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024.0
+    except (OSError, ValueError, IndexError):
+        pass
+    return float("nan")

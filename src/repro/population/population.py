@@ -16,6 +16,7 @@ from typing import Any, Iterable, Optional
 import numpy as np
 
 from repro.core.algorithms import Algorithm
+from repro.population.placement import HostPlacement
 from repro.population.sampling import HierarchicalSampler
 from repro.population.sources import (ClientSource, InMemorySource,
                                       SyntheticClientSource)
@@ -49,12 +50,25 @@ class Population:
       state_warm_cap: same cap for MUTABLE per-client algorithm states
         (defaults to ``warm_cap``); evicted states spill to
         ``state_dir`` (a temp dir when unset) and reload on re-sample.
+      placement: multi-host ownership (``repro.population.placement``).
+        ``warm_cap``/``state_warm_cap`` are GLOBAL figures — with
+        ``n_hosts`` hosts each process keeps ``warm_cap // n_hosts``;
+        the sampler still draws over the full population on every host
+        (bit-identical streams), this host just materializes only the
+        clients whose shard it owns.  ``n_hosts == 1`` (and ``None``)
+        leave every path exactly as before.
     """
 
     def __init__(self, source: ClientSource, test_x, test_y, *,
                  warm_cap: Optional[int] = None,
                  state_warm_cap: Optional[int] = None,
-                 state_dir: Optional[str] = None):
+                 state_dir: Optional[str] = None,
+                 placement: Optional[HostPlacement] = None):
+        self.placement = placement
+        if placement is not None:
+            warm_cap = placement.split_cap(warm_cap)
+            if state_warm_cap is not None:
+                state_warm_cap = placement.split_cap(state_warm_cap)
         self.store = PopulationStore(source, warm_cap=warm_cap)
         self.sampler = HierarchicalSampler(source.shard_sizes)
         self.clients = _ClientsView(self.store)
@@ -88,6 +102,23 @@ class Population:
                       exclude: Optional[Iterable[int]] = None) -> np.ndarray:
         return self.sampler.sample(rng, k, exclude)
 
+    # -- multi-host placement ---------------------------------------------
+    @property
+    def multihost(self) -> bool:
+        return self.placement is not None and self.placement.n_hosts > 1
+
+    def owned(self, cid: int) -> bool:
+        """Does THIS host's warm/hot tier own client ``cid``?"""
+        if self.placement is None:
+            return True
+        return self.placement.owns_shard(self.sampler.shard_of(int(cid)))
+
+    def probe_client(self):
+        """Client 0's data straight from the cold source — shape probing
+        on a non-owner host must not pull an unowned client into the
+        warm tier."""
+        return self.store.source.client(0)
+
     # -- loop wiring ------------------------------------------------------
     def make_client_states(self, algo: Algorithm,
                            global_params: Any) -> ClientStateStore:
@@ -117,6 +148,9 @@ class Population:
         out = dict(self.store.stats(), n_shards=self.sampler.n_shards)
         if self.state_store is not None:
             out.update(self.state_store.stats())
+        if self.placement is not None:
+            out["host_id"] = self.placement.host_id
+            out["n_hosts"] = self.placement.n_hosts
         return out
 
     # -- constructors -----------------------------------------------------
@@ -129,9 +163,11 @@ class Population:
     @classmethod
     def synthetic(cls, n_clients: int, *, n_test: int = 256, seed: int = 0,
                   shard_size: int = 4096, warm_cap: Optional[int] = 256,
+                  placement: Optional[HostPlacement] = None,
                   **source_kw) -> "Population":
         """A seeded synthetic population (the million-client bench)."""
         src = SyntheticClientSource(n_clients, seed=seed,
                                     shard_size=shard_size, **source_kw)
         test_x, test_y = src.test_set(n_test)
-        return cls(src, test_x, test_y, warm_cap=warm_cap)
+        return cls(src, test_x, test_y, warm_cap=warm_cap,
+                   placement=placement)

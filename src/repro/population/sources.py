@@ -34,6 +34,15 @@ from repro.data.pipeline import ClientData
 _META_NAME = "population.meta"
 
 
+def _check_cid(cid: int, n_clients: int) -> None:
+    """Bounds-check a client id — every source raises the same IndexError
+    (``client(-1)`` must never wrap via Python negative indexing, and a
+    synthetic source must never mint phantom clients past the census)."""
+    if not (0 <= cid < n_clients):
+        raise IndexError(f"client id {cid} out of range "
+                         f"[0, {n_clients})")
+
+
 def even_shard_sizes(n_clients: int, shard_size: int) -> np.ndarray:
     """Contiguous shards of ``shard_size`` clients (last one partial)."""
     if n_clients <= 0 or shard_size <= 0:
@@ -74,9 +83,11 @@ class InMemorySource:
             self.n_clients, -(-self.n_clients // n_shards))
 
     def client(self, cid: int) -> ClientData:
+        _check_cid(cid, self.n_clients)
         return self.clients[cid]
 
     def client_n(self, cid: int) -> int:
+        _check_cid(cid, self.n_clients)
         return self.clients[cid].n
 
     def max_client_n(self) -> int:
@@ -123,6 +134,7 @@ class SyntheticClientSource:
     def client_n(self, cid: int) -> int:
         # the size is the client stream's FIRST draw, so it is knowable
         # without generating the feature arrays
+        _check_cid(cid, self.n_clients)
         return int(self._rng(cid).integers(self.min_n, self.max_n + 1))
 
     def max_client_n(self) -> int:
@@ -131,6 +143,7 @@ class SyntheticClientSource:
         return self.max_n
 
     def client(self, cid: int) -> ClientData:
+        _check_cid(cid, self.n_clients)
         rng = self._rng(cid)
         n = int(rng.integers(self.min_n, self.max_n + 1))
         labels = rng.integers(0, self.num_classes, size=n)
@@ -260,9 +273,7 @@ class DiskShardSource:
         return handle
 
     def _locate(self, cid: int) -> tuple[int, int]:
-        if not (0 <= cid < self.n_clients):
-            raise IndexError(f"client id {cid} out of range "
-                             f"[0, {self.n_clients})")
+        _check_cid(cid, self.n_clients)
         s = int(np.searchsorted(self.starts, cid, side="right") - 1)
         return s, cid - int(self.starts[s])
 
@@ -273,10 +284,12 @@ class DiskShardSource:
 
     def max_client_n(self) -> int:
         """Largest client from the per-shard offset tables alone — the
-        offset files are tiny; shard payload bytes stay cold."""
+        offset vectors are tiny and the x/y maps are lazy, so shard
+        payload bytes stay cold.  Goes through ``_shard`` so the handle
+        LRU stays authoritative and ``shard_opens`` counts these opens."""
         best = 0
         for s in range(len(self.shard_sizes)):
-            off = np.load(_shard_paths(self.root, s)[2])
+            off = self._shard(s)[2]
             best = max(best, int(np.max(np.diff(off))))
         return best
 

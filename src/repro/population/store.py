@@ -74,12 +74,19 @@ class PopulationStore:
     def attach_hot(self, slab_store) -> None:
         """Couple the device tier: warm evictions drop the client's slab,
         slab-store LRU evictions count into this store's telemetry, and
-        the pinned set is shared by reference."""
+        the pinned set is shared by reference.  Pins made on the slab
+        store BEFORE attach merge into the shared set (never dropped),
+        and a pre-existing ``on_evict`` callback is chained, not
+        clobbered."""
         self.hot = slab_store
+        self.pinned.update(slab_store.pinned)
         slab_store.pinned = self.pinned
+        prior = slab_store.on_evict
 
         def on_evict(cid, entry):
             self.hot_evictions += 1
+            if prior is not None:
+                prior(cid, entry)
 
         slab_store.on_evict = on_evict
 
@@ -106,8 +113,15 @@ class PopulationStore:
         return data
 
     def client_n(self, cid: int) -> int:
-        data = self.warm.get(int(cid))
-        return data.n if data is not None else self.source.client_n(int(cid))
+        cid = int(cid)
+        data = self.warm.get(cid)
+        if data is not None:
+            # a size read is a use: refresh recency and count the hit,
+            # exactly like get(), so eviction order and telemetry agree
+            self.warm.move_to_end(cid)
+            self.warm_hits += 1
+            return data.n
+        return self.source.client_n(cid)
 
     def pin(self, cids: Iterable[int]) -> None:
         self.pinned.update(int(c) for c in cids)
@@ -216,8 +230,21 @@ class ClientStateStore:
         states re-derive from ``init_fn``)."""
         snap: dict = {"kind": "state_store", "mutable": self.mutable}
         if self.mutable:
+            import jax
+            import numpy as np
+
+            def _copy_leaf(leaf):
+                # np leaves are mutable: copy them; jax arrays are
+                # immutable so the reference IS a value
+                if isinstance(leaf, np.ndarray):
+                    return np.array(leaf, copy=True)
+                return leaf
+
             snap["warm_cids"] = [int(c) for c in self.warm]
-            snap["warm_states"] = list(self.warm.values())
+            # tree_map rebuilds the containers too, so a state dict
+            # mutated after snapshot cannot tear the checkpoint payload
+            snap["warm_states"] = [jax.tree_util.tree_map(_copy_leaf, s)
+                                   for s in self.warm.values()]
             snap["spilled"] = sorted(int(c) for c in self.spilled)
             snap["spill_dir"] = self.spill_dir
         return snap

@@ -60,6 +60,36 @@ def make_mesh_compat(shape: tuple[int, ...], axis_names: tuple[str, ...]) -> Mes
     return Mesh(devs, axis_names)
 
 
+def make_array_from_process_local_data_compat(sharding: NamedSharding,
+                                              local_data,
+                                              global_shape: "tuple | None"
+                                              = None):
+    """``jax.make_array_from_process_local_data`` across jax versions.
+
+    The multi-process cohort-assembly primitive: each host contributes the
+    slice its devices own and jax stitches the global sharded array.  The
+    public API appeared in jax 0.4.31 (the ``global_shape`` parameter
+    became optional later); on releases without it — or without
+    multi-process support at all — a single-process topology falls back to
+    ``jax.device_put`` onto the sharding, which is exactly what the
+    primitive degenerates to when every shard is process-local.  Lives
+    next to ``make_mesh_compat`` so a jax bump has one seam to patch.
+    """
+    fn = getattr(jax, "make_array_from_process_local_data", None)
+    if fn is not None:
+        try:
+            return fn(sharding, local_data, global_shape)
+        except TypeError:       # pre-0.4.35 signature: no global_shape arg
+            if global_shape is not None:
+                raise
+            return fn(sharding, local_data)
+    if jax.process_count() != 1:
+        raise RuntimeError(
+            "this jax release has no make_array_from_process_local_data "
+            "but the topology is multi-process — upgrade jax (>= 0.4.31)")
+    return jax.device_put(local_data, sharding)
+
+
 def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
     """``shard_map`` across jax versions.
 

@@ -216,6 +216,54 @@ def test_disk_shard_source_requires_meta(tmp_path):
         DiskShardSource(str(tmp_path / "nowhere"))
 
 
+def _make_source(kind: str, tmp_path):
+    if kind == "in_memory":
+        gen = SyntheticTabularTask(3, dim=4, seed=0)
+        return InMemorySource([ClientData(*gen.generate(6, seed=i))
+                               for i in range(12)])
+    if kind == "synthetic":
+        return SyntheticClientSource(12, seed=0, shard_size=4,
+                                     min_n=3, max_n=6)
+    src = SyntheticClientSource(12, seed=0, shard_size=4, min_n=3, max_n=6)
+    write_population_shards(str(tmp_path),
+                            (src.client(i) for i in range(12)), shard_size=4)
+    return DiskShardSource(str(tmp_path))
+
+
+@pytest.mark.parametrize("kind", ["in_memory", "synthetic", "disk"])
+def test_sources_reject_out_of_range_client_ids(kind, tmp_path):
+    """Satellite regression: ``client(-1)`` must never wrap via negative
+    indexing and a source must never mint phantom clients past the
+    census — every source raises the same IndexError ``_locate`` does."""
+    src = _make_source(kind, tmp_path)
+    assert src.n_clients == 12
+    for bad in (-1, 12, 10_000):
+        with pytest.raises(IndexError, match="out of range"):
+            src.client(bad)
+        with pytest.raises(IndexError, match="out of range"):
+            src.client_n(bad)
+    # the boundary ids still work
+    assert src.client(0).n == src.client_n(0)
+    assert src.client(11).n == src.client_n(11)
+
+
+def test_disk_max_client_n_goes_through_handle_lru(tmp_path):
+    """Satellite regression: ``max_client_n`` must open offset tables
+    through the ``_shard`` handle LRU — bounded descriptors, counted
+    opens — not ad-hoc ``np.load`` calls outside the cache."""
+    src = SyntheticClientSource(20, seed=1, shard_size=4, min_n=3, max_n=9)
+    write_population_shards(str(tmp_path),
+                            (src.client(i) for i in range(20)), shard_size=4)
+    disk = DiskShardSource(str(tmp_path), max_open=2)
+    assert disk.shard_opens == 0
+    want = max(src.client(i).n for i in range(20))
+    assert disk.max_client_n() == want
+    assert disk.shard_opens == 5            # every shard's open is counted
+    assert len(disk._open) <= 2             # ...and the LRU stayed bounded
+    disk.max_client_n()                     # resident shards hit the cache
+    assert disk.shard_opens >= 5
+
+
 # --------------------------------------------------------------------------
 # warm tier + pinning
 # --------------------------------------------------------------------------
@@ -277,6 +325,64 @@ def test_warm_eviction_drops_hot_slab():
     # hot pinned set is shared by reference with the population store
     store.pin([2])
     assert 2 in hot.pinned
+
+
+def test_attach_hot_chains_prior_on_evict_and_merges_pins():
+    """Satellite regression: attaching the population tier to a slab
+    store that already carries an ``on_evict`` observer and pins must
+    CHAIN the callback (both fire) and MERGE the pinned ids — the old
+    behavior silently clobbered both."""
+    src = SyntheticClientSource(20, seed=0, shard_size=8, min_n=3, max_n=6)
+    store = PopulationStore(src, warm_cap=16)
+    seen = []
+    hot = ClientSlabStore(max_resident=2,
+                          on_evict=lambda cid, entry: seen.append(cid))
+    hot.pinned.add(0)                        # pinned BEFORE attach
+    store.attach_hot(hot)
+    assert 0 in store.pinned and hot.pinned is store.pinned
+    dev = jax.devices()[0]
+    for cid in range(4):
+        hot.get(cid, store.get(cid), dev)
+    # cap 2, cid 0 pinned ⇒ 1 and 2 cap-evict; the prior observer saw
+    # them AND the population telemetry counted them
+    assert seen == [1, 2]
+    assert store.hot_evictions == 2
+    assert 0 in hot.slabs
+
+
+def test_attach_hot_order_does_not_lose_pins():
+    """Pin survival is symmetric in attach order: population-side pins
+    made before attach reach the slab store through the shared set."""
+    src = SyntheticClientSource(10, seed=0, shard_size=4, min_n=3, max_n=6)
+    store = PopulationStore(src, warm_cap=8)
+    store.pin([3])
+    hot = ClientSlabStore(max_resident=1)
+    store.attach_hot(hot)
+    assert 3 in hot.pinned
+    dev = jax.devices()[0]
+    hot.get(3, store.get(3), dev)
+    for cid in (4, 5):
+        hot.get(cid, store.get(cid), dev)
+    assert 3 in hot.slabs                    # never cap-evicted
+
+
+def test_client_n_warm_hit_counts_and_refreshes_lru():
+    """Satellite regression: a ``client_n`` size read against a warm
+    client is a USE — it ticks ``warm_hits`` and refreshes recency so
+    eviction order and telemetry agree with ``get()``."""
+    src = SyntheticClientSource(10, seed=0, shard_size=4, min_n=3, max_n=6)
+    store = PopulationStore(src, warm_cap=2)
+    store.get(0)
+    store.get(1)                             # LRU order: 0, 1
+    assert store.warm_hits == 0
+    assert store.client_n(0) == src.client_n(0)
+    assert store.warm_hits == 1              # warm size read counted
+    store.get(2)                             # cap 2 ⇒ evicts LRU: now 1
+    assert 0 in store.warm and 1 not in store.warm
+    # a cold size read touches the source only — no warm pollution
+    n = store.client_n(7)
+    assert n == src.client_n(7)
+    assert 7 not in store.warm and store.warm_hits == 1
 
 
 # --------------------------------------------------------------------------
@@ -428,6 +534,28 @@ def test_state_store_corrupt_spill_reinits_with_warning(tmp_path, caplog):
     assert float(states[0]["w"][0]) == 0.0
 
 
+def test_state_store_snapshot_is_by_value(tmp_path):
+    """Satellite regression: ``snapshot()`` must capture warm states by
+    VALUE.  A client trained AFTER the checkpoint was cut mutates its
+    (numpy-leafed) state in place; resume must see the checkpoint-time
+    value, not the later one."""
+    def init(cid):
+        return {"prev": {"w": np.zeros((3,), np.float32)}, "step": 0}
+
+    states = ClientStateStore(init, mutable=True, warm_cap=8,
+                              spill_dir=str(tmp_path))
+    live = {"prev": {"w": np.full((3,), 5.0, np.float32)}, "step": 4}
+    states[0] = live
+    snap = states.snapshot()
+    # round t+1 trains client 0 further, mutating leaves AND containers
+    live["prev"]["w"][:] = 99.0
+    live["step"] = 5
+    restored = ClientStateStore(init, mutable=True, warm_cap=8,
+                                spill_dir=str(tmp_path))
+    restored.restore(snap)
+    got = restored[0]
+    assert float(got["prev"]["w"][0]) == 5.0 and got["step"] == 4
+    assert restored.state_hits == 1          # warm on arrival, no reload
 # --------------------------------------------------------------------------
 # run_federated(population=): equivalence + seed sequences
 # --------------------------------------------------------------------------
