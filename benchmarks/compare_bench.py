@@ -18,7 +18,13 @@ both artifacts with the shared ``cases`` schema:
   * ``BENCH_multihost.json`` — LOWER-is-better per-host resource metrics
     from the 2-process placement run (one case per host, keyed by the
     ``host`` field): ``peak_host_rss_mb`` and ``peak_warm`` — the
-    sharded warm tiers must keep holding ``warm_cap // n_hosts``;
+    sharded warm tiers must keep holding ``warm_cap // n_hosts`` — plus
+    the chaos cases: ``async_client_updates_per_sec`` (higher-better —
+    aggregated client updates per wall-second while the 2-host async run
+    degrades through correlated host crashes and recovers) and
+    ``host_crash_recovery_rounds`` (LOWER-is-better — rounds replayed
+    past the agreed restore point after a mid-run host kill + coordinated
+    resume);
   * ``BENCH_faults.json`` — LOWER-is-better fault-tolerance metrics:
     ``acc_drop_at_20pct_crash`` (accuracy lost at the heaviest fault cell
     vs fault-free) and ``overhead_ratio`` (retry re-dispatches per
@@ -50,13 +56,14 @@ import json
 
 METRICS = ("speedup_vs_sequential", "speedup_vs_no_precompute",
            "sim_speedup_vs_sync", "speedup_vs_naive_vmap",
-           "client_updates_per_sec", "pipeline_speedup")
+           "client_updates_per_sec", "pipeline_speedup",
+           "async_client_updates_per_sec")
 # resource costs: regression direction is inverted (new may not EXCEED
 # baseline * (1 + tolerance)) — an RSS or latency DROP is never a failure
 METRICS_LOWER = ("peak_host_rss_mb", "sample_latency_ms",
                  "sample_ratio_1m_vs_10k", "acc_drop_at_20pct_crash",
                  "overhead_ratio", "compile_count", "peak_warm",
-                 "rss_ratio_vs_single")
+                 "rss_ratio_vs_single", "host_crash_recovery_rounds")
 
 
 def case_key(row: dict) -> tuple:

@@ -107,14 +107,25 @@ def restore_rng(rng: np.random.Generator, state: dict) -> None:
     rng.bit_generator.state = state
 
 
+def _state_prefix(host: "int | None" = None) -> str:
+    """The state-file prefix: ``state`` single-host (unchanged on disk),
+    ``state_hostNNN`` for one rank of a multi-host run — each host owns
+    its warm/state tier snapshot, in the same directory, and
+    ``io.latest_loadable``'s anchored ``prefix_(\\d+).npz`` pattern keeps
+    the two namespaces from ever matching each other."""
+    return "state" if host is None else f"state_host{host:03d}"
+
+
 def save_run_state(ckpt_dir: str, rnd: int, state: dict,
-                   meta: dict | None = None) -> str:
+                   meta: dict | None = None,
+                   host: "int | None" = None) -> str:
     """Persist one round's full run state as ``state_NNNNNN.npz`` +
-    ``.meta``.  ``state`` is an arbitrary nesting of dict / list / tuple /
-    arrays / scalars / ``ModelBuffer`` — see the module docstring."""
+    ``.meta`` (``state_hostNNN_NNNNNN.npz`` when ``host`` is given).
+    ``state`` is an arbitrary nesting of dict / list / tuple / arrays /
+    scalars / ``ModelBuffer`` — see the module docstring."""
     arrays: dict[str, np.ndarray] = {}
     spec = _encode(state, arrays)
-    path = os.path.join(ckpt_dir, f"state_{rnd:06d}.npz")
+    path = os.path.join(ckpt_dir, f"{_state_prefix(host)}_{rnd:06d}.npz")
     # zero arrays (an all-scalar state) still writes a valid empty npz
     io.save_pytree(path, arrays, meta={"round": rnd, "spec": spec,
                                        **(meta or {})})
@@ -129,14 +140,32 @@ def load_run_state(path: str) -> tuple[dict, dict]:
     return _decode(meta["spec"], arrays), meta
 
 
-def load_latest_state(ckpt_dir: str) -> "tuple[dict, dict, int] | None":
+def load_latest_state(ckpt_dir: str,
+                      host: "int | None" = None
+                      ) -> "tuple[dict, dict, int] | None":
     """Resume data from the newest LOADABLE state file: ``(state, meta,
     round)``, or ``None`` when the directory holds no state files yet (a
     fresh run).  Unreadable files are skipped newest-first exactly like
     ``io.load_latest``; all-corrupt raises rather than silently
     restarting from scratch."""
-    hit = io.latest_loadable(ckpt_dir, "state", load_run_state)
+    hit = io.latest_loadable(ckpt_dir, _state_prefix(host), load_run_state)
     if hit is None:
         return None
     (state, meta), rnd = hit
     return state, meta, rnd
+
+
+def load_state_at(ckpt_dir: str, rnd: int,
+                  host: "int | None" = None) -> tuple[dict, dict]:
+    """``(state, meta)`` for the EXACT round ``rnd`` — the coordinated
+    multi-host resume restores the agreed common round, which may be older
+    than this host's newest file (a peer died before checkpointing it).
+    Raises ``FileNotFoundError`` / ``io.CORRUPT_ERRORS`` rather than
+    falling back: the barrier already validated the round exists on every
+    host, so a miss here is real corruption."""
+    path = os.path.join(ckpt_dir, f"{_state_prefix(host)}_{rnd:06d}.npz")
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"coordinated resume: {path} missing — host agreed to restore "
+            f"round {rnd} but has no state file for it")
+    return load_run_state(path)

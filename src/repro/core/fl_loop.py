@@ -214,18 +214,9 @@ def run_federated(task: PaperTask, algo: Algorithm,
         client_batched=client_batched)
 
     if multihost:
-        if isinstance(exec_, executor_lib.AsyncExecutor):
+        if dp is not None:
             raise NotImplementedError(
-                "multi-host placement does not compose with "
-                "executor='async' yet — run the async loop single-host")
-        if faults is not None or dp is not None:
-            raise NotImplementedError(
-                "multi-host placement does not compose with faults=/dp= "
-                "yet")
-        if checkpoint_dir is not None or resume:
-            raise NotImplementedError(
-                "multi-host placement does not compose with "
-                "checkpoint_dir=/resume= yet")
+                "multi-host placement does not compose with dp= yet")
         # this host's devices must never materialize an unowned slab
         ctx.placement.owns = pop.owned
 
@@ -271,11 +262,27 @@ def run_federated(task: PaperTask, algo: Algorithm,
     records: list[RoundRecord] = []
     local_acc = 0.0
     uploads: list[dict] = []
+    ckpt_host = pop.placement.host_id if multihost else None
+    dead_hosts: set = set()     # peers that missed an exchange deadline
 
     start_round = 0
     if resume:
         from repro.checkpoint import recovery
-        hit = recovery.load_latest_state(checkpoint_dir)
+        hit = recovery.load_latest_state(checkpoint_dir, host=ckpt_host)
+        if multihost:
+            # coordinated resume: agree on the newest round EVERY host can
+            # load (min over hosts — a host that checkpointed further
+            # ahead still has the earlier file), restore it, retire this
+            # host's stale wave/round exchange files, then confirm all
+            # hosts restored the same state before the first round
+            from repro.population import placement as placement_lib
+            common = placement_lib.resume_barrier(
+                pop.placement, hit[2] if hit is not None else None)
+            if common is None:
+                hit = None
+            elif hit is None or hit[2] != common:
+                hit = (*recovery.load_state_at(checkpoint_dir, common,
+                                               host=ckpt_host), common)
         if hit is not None:
             state, meta, start_round = hit
             if meta.get("algo") not in (None, algo.name):
@@ -293,6 +300,12 @@ def run_federated(task: PaperTask, algo: Algorithm,
                     ctx.telemetry["faults"].update(state["fault_telemetry"])
             records = [RoundRecord(**d) for d in state["records"]]
             _restore_client_states(client_states, state["client_states"])
+        if multihost:
+            placement_lib.clear_host_payloads(pop.placement)
+            placement_lib.confirm_resume(
+                pop.placement, None if hit is None else start_round,
+                {"round": None if hit is None else start_round,
+                 "algo": algo.name})
 
     for t in range(start_round, rounds):
         t0 = time.time()
@@ -301,7 +314,15 @@ def run_federated(task: PaperTask, algo: Algorithm,
         payload = algo.round_payload(server, krng)
 
         cids = [int(k) for k in sampled]
-        if multihost:
+        if multihost and injector is not None:
+            # placement-aware fault tolerance: a crashed/deadline-missing
+            # HOST is a correlated fault over its whole owned slice;
+            # quorum counts surviving hosts' validated uploads and retry
+            # re-dispatches the absent slice through the exchange
+            uploads, weights, local_losses = _multihost_fault_round(
+                exec_, ctx, pop, server, payload, client_states, rng,
+                cids, injector, policy, t, dead_hosts)
+        elif multihost:
             # train only the owned slice, exchange uploads, aggregate the
             # identical full-cohort update on every host
             uploads, weights, local_losses = _multihost_round(
@@ -369,7 +390,8 @@ def run_federated(task: PaperTask, algo: Algorithm,
                 (t + 1) % checkpoint_every == 0 or t == rounds - 1):
             _save_checkpoint(checkpoint_dir, t + 1, algo, server, jrng, rng,
                              injector, records, client_states, data.n_clients,
-                             ftel=ctx.telemetry.get("faults"))
+                             ftel=ctx.telemetry.get("faults"),
+                             host=ckpt_host)
         if round_callback is not None:
             round_callback(t + 1, server, model)
         if verbose:
@@ -437,7 +459,8 @@ def _multihost_round(ctx, exec_, pop, global_params, payload, client_states,
                  "weights": [], "losses": []}  # aggregates like the rest
     local["stats"] = dict(pop.stats(),
                           host_rss_mb=placement_lib.peak_rss_mb(),
-                          slab=ctx.placement.stats())
+                          slab=ctx.placement.stats(),
+                          exchange=dict(pop.placement.stats))
     gathered = placement_lib.allgather(pop.placement, f"round{t:06d}", local)
     k = len(cids)
     uploads: list = [None] * k
@@ -466,7 +489,10 @@ def _fault_counters(policy) -> dict:
             "rejected_nonfinite": 0, "rejected_norm": 0,
             "retries": 0, "redispatches": 0, "backoff_wait": 0.0,
             "quorum_shortfalls": 0, "skipped_rounds": 0,
-            "dropped_clients": 0, "quorum_frac": policy.quorum_frac}
+            "dropped_clients": 0, "quorum_frac": policy.quorum_frac,
+            # multi-host placement: injected host crashes (from the
+            # injector counters) and real exchange-deadline misses
+            "host_crashes": 0, "host_timeouts": 0}
 
 
 def _fault_tolerant_round(exec_, ctx, server, payload, client_states, data,
@@ -544,6 +570,248 @@ def _fault_tolerant_round(exec_, ctx, server, payload, client_states, data,
     return uploads, weights, losses
 
 
+def _exchange_wave(pop, tag, local, injector, dead_hosts, ftel):
+    """Allgather one wave/attempt payload across the placement.
+
+    With fault injection on, a peer missing the deadline degrades to the
+    ``missing`` set instead of raising (crash-stop: a dead host never
+    publishes, so every survivor resolves the same set) and is never
+    polled for again (``dead_hosts`` accumulates across waves); without
+    an injector the exchange stays strict — a dead peer is a hard error,
+    not a fault to tolerate."""
+    from repro.population import placement as placement_lib
+
+    pl = pop.placement
+    if injector is None:
+        return placement_lib.allgather(pl, tag, local), ()
+    gathered, missing = placement_lib.allgather_partial(
+        pl, tag, local, skip_wait=dead_hosts)
+    new = [h for h in missing if h not in dead_hosts]
+    if new:
+        ftel["host_timeouts"] += len(new)
+        dead_hosts.update(new)
+    return gathered, missing
+
+
+def _multihost_fault_round(exec_, ctx, pop, server, payload, client_states,
+                           rng, cids, injector, policy, t, dead_hosts):
+    """One synchronous fault-tolerant round under multi-host placement.
+
+    Mirrors ``_fault_tolerant_round`` with the fault model made
+    placement-aware: every host replicates the full fault/pick draws (the
+    streams stay in lockstep), trains only the alive slice it owns, and
+    exchanges the slice results per attempt (tag ``roundTTTTTTaAA``).  A
+    crashed HOST — injected via ``FaultProfile.host_crash_prob`` (drawn
+    per attempt, one uniform per host in host order) or a real peer
+    missing the allgather deadline — is a correlated fault over its
+    entire owned slice: those clients fail as a block, quorum counts only
+    surviving hosts' validated uploads, and the retry loop re-dispatches
+    the absent slice with the usual capped backoff.  Uploads travel CLEAN
+    through the exchange with the fault draw replayed on every host:
+    ``corrupt_params`` is pure and ``validate_update`` deterministic, so
+    survivors accept and reject the very same updates.  With
+    ``host_crash_prob == 0`` and no deadline misses this is bit-identical
+    to the single-host ``_fault_tolerant_round`` on the same seed.
+    """
+    from repro.core import systemsim
+    from repro.core.server import validate_update
+    from repro.population import placement as placement_lib
+
+    pl = pop.placement
+    ftel = ctx.telemetry["faults"]
+    quorum = max(1, int(np.ceil(policy.quorum_frac * len(cids))))
+    uploads: list = []
+    weights: list = []
+    losses: list = []
+    state_commits: dict = {}
+    host_stats = None
+    pending = list(cids)
+    attempt = 0
+    while pending:
+        crashed = ()
+        if injector.profile.host_crash_prob > 0.0:
+            crashed = injector.draw_host_crashes(pl.n_hosts)
+        drawn = [(k, injector.draw()) for k in pending]
+        failed = [k for k, f in drawn
+                  if f is not None and f[0] in ("crash", "timeout")]
+        alive = [(k, f) for k, f in drawn
+                 if f is None or f[0] == "corrupt"]
+        alive_ids = [k for k, _ in alive]
+        # every host consumes the main stream exactly like the single-host
+        # run_round would: full alive-order batch picks from sizes alone
+        picks = [executor_lib.materialize_picks(
+            rng, _SizeOnly(pop.client_n(k)), ctx.batch_size, ctx.epochs,
+            ctx.max_batches) for k in alive_ids]
+        own = [(j, k) for j, k in enumerate(alive_ids) if pop.owned(k)]
+        local: dict = {"idx": [], "uploads": [], "weights": [],
+                       "losses": [], "crashed": pl.host_id in crashed}
+        new_states: dict = {}
+        if own and not local["crashed"]:
+            ids = [k for _, k in own]
+            pop.pin(ids)
+            result = exec_.run_round(
+                ctx, server["global"], payload,
+                [client_states[k] for k in ids],
+                [pop.clients[k] for k in ids], rng, client_ids=ids,
+                picks=[picks[j] for j, _ in own])
+            pop.unpin(ids)
+            new_states = dict(zip(ids, result.client_states))
+            local.update(idx=[j for j, _ in own], uploads=result.uploads,
+                         weights=[float(w) for w in result.weights],
+                         losses=[float(v) for v in result.local_losses])
+        local["stats"] = dict(pop.stats(),
+                              host_rss_mb=placement_lib.peak_rss_mb(),
+                              slab=ctx.placement.stats(),
+                              exchange=dict(pl.stats))
+        gathered, _ = _exchange_wave(
+            pop, f"round{t:06d}a{attempt:02d}", local, injector,
+            dead_hosts, ftel)
+        host_stats = [g["stats"] if g is not None else None
+                      for g in gathered]
+        got = {}
+        for g in gathered:
+            if g is None or g["crashed"]:
+                continue
+            for jj, j in enumerate(g["idx"]):
+                got[int(j)] = (g["uploads"][jj], float(g["weights"][jj]),
+                               float(g["losses"][jj]))
+        for j, (k, f) in enumerate(alive):
+            hit = got.get(j)
+            if hit is None:
+                owner = pop.sampler.shard_of(int(k)) % pl.n_hosts
+                g = gathered[owner]
+                if owner in crashed or g is None or g["crashed"]:
+                    failed.append(k)        # correlated host fault
+                    continue
+                raise RuntimeError(
+                    f"multi-host fault round {t}: live host {owner} "
+                    f"published no upload for client {k} — the placement "
+                    f"does not partition the cohort")
+            up, w, lv = hit
+            if f is not None:
+                up = dict(up, params=systemsim.corrupt_params(
+                    up["params"], f[1], injector.profile.huge_scale))
+            ok, reason = validate_update(
+                up["params"], server["global"],
+                max_norm_mult=policy.max_norm_mult)
+            if ok:
+                uploads.append(up)
+                weights.append(w)
+                losses.append(lv)
+                if k in new_states:
+                    state_commits[k] = new_states[k]
+            else:
+                ftel["rejected_nonfinite" if reason.startswith("nonfinite")
+                     else "rejected_norm"] += 1
+                failed.append(k)
+        if len(uploads) >= quorum or not failed \
+                or attempt >= policy.max_retries:
+            break
+        attempt += 1
+        ftel["retries"] += 1
+        ftel["redispatches"] += len(failed)
+        ftel["backoff_wait"] += policy.backoff(attempt)
+        pending = failed
+    if len(uploads) < quorum:
+        ftel["quorum_shortfalls"] += 1
+    for k, s in state_commits.items():
+        client_states[k] = s
+    ctx.telemetry["population"] = dict(pop.stats(), hosts=host_stats)
+    return uploads, weights, losses
+
+
+def _multihost_wave(ctx, inner, pop, global_params, payload, client_states,
+                    cids, rng, tag, slots, injector, dead_hosts, ftel):
+    """One async dispatch wave under multi-host placement.
+
+    Every host replicates the whole simulation — sampling, the event
+    heap, aggregation, server updates — and this function keeps only the
+    TRAINING partitioned: each host pre-draws the FULL wave's batch picks
+    (main-stream lockstep), draws the wave's host-crash faults (one
+    uniform per host in host order, only when ``host_crash_prob > 0``),
+    trains the owned slice it is alive for (in fixed-slot chunks so the
+    one compiled body serves every wave), publishes the slice under the
+    per-wave exchange ``tag``, and reassembles the full wave.  The
+    returned per-client ``(upload, weight, loss, fault)`` list is
+    byte-identical on every host (each host re-reads its own payload from
+    its exchange file), so the ``SystemSim`` heaps — and therefore the
+    virtual clock, pops, redispatches and aggregations — stay in lockstep
+    with no further coordination.  A host that crashed (injected) or
+    missed the exchange deadline (real death, crash-stop) contributes a
+    correlated ``("host_crash", "")`` fault over its whole slice: those
+    dispatches still occupy the heap with a ``None`` upload and fall to
+    the dead path at buffer fill, where the usual retry/backoff machinery
+    re-dispatches them.
+    """
+    from repro.population import placement as placement_lib
+
+    pl = pop.placement
+    crashed = ()
+    if injector is not None and injector.profile.host_crash_prob > 0.0:
+        crashed = injector.draw_host_crashes(pl.n_hosts)
+    picks = [executor_lib.materialize_picks(
+        rng, _SizeOnly(pop.client_n(c)), ctx.batch_size, ctx.epochs,
+        ctx.max_batches) for c in cids]
+    own = [(i, c) for i, c in enumerate(cids) if pop.owned(c)]
+    local: dict = {"idx": [], "uploads": [], "weights": [], "losses": [],
+                   "crashed": pl.host_id in crashed}
+    new_states: dict = {}
+    if own and not local["crashed"]:
+        pop.pin([c for _, c in own])
+        groups = ([own[i:i + slots] for i in range(0, len(own), slots)]
+                  if slots is not None else [own])
+        for group in groups:
+            ids = [c for _, c in group]
+            result = inner.run_round(
+                ctx, global_params, payload,
+                [client_states[k] for k in ids],
+                [pop.clients[k] for k in ids], rng, client_ids=ids,
+                picks=[picks[i] for i, _ in group])
+            new_states.update(zip(ids, result.client_states))
+            local["idx"].extend(i for i, _ in group)
+            local["uploads"].extend(result.uploads)
+            local["weights"].extend(float(w) for w in result.weights)
+            local["losses"].extend(float(v) for v in result.local_losses)
+    local["stats"] = dict(pop.stats(),
+                          host_rss_mb=placement_lib.peak_rss_mb(),
+                          slab=ctx.placement.stats(),
+                          exchange=dict(pl.stats))
+    gathered, _ = _exchange_wave(pop, tag, local, injector, dead_hosts,
+                                 ftel)
+    # per-client fault draws AFTER training, in wave order — the same
+    # fault-stream consumption as the single-host launch path
+    per_fault = [injector.draw() if injector is not None else None
+                 for _ in cids]
+    got = {}
+    for g in gathered:
+        if g is None or g["crashed"]:
+            continue
+        for jj, i in enumerate(g["idx"]):
+            got[int(i)] = (g["uploads"][jj], float(g["weights"][jj]),
+                           float(g["losses"][jj]))
+    out = []
+    for i, c in enumerate(cids):
+        hit = got.get(i)
+        if hit is None:
+            owner = pop.sampler.shard_of(int(c)) % pl.n_hosts
+            g = gathered[owner]
+            if owner in crashed or g is None or g["crashed"]:
+                out.append((None, 0.0, 0.0, ("host_crash", "")))
+                continue
+            raise RuntimeError(
+                f"multi-host wave {tag}: live host {owner} published no "
+                f"upload for client {c} — the placement does not "
+                f"partition the wave")
+        up, w, lv = hit
+        fault = per_fault[i]
+        if fault is None and c in new_states:
+            # healthy dispatch: commit the owned client's local state
+            client_states[c] = new_states[c]
+        out.append((up, w, lv, fault))
+    host_stats = [g["stats"] if g is not None else None for g in gathered]
+    return out, host_stats
+
+
 def _max_client_n(data) -> int:
     """Largest client example count in the population — the shape bound
     fixed-slot waves pin the compiled round body to.  Population facades
@@ -581,7 +849,7 @@ def _restore_client_states(client_states, saved):
 
 def _save_checkpoint(ckpt_dir, rnd, algo, server, jrng, rng, injector,
                      records, client_states, n_clients, ftel=None,
-                     extra=None):
+                     extra=None, host=None):
     from repro.checkpoint import recovery
     state = {
         "server": server,
@@ -599,7 +867,8 @@ def _save_checkpoint(ckpt_dir, rnd, algo, server, jrng, rng, injector,
     }
     if extra:
         state.update(extra)
-    recovery.save_run_state(ckpt_dir, rnd, state, meta={"algo": algo.name})
+    recovery.save_run_state(ckpt_dir, rnd, state, meta={"algo": algo.name},
+                            host=host)
 
 
 def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
@@ -719,8 +988,13 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         ctx.pad_batch = min(ctx.batch_size, n_max)
         ctx.pad_rows = n_max
     # pipelined mode: batched inners return on-device losses (forced only
-    # at aggregation, below) instead of syncing the host per wave
-    ctx.deferred = bool(exec_.pipelined and inner.name != "sequential")
+    # at aggregation, below) instead of syncing the host per wave.
+    # Multi-host forces the per-wave sync back on: the wave's uploads
+    # cross the filesystem exchange as host arrays immediately, so there
+    # is nothing left to defer
+    multihost = pop is not None and getattr(pop, "multihost", False)
+    ctx.deferred = bool(exec_.pipelined and inner.name != "sequential"
+                        and not multihost)
 
     # in-flight ids are the SMALL set (≤ n_sample); sampling excludes them
     # instead of enumerating the O(population) idle complement — for flat
@@ -734,6 +1008,16 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
     uploads: list[dict] = []
     ftel = ctx.telemetry.get("faults")
     fail_count: dict[int, int] = {}     # consecutive failures per client
+    dead_hosts: set = set()     # peers that missed an exchange deadline
+    wave_seq = 0    # per-wave exchange tag counter, in lockstep across
+    # hosts because every host replays the identical dispatch sequence
+    mh_stats: dict = {"hosts": None}    # latest per-host tier telemetry
+    ckpt_host = pop.placement.host_id if multihost else None
+
+    def owned_only(ids):
+        """Pin/unpin only this host's slice under placement (pure set ops
+        either way, but unowned ids must not clutter the pinned set)."""
+        return [k for k in ids if pop.owned(k)] if multihost else ids
 
     def launch(cids: "list[int]", krng, delay: float = 0.0) -> None:
         """Train ``cids`` against the current global and schedule their
@@ -747,8 +1031,31 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         In fixed-slot mode the wave trains in chunks of ``slots`` clients
         so every inner call runs the one compiled B-slot body; sampling
         (one ``sample_cohort`` per wave) and the sim dispatch sequence
-        are untouched — chunking is invisible to both."""
+        are untouched — chunking is invisible to both.
+
+        Under multi-host placement the wave detours through
+        ``_multihost_wave``: each host trains only its owned slice and the
+        full wave reassembles from the per-wave exchange, but the sim
+        dispatch sequence below is identical on every host — the heaps
+        (and so the clock, the pops and the aggregations) never diverge."""
+        nonlocal wave_seq
         payload = algo.round_payload(server, krng)
+        if multihost:
+            tag = f"wave{wave_seq:09d}"
+            wave_seq += 1
+            results, mh_stats["hosts"] = _multihost_wave(
+                ctx, inner, pop, server["global"], payload, client_states,
+                cids, rng, tag, slots, injector, dead_hosts, ftel)
+            for k, (up, w, lv, fault) in zip(cids, results):
+                slowdown = (injector.profile.timeout_factor
+                            if fault is not None and fault[0] == "timeout"
+                            else 1.0)
+                in_flight.add(k)
+                sim.dispatch(k, work_of(k), tag={
+                    "upload": up, "weight": w, "loss": lv,
+                    "version": version, "fault": fault},
+                    delay=delay, slowdown=slowdown)
+            return
         if pop is not None:
             # in-flight clients keep their warm shard / device slab /
             # state-tier entries until their completions aggregate
@@ -829,7 +1136,7 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
             # dead completion: free the slot, retry or drop the client
             in_flight.discard(c.client)
             if pop is not None:
-                pop.unpin([c.client])
+                pop.unpin(owned_only([c.client]))
             fails = fail_count.get(c.client, 0) + 1
             fail_count[c.client] = fails
             if fails <= policy.max_retries:
@@ -869,12 +1176,29 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
                    "version": version,
                    "stale_absorbed": stale_absorbed,
                    "max_stale": max_stale,
-                   "fail_count": sorted(fail_count.items())})
+                   "wave_seq": wave_seq,
+                   "fail_count": sorted(fail_count.items())},
+            host=ckpt_host)
 
     start_round = 0
     if resume:
         from repro.checkpoint import recovery
-        hit = recovery.load_latest_state(checkpoint_dir)
+        hit = recovery.load_latest_state(checkpoint_dir, host=ckpt_host)
+        if multihost:
+            # coordinated resume: agree on the newest aggregation EVERY
+            # host can load (min over hosts — a host that checkpointed
+            # further ahead still has the earlier file), restore it,
+            # retire this host's stale wave exchange files, then confirm
+            # all hosts restored the same {round, version} before the
+            # first wave runs
+            from repro.population import placement as placement_lib
+            common = placement_lib.resume_barrier(
+                pop.placement, hit[2] if hit is not None else None)
+            if common is None:
+                hit = None
+            elif hit is None or hit[2] != common:
+                hit = (*recovery.load_state_at(checkpoint_dir, common,
+                                               host=ckpt_host), common)
         if hit is not None:
             state, meta, start_round = hit
             if meta.get("algo") not in (None, algo.name):
@@ -900,10 +1224,17 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
             fail_count.clear()
             fail_count.update({int(k): int(v)
                                for k, v in state["fail_count"]})
+            wave_seq = int(state.get("wave_seq", 0))
             if pop is not None and in_flight:
                 # restored in-flight clients must hold their warm/slab
                 # pins exactly as they did when the checkpoint was cut
-                pop.pin(sorted(in_flight))
+                pop.pin(owned_only(sorted(in_flight)))
+        if multihost:
+            placement_lib.clear_host_payloads(pop.placement)
+            placement_lib.confirm_resume(
+                pop.placement, None if hit is None else start_round,
+                {"round": None if hit is None else start_round,
+                 "version": version, "algo": algo.name})
 
     # with checkpointing on, the FINAL round refills too: its checkpoint
     # then matches the one an uninterrupted longer run writes at the same
@@ -979,8 +1310,10 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
         for c in completions:
             in_flight.discard(c.client)
         if pop is not None:
-            pop.unpin([c.client for c in completions])
-            ctx.telemetry["population"] = pop.stats()
+            pop.unpin(owned_only([c.client for c in completions]))
+            ctx.telemetry["population"] = (
+                dict(pop.stats(), hosts=mh_stats["hosts"]) if multihost
+                else pop.stats())
 
         refilled = False
         if ctx.deferred and wants_refill(t):
@@ -1017,8 +1350,10 @@ def _run_async(task: PaperTask, algo: Algorithm, data: FederatedData,
     if pop is not None and in_flight:
         # clients still in flight when the run ends would stay pinned —
         # a reused Population would then exempt them from eviction forever
-        pop.unpin(in_flight)
-        ctx.telemetry["population"] = pop.stats()
+        pop.unpin(owned_only(in_flight))
+        ctx.telemetry["population"] = (
+            dict(pop.stats(), hosts=mh_stats["hosts"]) if multihost
+            else pop.stats())
     ctx.telemetry.update(
         route="async", inner_route=ctx.telemetry.get("route", inner.name),
         buffer_size=b, staleness_scheme=exec_.staleness,

@@ -135,6 +135,16 @@ class FaultProfile:
                         "nan" / "inf" poison one parameter element,
                         "huge" scales every parameter by ``huge_scale``
                         (finite, but a norm outlier)
+        host_crash_prob  correlated HOST fault (multi-host placement): per
+                        wave/attempt, each host process dies with this
+                        probability, which faults EVERY client of its
+                        owned shard subset in that wave at once — the
+                        quorum then counts only surviving hosts' validated
+                        uploads and retry re-dispatches the absent slice.
+                        Drawn one uniform per host in host order, and only
+                        when the probability is nonzero, so single-host
+                        runs and zero-probability profiles stay
+                        bit-identical.
 
     A profile with all probabilities zero is exactly equivalent to no
     profile: the fault stream is still drawn from, but from its OWN child
@@ -146,12 +156,16 @@ class FaultProfile:
     corrupt_modes: tuple = CORRUPT_MODES
     timeout_factor: float = 16.0
     huge_scale: float = 1e6
+    host_crash_prob: float = 0.0
 
     def __post_init__(self):
         total = self.crash_prob + self.timeout_prob + self.corrupt_prob
         if not (0.0 <= total <= 1.0):
             raise ValueError(
                 f"fault probabilities must sum into [0, 1], got {total}")
+        if not (0.0 <= self.host_crash_prob <= 1.0):
+            raise ValueError(f"host_crash_prob must be in [0, 1], got "
+                             f"{self.host_crash_prob}")
         for m in self.corrupt_modes:
             if m not in CORRUPT_MODES:
                 raise ValueError(f"unknown corrupt mode {m!r}; "
@@ -160,7 +174,7 @@ class FaultProfile:
     @property
     def any(self) -> bool:
         return (self.crash_prob + self.timeout_prob
-                + self.corrupt_prob) > 0.0
+                + self.corrupt_prob + self.host_crash_prob) > 0.0
 
 
 class FaultInjector:
@@ -177,7 +191,8 @@ class FaultInjector:
                  rng: Optional[np.random.Generator] = None):
         self.profile = profile
         self.rng = rng if rng is not None else derive_fault_rng(0)
-        self.counters = {"crashes": 0, "timeouts": 0, "corrupt_injected": 0}
+        self.counters = {"crashes": 0, "timeouts": 0, "corrupt_injected": 0,
+                         "host_crashes": 0}
 
     def draw(self) -> "tuple[str, str] | None":
         """``None`` (healthy) or ``(kind, mode)`` with kind in
@@ -197,6 +212,21 @@ class FaultInjector:
             self.counters["corrupt_injected"] += 1
             return ("corrupt", mode)
         return None
+
+    def draw_host_crashes(self, n_hosts: int) -> "tuple[int, ...]":
+        """The host ids that crash this wave/attempt: one uniform per host
+        in host order (deterministic across all hosts replaying the same
+        stream).  MUST only be called when ``profile.host_crash_prob > 0``
+        — a zero-probability profile consumes nothing extra here, so
+        pre-host-fault runs replay bit for bit."""
+        p = self.profile
+        assert p.host_crash_prob > 0.0, \
+            "draw_host_crashes with host_crash_prob == 0 would shift the " \
+            "fault stream of zero-probability runs"
+        crashed = tuple(h for h in range(n_hosts)
+                        if self.rng.random() < p.host_crash_prob)
+        self.counters["host_crashes"] += len(crashed)
+        return crashed
 
 
 def corrupt_params(params: Any, mode: str, huge_scale: float = 1e6) -> Any:

@@ -8,7 +8,9 @@ the FL loop consumes, ``sources.py`` for the cold tier, ``store.py`` for
 the warm/state tiers, and ``sampling.py`` for the two-stage cohort draw.
 """
 from repro.population.placement import (HostPlacement, allgather,
-                                        peak_rss_mb)
+                                        allgather_partial,
+                                        clear_host_payloads, confirm_resume,
+                                        peak_rss_mb, resume_barrier)
 from repro.population.population import Population
 from repro.population.sampling import HierarchicalSampler, shift_positions
 from repro.population.sources import (ClientSource, DiskShardSource,
@@ -21,5 +23,7 @@ __all__ = [
     "Population", "HierarchicalSampler", "shift_positions", "ClientSource",
     "DiskShardSource", "InMemorySource", "SyntheticClientSource",
     "even_shard_sizes", "write_population_shards", "ClientStateStore",
-    "PopulationStore", "HostPlacement", "allgather", "peak_rss_mb",
+    "PopulationStore", "HostPlacement", "allgather", "allgather_partial",
+    "resume_barrier", "confirm_resume", "clear_host_payloads",
+    "peak_rss_mb",
 ]

@@ -52,6 +52,13 @@ class HostPlacement:
         2-process topology, a tmpdir both workers see).
       timeout_s: how long to wait for a peer's round payload before
         declaring the topology dead.
+
+    ``stats`` accumulates exchange telemetry across the run (exchanges,
+    polled waits, seconds spent waiting, deadline misses and the last
+    missing host set) — it is excluded from equality/repr so placements
+    still compare by topology, and it surfaces on
+    ``History.telemetry["population"]["hosts"]`` so a slow NFS exchange
+    is diagnosable from the run record.
     """
 
     host_id: int
@@ -59,6 +66,8 @@ class HostPlacement:
     exchange_dir: Optional[str] = None
     timeout_s: float = 300.0
     poll_s: float = 0.02
+    stats: dict = dataclasses.field(default_factory=dict, compare=False,
+                                    repr=False)
 
     def __post_init__(self):
         if self.n_hosts < 1:
@@ -109,24 +118,169 @@ def _read_payload(path: str) -> Any:
     return _decode(spec, arrays)
 
 
+def _bump(placement: HostPlacement, key: str, by: float = 1) -> None:
+    placement.stats[key] = placement.stats.get(key, 0) + by
+
+
+def _gather(placement: HostPlacement, tag: str, obj: Any,
+            strict: bool, skip_wait=()) -> tuple[list, tuple[int, ...]]:
+    """Publish ``obj`` and poll every host's ``tag`` payload round-robin
+    until all land or the deadline passes.  Returns ``(payloads, missing)``
+    with ``payloads[h] is None`` for each host in ``missing``.  Hosts in
+    ``skip_wait`` (already declared crashed under the crash-stop
+    assumption) get exactly one existence check and no polling — a dead
+    peer must not cost a full timeout on every subsequent exchange."""
+    publish(placement, tag, obj)
+    _bump(placement, "exchanges")
+    pending = set(range(placement.n_hosts))
+    got: set = set()
+    out: list = [None] * placement.n_hosts
+    t0 = time.monotonic()
+    deadline = t0 + placement.timeout_s
+    polled = False
+    while pending:
+        for h in sorted(pending):
+            path = _payload_path(placement.exchange_dir, tag, h)
+            if os.path.exists(path):
+                out[h] = _read_payload(path)
+                got.add(h)
+                pending.discard(h)
+        pending.difference_update(skip_wait)
+        if not pending:
+            break
+        if time.monotonic() > deadline:
+            break
+        polled = True
+        time.sleep(placement.poll_s)
+    if polled:
+        _bump(placement, "waits")
+        _bump(placement, "wait_s", round(time.monotonic() - t0, 6))
+    missing = tuple(h for h in range(placement.n_hosts) if h not in got)
+    if missing:
+        _bump(placement, "timeouts")
+        placement.stats["last_missing"] = list(missing)
+        placement.stats["last_missing_tag"] = tag
+        if strict:
+            raise RuntimeError(
+                f"multi-host exchange {tag!r} timed out after "
+                f"{placement.timeout_s:.0f}s: missing host(s) "
+                f"{list(missing)} of {placement.n_hosts} "
+                f"(exchange_dir={placement.exchange_dir}) — are the "
+                f"workers alive?")
+    return out, missing
+
+
 def allgather(placement: HostPlacement, tag: str, obj: Any) -> list:
     """Publish ``obj`` and block until every host's ``tag`` payload lands;
     returns the payloads indexed by host id (this host's own round-trips
-    through its file too, so every host consumes byte-identical inputs)."""
-    publish(placement, tag, obj)
-    out = []
-    deadline = time.monotonic() + placement.timeout_s
-    for h in range(placement.n_hosts):
-        path = _payload_path(placement.exchange_dir, tag, h)
-        while not os.path.exists(path):
-            if time.monotonic() > deadline:
-                raise RuntimeError(
-                    f"multi-host exchange timed out after "
-                    f"{placement.timeout_s:.0f}s waiting for host {h} "
-                    f"({path}) — is the worker alive?")
-            time.sleep(placement.poll_s)
-        out.append(_read_payload(path))
+    through its file too, so every host consumes byte-identical inputs).
+    Raises naming ALL missing hosts and the exchange tag on timeout."""
+    out, _ = _gather(placement, tag, obj, strict=True)
     return out
+
+
+def allgather_partial(placement: HostPlacement, tag: str, obj: Any,
+                      skip_wait=()) -> tuple[list, tuple[int, ...]]:
+    """``allgather`` that degrades instead of raising: a host missing the
+    deadline is reported in ``missing`` (its payload slot is ``None``) so
+    the fault-tolerant round can treat it as crashed rather than hanging.
+    Deterministic across survivors under the crash-stop assumption: a dead
+    host never publishes, so every survivor resolves the same missing set
+    (given a timeout comfortably above the live hosts' skew).  Hosts in
+    ``skip_wait`` are checked once but never polled for."""
+    return _gather(placement, tag, obj, strict=False, skip_wait=skip_wait)
+
+
+# ---------------------------------------------------------------------------
+# coordinated resume
+# ---------------------------------------------------------------------------
+
+def _avail_tag() -> str:
+    return "resume-avail"
+
+
+def resume_barrier(placement: HostPlacement,
+                   avail: Optional[int]) -> Optional[int]:
+    """Phase 1 of the coordinated resume: exchange each host's newest
+    loadable checkpoint round and agree on the common restore point.
+
+    Returns ``min`` over the hosts' rounds — the latest round EVERY host
+    can load (a host that checkpointed further ahead still has the earlier
+    file; checkpoints are never deleted) — or ``None`` when every host is
+    fresh.  A mix of fresh and resumable hosts raises: restoring some
+    hosts mid-run while others start from round 0 can never reconverge.
+    """
+    got = allgather(placement, _avail_tag(), {"avail": avail})
+    vals = [g["avail"] for g in got]
+    if all(v is None for v in vals):
+        return None
+    if any(v is None for v in vals):
+        fresh = [h for h, v in enumerate(vals) if v is None]
+        raise RuntimeError(
+            f"coordinated resume: host(s) {fresh} have no loadable "
+            f"checkpoint but peers report rounds "
+            f"{[v for v in vals if v is not None]} — mixed fresh/resume "
+            f"states cannot reconverge; clear or repair the checkpoint "
+            f"dirs")
+    return min(int(v) for v in vals)
+
+
+def confirm_resume(placement: HostPlacement, common: Optional[int],
+                   meta: dict) -> None:
+    """Phase 2: every host publishes what it actually restored (round,
+    version, algo, ...) under a restore-point-tagged barrier and validates
+    the peers restored the very same state before the first wave runs.
+
+    The tag embeds the common round, so a host that computed a DIFFERENT
+    restore point (e.g. from a stale phase-1 file of an interrupted
+    earlier resume) waits on a tag nobody publishes and fails loudly at
+    the timeout instead of silently diverging.  Completing this barrier
+    also proves every peer consumed this host's phase-1 payload, so the
+    phase-1 file is retired here — the next resume starts clean.
+    """
+    tag = ("resume-ok-fresh" if common is None
+           else f"resume-ok-r{common:06d}")
+    got = allgather(placement, tag, dict(meta))
+    mine = got[placement.host_id]
+    for h, g in enumerate(got):
+        if g != mine:
+            raise RuntimeError(
+                f"coordinated resume diverged: host {placement.host_id} "
+                f"restored {mine} but host {h} restored {g} — refusing "
+                f"to run the first wave from inconsistent state")
+    try:
+        os.remove(_payload_path(placement.exchange_dir, _avail_tag(),
+                                placement.host_id))
+    except OSError:
+        pass
+
+
+def clear_host_payloads(placement: HostPlacement,
+                        keep_prefixes: tuple = ("resume-",)) -> int:
+    """Delete every exchange payload THIS host has published (wave/round
+    files; resume-barrier files are kept).  Called on resume before the
+    confirm barrier: a surviving host may have published waves past the
+    restore point whose content assumed the dead peer stayed dead, and a
+    stale file must never satisfy a peer's existence poll once the replay
+    diverges from that history.  Own files only — each host retires its
+    own stale state, and the confirm barrier orders every deletion before
+    any post-resume read."""
+    d = placement.exchange_dir
+    if not d or not os.path.isdir(d):
+        return 0
+    suffix = f"_host{placement.host_id:03d}.npz"
+    removed = 0
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(suffix):
+            continue
+        if any(name.startswith(p) for p in keep_prefixes):
+            continue
+        try:
+            os.remove(os.path.join(d, name))
+            removed += 1
+        except OSError:
+            pass
+    return removed
 
 
 def peak_rss_mb() -> float:

@@ -1,0 +1,181 @@
+"""The bench regression gate itself (benchmarks/compare_bench.py).
+
+Every nightly bench job funnels through this one comparator, so a bug
+here — an inverted direction, a silently-empty case overlap, a case key
+that collapses distinct rows — would turn every nightly gate green while
+the tree regresses.  Covered: higher- and lower-is-better directions on
+both sides of the tolerance edge, the per-host ``host`` key field, the
+missing-case / no-overlap paths, and the top-level environment refusal.
+"""
+
+import copy
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "benchmarks"))
+
+import compare_bench  # noqa: E402  (path insert above)
+
+
+def _payload(cases, **top):
+    base = {"task": "toy", "devices": 8, "backend": "cpu", "clients": 64,
+            "width": 8}
+    base.update(top)
+    base["cases"] = cases
+    return base
+
+
+def _case(**kw):
+    row = {"algo": "fedavg", "executor": "vmap", "epochs": 1,
+           "precompute": False}
+    row.update(kw)
+    return row
+
+
+def _run(tmp_path, baseline, fresh, tolerance=0.20):
+    b = tmp_path / "base.json"
+    n = tmp_path / "new.json"
+    b.write_text(json.dumps(baseline))
+    n.write_text(json.dumps(fresh))
+    return compare_bench.main([str(b), str(n), "--tolerance",
+                               str(tolerance)])
+
+
+# ---------------------------------------------------------------------------
+# directions and tolerance edges
+# ---------------------------------------------------------------------------
+
+def test_higher_better_pass_and_regression(tmp_path):
+    base = _payload([_case(speedup_vs_sequential=10.0)])
+    ok = _payload([_case(speedup_vs_sequential=8.5)])     # -15% < 20% tol
+    (tmp_path / "a").mkdir()
+    assert _run(tmp_path / "a", base, ok) == 0
+    bad = _payload([_case(speedup_vs_sequential=7.9)])    # -21% > 20% tol
+    (tmp_path / "b").mkdir()
+    assert _run(tmp_path / "b", base, bad) == 1
+
+
+def test_lower_better_pass_and_regression(tmp_path):
+    base = _payload([_case(peak_host_rss_mb=500.0)])
+    ok = _payload([_case(peak_host_rss_mb=590.0)])        # +18% < 20% tol
+    (tmp_path / "a").mkdir()
+    assert _run(tmp_path / "a", base, ok) == 0
+    bad = _payload([_case(peak_host_rss_mb=610.0)])       # +22% > 20% tol
+    (tmp_path / "b").mkdir()
+    assert _run(tmp_path / "b", base, bad) == 1
+
+
+def test_lower_better_improvement_never_fails(tmp_path):
+    base = _payload([_case(host_crash_recovery_rounds=4)])
+    better = _payload([_case(host_crash_recovery_rounds=1)])
+    assert _run(tmp_path, base, better) == 0
+
+
+def test_exact_tolerance_boundary_is_ok(tmp_path):
+    # new == base * (1 - tol) passes for higher-better (>=, not >), and
+    # new == base * (1 + tol) passes for lower-better (<=)
+    base = _payload([_case(async_client_updates_per_sec=10.0,
+                           peak_warm=100)])
+    edge = _payload([_case(async_client_updates_per_sec=8.0,
+                           peak_warm=120)])
+    assert _run(tmp_path, base, edge, tolerance=0.20) == 0
+
+
+def test_new_chaos_metrics_are_gated():
+    # the nightly multihost-chaos job depends on these exact names and
+    # directions — losing either silently un-gates the chaos bench
+    assert "async_client_updates_per_sec" in compare_bench.METRICS
+    assert "host_crash_recovery_rounds" in compare_bench.METRICS_LOWER
+
+
+# ---------------------------------------------------------------------------
+# case keying
+# ---------------------------------------------------------------------------
+
+def test_host_field_distinguishes_per_host_cases(tmp_path):
+    # one regressed host must fail even when its peer improved
+    base = _payload([_case(host="host0", peak_warm=100),
+                     _case(host="host1", peak_warm=100)])
+    fresh = _payload([_case(host="host0", peak_warm=50),
+                      _case(host="host1", peak_warm=150)])
+    assert _run(tmp_path, base, fresh) == 1
+    rows = compare_bench.compare(base, fresh, 0.20)
+    verdicts = {r["key"][-1]: r["ok"] for r in rows}
+    assert verdicts == {"host0": True, "host1": False}
+
+
+def test_case_key_tolerates_artifacts_predating_new_fields():
+    old = _case(speedup_vs_sequential=2.0)          # no faults/host fields
+    new = _case(speedup_vs_sequential=2.0, faults=None, host=None)
+    assert compare_bench.case_key(old) == compare_bench.case_key(new)
+
+
+def test_faults_field_distinguishes_chaos_cases():
+    clean = _case(executor="async", peak_host_rss_mb=300.0)
+    chaotic = _case(executor="async", peak_host_rss_mb=300.0,
+                    faults="crash0.05+corrupt0.05+host0.2")
+    assert compare_bench.case_key(clean) != compare_bench.case_key(chaotic)
+
+
+# ---------------------------------------------------------------------------
+# overlap and environment handling
+# ---------------------------------------------------------------------------
+
+def test_disjoint_cases_is_not_a_failure(tmp_path, capsys):
+    # baseline may predate new cases (and a chaos-only fresh payload may
+    # overlap none of the memory cases): exit 0, but say so
+    base = _payload([_case(executor="shard_map", peak_warm=100)])
+    fresh = _payload([_case(executor="async", peak_warm=999)])
+    assert _run(tmp_path, base, fresh) == 0
+    assert "no overlapping cases" in capsys.readouterr().out
+
+
+def test_shared_key_missing_metric_is_skipped(tmp_path):
+    # same case key, disjoint metric sets: nothing comparable -> exit 0
+    base = _payload([_case(speedup_vs_sequential=2.0)])
+    fresh = _payload([_case(peak_warm=10)])
+    assert _run(tmp_path, base, fresh) == 0
+
+
+def test_mismatched_environment_refuses_with_exit_2(tmp_path):
+    base = _payload([_case(peak_warm=100)])
+    for field, val in (("devices", 1), ("backend", "gpu"),
+                       ("clients", 32), ("width", 4)):
+        fresh = copy.deepcopy(_payload([_case(peak_warm=100)]))
+        fresh[field] = val
+        d = tmp_path / field
+        d.mkdir()
+        assert _run(d, base, fresh) == 2
+
+
+def test_missing_environment_field_in_baseline_is_tolerated(tmp_path):
+    # artifacts predating a top-level field must not start refusing
+    base = _payload([_case(peak_warm=100)])
+    del base["width"]
+    fresh = _payload([_case(peak_warm=100)])
+    assert _run(tmp_path, base, fresh) == 0
+
+
+def test_regression_report_names_metric(tmp_path, capsys):
+    base = _payload([_case(async_client_updates_per_sec=10.0)])
+    bad = _payload([_case(async_client_updates_per_sec=1.0)])
+    assert _run(tmp_path, base, bad) == 1
+    out = capsys.readouterr().out
+    assert "async_client_updates_per_sec" in out
+    assert "REGRESSED" in out
+
+
+def test_committed_multihost_baseline_parses():
+    # the committed artifact the nightly jobs gate against must keep
+    # indexing cleanly (unique case keys, required key fields present)
+    path = pathlib.Path(__file__).resolve().parent.parent
+    with open(path / "BENCH_multihost.json") as f:
+        payload = json.load(f)
+    idx = compare_bench.index_cases(payload)
+    assert len(idx) == len(payload["cases"])
+    with pytest.raises(KeyError):
+        compare_bench.case_key({})

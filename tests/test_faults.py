@@ -109,7 +109,7 @@ def test_injector_zero_profile_never_fires_but_advances_stream():
     inj = FaultInjector(FaultProfile(), derive_fault_rng(0))
     assert all(inj.draw() is None for _ in range(50))
     assert inj.counters == {"crashes": 0, "timeouts": 0,
-                            "corrupt_injected": 0}
+                            "corrupt_injected": 0, "host_crashes": 0}
 
 
 def test_fault_stream_is_independent_of_sim_stream():
